@@ -1,0 +1,40 @@
+"""Fig 5: error-cost tradeoff curves for r_det / r_prob / r_trans vs the
+random baseline, per performance-gap regime."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import error_cost_curve, random_routing_curve
+from repro.core.experiment import PAIRS, ROUTER_KINDS
+from .common import get_experiment, get_routers, timed
+
+
+def run(n_points=21):
+    exp = get_experiment()
+    out = {}
+    for gap_name, (s, l) in PAIRS.items():
+        routers = get_routers(s, l)
+        qs, ql = exp.qualities[s]["test"], exp.qualities[l]["test"]
+        curves = {}
+        for kind in ROUTER_KINDS:
+            pts, us = timed(error_cost_curve, routers[kind]["scores"]["test"],
+                            qs, ql, n_points)
+            curves[kind] = (pts, us)
+        rng = np.random.default_rng(0)
+        curves["random"] = (random_routing_curve(rng, len(qs), qs, ql,
+                                                 n_points), 0.0)
+        out[gap_name] = curves
+    return out
+
+
+def main():
+    for gap_name, curves in run().items():
+        for kind, (pts, us) in curves.items():
+            # area under drop-vs-cost curve: lower is better
+            area = float(np.trapezoid([p.drop_pct for p in pts],
+                                      [p.cost_advantage for p in pts]))
+            print(f"fig5/{gap_name}/{kind},{us:.0f},auc_drop={area:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig 6: router validation — difference between the average quality gap of
+queries routed to the small vs large model (positive = routing easy queries
+small), compared with the random baseline (≈0)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import quality_gap_difference
+from repro.core.experiment import PAIRS
+from .common import get_experiment, get_routers, timed
+
+
+def run():
+    exp = get_experiment()
+    rows = []
+    for gap_name, (s, l) in PAIRS.items():
+        routers = get_routers(s, l)
+        qs, ql = exp.qualities[s]["test"], exp.qualities[l]["test"]
+        rng = np.random.default_rng(0)
+        rand_scores = rng.uniform(size=len(qs))
+        for ca in (0.2, 0.4, 0.6, 0.8):
+            d, us = timed(quality_gap_difference,
+                          routers["trans"]["scores"]["test"], qs, ql, ca)
+            d_rand = quality_gap_difference(rand_scores, qs, ql, ca)
+            rows.append(dict(gap=gap_name, cost_advantage=ca,
+                             router_diff=round(float(d), 4),
+                             random_diff=round(float(d_rand), 4),
+                             us_per_call=us))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"fig6/{r['gap']}@{r['cost_advantage']},{r['us_per_call']:.0f},"
+              f"router={r['router_diff']};random={r['random_diff']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Fig 7: routing performance under an ALTERNATE quality metric.
+
+The routers are trained on the primary metric (edit-similarity, playing
+BART score's role); here we evaluate them against a scorer-LM log-likelihood
+metric (BARTScore's functional form) and report the metric-gap correlation —
+reproducing the paper's finding that routing quality transfers when the two
+metrics' quality gaps correlate."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import drop_at_cost_advantages, pearson, spearman
+from repro.core.experiment import PAIRS
+from repro.core.quality import scorer_loglik
+from .common import get_experiment, get_routers, timed
+
+
+def _scorer_quality(exp, tier, split):
+    """Mean token log-lik of each sampled response under the LARGE model
+    (the scorer LM), conditioned on the query."""
+    import jax.numpy as jnp
+    lm = exp.lms["large"]
+    ds = exp.datasets[split]
+    resp = exp.responses[tier][split]           # (N, S, T)
+    lens = exp.resp_lengths[tier][split]
+    N, S, T = resp.shape
+    q = np.zeros((N, S), np.float32)
+    for s in range(S):
+        mask = (np.arange(T)[None, :] < lens[:, s][:, None]).astype(np.float32)
+        q[:, s] = scorer_loglik(lm.bundle, lm.params,
+                                jnp.asarray(ds.query),
+                                jnp.asarray(resp[:, s]), jnp.asarray(mask))
+    return q
+
+
+def run(cost_advs=(0.2, 0.4)):
+    exp = get_experiment()
+    rows = []
+    for gap_name, (s, l) in PAIRS.items():
+        routers = get_routers(s, l)
+        # primary-metric gaps vs alternate-metric gaps
+        qs_e, ql_e = exp.qualities[s]["test"], exp.qualities[l]["test"]
+        qs_a, _ = timed(_scorer_quality, exp, s, "test", repeats=1)
+        ql_a, _ = timed(_scorer_quality, exp, l, "test", repeats=1)
+        gap_e = qs_e.mean(1) - ql_e.mean(1)
+        gap_a = qs_a.mean(1) - ql_a.mean(1)
+        r_p, r_s = pearson(gap_e, gap_a), spearman(gap_e, gap_a)
+        d = drop_at_cost_advantages(routers["trans"]["scores"]["test"],
+                                    qs_a, ql_a, cost_advs)
+        rows.append(dict(gap=gap_name, pearson=round(r_p, 3),
+                         spearman=round(r_s, 3),
+                         drops={ca: round(d[ca]["drop_pct"], 2)
+                                for ca in cost_advs}))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"fig7/{r['gap']},0,r={r['pearson']};rho={r['spearman']};"
+              f"alt_drops={r['drops']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fig 8: cross-pair generalization — a router trained on one (S, L) pair is
+evaluated on a different pair; routing quality should track the correlation
+between the two pairs' quality gaps."""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core import drop_at_cost_advantages, pearson, spearman
+from repro.core.experiment import PAIRS
+from .common import get_experiment, get_routers, timed
+
+
+def run(cost_advs=(0.2, 0.4)):
+    exp = get_experiment()
+    rows = []
+    for train_gap, eval_gap in itertools.permutations(PAIRS, 2):
+        ts, tl = PAIRS[train_gap]
+        es, el = PAIRS[eval_gap]
+        routers = get_routers(ts, tl)
+        scores = routers["trans"]["scores"]["test"]
+        gap_train = (exp.qualities[ts]["test"].mean(1)
+                     - exp.qualities[tl]["test"].mean(1))
+        gap_eval = (exp.qualities[es]["test"].mean(1)
+                    - exp.qualities[el]["test"].mean(1))
+        r_p, r_s = pearson(gap_train, gap_eval), spearman(gap_train, gap_eval)
+        d, us = timed(drop_at_cost_advantages, scores,
+                      exp.qualities[es]["test"], exp.qualities[el]["test"],
+                      cost_advs)
+        rows.append(dict(trained_on=train_gap, evaluated_on=eval_gap,
+                         pearson=round(r_p, 3), spearman=round(r_s, 3),
+                         drops={ca: round(d[ca]["drop_pct"], 2)
+                                for ca in cost_advs}, us_per_call=us))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"fig8/{r['trained_on']}->{r['evaluated_on']},"
+              f"{r['us_per_call']:.0f},r={r['pearson']};"
+              f"drops={r['drops']}")
+
+
+if __name__ == "__main__":
+    main()

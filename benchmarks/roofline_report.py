@@ -1,0 +1,62 @@
+"""Roofline report: reads the dry-run JSON records (results/dryrun) and
+prints the per-(arch × shape × mesh) roofline table — deliverable (g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load_records():
+        if not r.get("ok"):
+            rows.append(dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                             ok=False, error=r.get("error", "?")))
+            continue
+        rl = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], ok=True,
+            compute_s=rl["compute_s"], memory_s=rl["memory_s"],
+            collective_s=rl["collective_s"], dominant=rl["dominant"],
+            useful_ratio=rl["useful_ratio"],
+            peak_gb=r["memory"]["peak_gb"], compile_s=r["compile_s"]))
+    return rows
+
+
+def main():
+    rows = run()
+    ok = [r for r in rows if r["ok"]]
+    fail = [r for r in rows if not r["ok"]]
+    for r in ok:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{r['compile_s'] * 1e6:.0f},"
+              f"c={r['compute_s']:.3f};m={r['memory_s']:.3f};"
+              f"coll={r['collective_s']:.3f};dom={r['dominant']};"
+              f"useful={r['useful_ratio']:.2f};peak_gb={r['peak_gb']:.1f}")
+    for r in fail:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,"
+              f"FAILED={r['error'][:80]}")
+    if ok:
+        n_dom = {}
+        for r in ok:
+            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+        print(f"roofline/summary,0,records={len(ok)};failed={len(fail)};"
+              f"dominant={n_dom}")
+
+
+if __name__ == "__main__":
+    main()

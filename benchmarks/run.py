@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure + the roofline report.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table1 fig5 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fig5_curves, fig6_gap_validation, fig7_alt_metric,
+               fig8_generalization, roofline_report, table1_cost_quality,
+               table2_latency, table3_calibration, table4_appendix_pairs)
+
+MODULES = {
+    "table1": table1_cost_quality,
+    "fig5": fig5_curves,
+    "fig6": fig6_gap_validation,
+    "table2": table2_latency,
+    "table3": table3_calibration,
+    "fig7": fig7_alt_metric,
+    "fig8": fig8_generalization,
+    "table4": table4_appendix_pairs,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=tuple(MODULES))
+    args = ap.parse_args()
+    names = args.only or list(MODULES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            MODULES[name].main()
+            print(f"{name}/__wall__,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/__wall__,{(time.time() - t0) * 1e6:.0f},"
+                  f"FAILED={type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

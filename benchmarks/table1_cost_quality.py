@@ -1,0 +1,37 @@
+"""Table 1: cost advantage vs performance drop for the three performance-gap
+regimes (small/medium/large), all three routers."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import drop_at_cost_advantages
+from repro.core.experiment import PAIRS, ROUTER_KINDS
+from .common import get_experiment, get_routers, timed
+
+
+def run():
+    exp = get_experiment()
+    rows = []
+    for gap_name, (s, l) in PAIRS.items():
+        routers = get_routers(s, l)
+        qs = exp.qualities[s]["test"]
+        ql = exp.qualities[l]["test"]
+        for kind in ROUTER_KINDS:
+            (d, us) = timed(drop_at_cost_advantages,
+                            routers[kind]["scores"]["test"], qs, ql)
+            for ca in (0.1, 0.2, 0.4):
+                rows.append(dict(gap=gap_name, pair=f"{s}->{l}", router=kind,
+                                 cost_advantage=ca,
+                                 drop_pct=round(d[ca]["drop_pct"], 2),
+                                 us_per_call=us))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"table1/{r['gap']}/{r['router']}@{r['cost_advantage']},"
+              f"{r['us_per_call']:.0f},drop_pct={r['drop_pct']}")
+
+
+if __name__ == "__main__":
+    main()

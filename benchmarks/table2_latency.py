@@ -1,0 +1,48 @@
+"""Table 2: router latency vs LLM generation latency (the router must add
+negligible overhead — paper reports ~10x faster than the fastest LLM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.router import score_dataset
+from repro.data import tokenizer as tok
+from repro.models import RouterConfig, init_router_encoder, router_score
+from repro.serving.generate import build_generate_fn
+from .common import get_experiment, timed
+
+
+def run():
+    exp = get_experiment()
+    ds = exp.datasets["test"]
+    q = jnp.asarray(ds.query[:32])
+    m = jnp.asarray(ds.query_mask[:32])
+    rcfg = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=2, d_model=64,
+                        n_heads=4, d_ff=256)
+    rparams = init_router_encoder(jax.random.PRNGKey(0), rcfg)
+    score_fn = jax.jit(lambda p, t, mk: router_score(p, t, mk, rcfg))
+    _, router_us = timed(lambda: jax.block_until_ready(
+        score_fn(rparams, q, m)), repeats=5)
+
+    rows = [dict(model="router", us_per_query=router_us / 32)]
+    for tier, lm in exp.lms.items():
+        gen = build_generate_fn(lm.bundle, 16, 0.0)
+        _, us = timed(lambda: jax.block_until_ready(
+            gen(lm.params, {"tokens": q}, jax.random.PRNGKey(0))[0]),
+            repeats=3)
+        rows.append(dict(model=f"lm_{tier}", us_per_query=us / 32))
+    base = rows[0]["us_per_query"]
+    for r in rows:
+        r["vs_router"] = round(r["us_per_query"] / base, 1)
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"table2/{r['model']},{r['us_per_query']:.0f},"
+              f"x_router={r['vs_router']}")
+
+
+if __name__ == "__main__":
+    main()

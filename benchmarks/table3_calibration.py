@@ -1,0 +1,45 @@
+"""Table 3: empirical threshold calibration — choose the threshold on 500
+validation samples under a <=1% drop budget, report val vs test transfer."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import calibrate_threshold, evaluate_threshold
+from repro.core.experiment import PAIRS, ROUTER_KINDS
+from .common import get_experiment, get_routers, timed
+
+
+def run(budget_pct=1.0, n_cal=500):
+    exp = get_experiment()
+    rows = []
+    for gap_name, (s, l) in PAIRS.items():
+        routers = get_routers(s, l)
+        qs_v = exp.qualities[s]["val"][:n_cal]
+        ql_v = exp.qualities[l]["val"][:n_cal]
+        qs_t = exp.qualities[s]["test"]
+        ql_t = exp.qualities[l]["test"]
+        for kind in ROUTER_KINDS:
+            sv = routers[kind]["scores"]["val"][:n_cal]
+            st = routers[kind]["scores"]["test"]
+            res, us = timed(calibrate_threshold, sv, qs_v, ql_v,
+                            budget_pct)
+            ev = evaluate_threshold(res.threshold, st, qs_t, ql_t)
+            rows.append(dict(
+                gap=gap_name, router=kind,
+                val_drop=round(res.expected_drop_pct, 2),
+                val_cost_adv=round(res.expected_cost_advantage * 100, 2),
+                test_drop=round(ev["drop_pct"], 2),
+                test_cost_adv=round(ev["cost_advantage"] * 100, 2),
+                us_per_call=us))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"table3/{r['gap']}/{r['router']},{r['us_per_call']:.0f},"
+              f"val={r['val_drop']}%@{r['val_cost_adv']}%;"
+              f"test={r['test_drop']}%@{r['test_cost_adv']}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Appendix Table 4: additional model pairs (all tier combinations) —
+cost advantage vs drop across every (S, L) capacity pair."""
+from __future__ import annotations
+
+import itertools
+
+from repro.core import drop_at_cost_advantages
+from repro.core.experiment import ROUTER_KINDS
+from .common import get_experiment, get_routers, timed
+
+TIER_ORDER = ("tiny", "small", "medium", "large")
+
+
+def run():
+    exp = get_experiment()
+    rows = []
+    for i, s in enumerate(TIER_ORDER):
+        for l in TIER_ORDER[i + 1:]:
+            routers = get_routers(s, l)
+            qs, ql = exp.qualities[s]["test"], exp.qualities[l]["test"]
+            for kind in ROUTER_KINDS:
+                d, us = timed(drop_at_cost_advantages,
+                              routers[kind]["scores"]["test"], qs, ql)
+                rows.append(dict(pair=f"{s}->{l}", router=kind,
+                                 us_per_call=us,
+                                 drops={ca: round(d[ca]["drop_pct"], 2)
+                                        for ca in (0.1, 0.2, 0.4)}))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"table4/{r['pair']}/{r['router']},{r['us_per_call']:.0f},"
+              f"drops={r['drops']}")
+
+
+if __name__ == "__main__":
+    main()

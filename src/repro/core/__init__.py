@@ -1,0 +1,12 @@
+"""The paper's contribution: quality-aware query routing between a small and
+a large model (Hybrid LLM, ICLR 2024)."""
+from .labels import (det_labels, prob_labels, trans_labels, optimal_transform,
+                     transform_objective, mean_abs_pairwise_diff,
+                     quality_gap_samples, default_t_grid)
+from .metrics import (error_cost_curve, drop_at_cost_advantages,
+                      threshold_for_cost_advantage, mixture_quality,
+                      perf_drop_pct, quality_gap_difference, pearson, spearman,
+                      random_routing_curve, CurvePoint)
+from .router import RouterTrainConfig, train_router, score_dataset, bce_loss
+from .thresholds import calibrate_threshold, evaluate_threshold, CalibrationResult
+from .routing import HybridRouter, CostMeter, route_scores_jit

@@ -1,0 +1,182 @@
+"""End-to-end experiment pipeline: the reproduction's workhorse.
+
+Builds everything the paper's evaluation needs from scratch, in-framework:
+  1. synthetic instruction dataset (train/val/test),
+  2. a small and a large LM trained to different competence,
+  3. sampled responses (n per query, temperature) from both models,
+  4. quality scores q(z) (edit-similarity primary; scorer-LM alternate),
+  5. labels y_det / y_prob / y_trans(t*),
+  6. routers r_det / r_prob / r_trans trained per §3,
+  7. router scores on the test split, ready for §4 metrics.
+
+Model capacity pairs mirror the paper's three performance-gap regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.data.tasks import QueryDataset, generate_dataset, lm_training_arrays
+from repro.models.config import ArchConfig
+from repro.models.encoder import RouterConfig
+from repro.models.model import ModelBundle, build_model
+from repro.serving.generate import sample_responses
+from repro.training.trainer import TrainConfig, train_lm
+from . import labels as labels_lib
+from .quality import edit_similarity, scorer_loglik
+from .router import RouterTrainConfig, score_dataset, train_router
+
+
+def lm_config(name: str, n_layers: int, d_model: int, n_heads: int) -> ArchConfig:
+    return ArchConfig(name=name, family="dense", n_layers=n_layers,
+                      d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads,
+                      d_ff=d_model * 4, vocab_size=tok.VOCAB_SIZE,
+                      head_dim=max(8, d_model // n_heads),
+                      vocab_pad_multiple=16, attn_chunk=64,
+                      tie_embeddings=True, rope_theta=1e4)
+
+
+# Capacity tiers. Training steps differ too — capacity AND compute gaps, like
+# the paper's FLAN-t5(800m) vs Llama-2(13b) etc.
+TIERS = {
+    "tiny": (lm_config("tiny", 1, 32, 2), 150),
+    "small": (lm_config("small", 2, 64, 4), 400),
+    "medium": (lm_config("medium", 3, 128, 4), 800),
+    "large": (lm_config("large", 4, 192, 8), 1500),
+}
+
+# paper's three performance-gap regimes
+PAIRS = {
+    "small_gap": ("medium", "large"),     # Llama-2 7b vs 13b
+    "medium_gap": ("small", "large"),     # Llama-2 13b vs GPT-3.5
+    "large_gap": ("tiny", "large"),       # FLAN-t5 800m vs Llama-2 13b
+}
+
+
+@dataclasses.dataclass
+class TrainedLM:
+    tier: str
+    cfg: ArchConfig
+    bundle: ModelBundle
+    params: dict
+
+
+@dataclasses.dataclass
+class PairData:
+    """Responses + qualities for one (S, L) pair over one split."""
+    q_small: np.ndarray   # (N, n_samples)
+    q_large: np.ndarray
+
+
+@dataclasses.dataclass
+class ExperimentData:
+    datasets: Dict[str, QueryDataset]          # train/val/test
+    lms: Dict[str, TrainedLM]
+    qualities: Dict[str, Dict[str, np.ndarray]]  # tier -> split -> (N, S)
+    responses: Dict[str, Dict[str, np.ndarray]]
+    resp_lengths: Dict[str, Dict[str, np.ndarray]]
+
+
+def train_tier_lms(tiers=("tiny", "small", "medium", "large"), seed: int = 0,
+                   n_train: int = 4000, steps_scale: float = 1.0,
+                   batch_size: int = 64) -> tuple[Dict[str, TrainedLM], dict]:
+    """Train the LM zoo on the synthetic task suite."""
+    rng = np.random.default_rng(seed)
+    train_ds = generate_dataset(rng, n_train)
+    arrays = lm_training_arrays(train_ds)
+    lms = {}
+    for tier in tiers:
+        cfg, steps = TIERS[tier]
+        bundle = build_model(cfg)
+        params, hist = train_lm(bundle, arrays,
+                                TrainConfig(steps=max(20, int(steps * steps_scale)),
+                                            batch_size=batch_size,
+                                            lr=2e-3, seed=seed))
+        lms[tier] = TrainedLM(tier, cfg, bundle, params)
+    return lms, {"train_ds": train_ds}
+
+
+def response_qualities(lm: TrainedLM, ds: QueryDataset, n_samples: int,
+                       max_new_tokens: int = 16, temperature: float = 0.8,
+                       seed: int = 0):
+    """Sample responses and score them with edit-similarity vs reference."""
+    resp, lens = sample_responses(lm.bundle, lm.params, ds.query, n_samples,
+                                  max_new_tokens, temperature, seed)
+    N, S, T = resp.shape
+    q = np.zeros((N, S), np.float32)
+    for s in range(S):
+        q[:, s] = edit_similarity(resp[:, s], lens[:, s], ds.ref, ds.ref_len)
+    return q, resp, lens
+
+
+def build_experiment(seed: int = 0, n_train_queries: int = 1200,
+                     n_test_queries: int = 600, n_samples: int = 10,
+                     steps_scale: float = 1.0,
+                     tiers=("tiny", "small", "medium", "large"),
+                     temperature: float = 0.8) -> ExperimentData:
+    lms, _ = train_tier_lms(tiers, seed, steps_scale=steps_scale)
+    rng = np.random.default_rng(seed + 1)
+    datasets = {
+        "train": generate_dataset(rng, n_train_queries),
+        "val": generate_dataset(rng, max(200, n_test_queries // 2)),
+        "test": generate_dataset(rng, n_test_queries),
+    }
+    qualities = {t: {} for t in tiers}
+    responses = {t: {} for t in tiers}
+    resp_lengths = {t: {} for t in tiers}
+    for t in tiers:
+        for split, ds in datasets.items():
+            q, r, l = response_qualities(lms[t], ds, n_samples,
+                                         temperature=temperature,
+                                         seed=seed + hash((t, split)) % 1000)
+            qualities[t][split] = q
+            responses[t][split] = r
+            resp_lengths[t][split] = l
+    return ExperimentData(datasets, lms, qualities, responses, resp_lengths)
+
+
+ROUTER_KINDS = ("det", "prob", "trans")
+
+
+def make_labels(kind: str, q_small: np.ndarray, q_large: np.ndarray):
+    """Labels per router kind. Returns (labels, t_star_or_0)."""
+    if kind == "det":
+        return labels_lib.det_labels(q_small, q_large), 0.0
+    if kind == "prob":
+        return labels_lib.prob_labels(q_small, q_large), 0.0
+    if kind == "trans":
+        y, t = labels_lib.trans_labels(q_small, q_large)
+        return y, t
+    raise ValueError(kind)
+
+
+def train_pair_routers(exp: ExperimentData, small_tier: str, large_tier: str,
+                       kinds=ROUTER_KINDS, epochs: int = 5, seed: int = 0,
+                       rcfg: RouterConfig | None = None):
+    """Train r_det / r_prob / r_trans for one model pair.
+
+    Returns dict kind -> {params, rcfg, scores: split->np.ndarray, t_star}."""
+    rcfg = rcfg or RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=2,
+                                d_model=64, n_heads=4, d_ff=256)
+    tr = exp.datasets["train"]
+    va = exp.datasets["val"]
+    out = {}
+    for kind in kinds:
+        y, t_star = make_labels(kind, exp.qualities[small_tier]["train"],
+                                exp.qualities[large_tier]["train"])
+        yv, _ = make_labels(kind, exp.qualities[small_tier]["val"],
+                            exp.qualities[large_tier]["val"])
+        params, hist = train_router(
+            rcfg, tr.query, tr.query_mask, y,
+            RouterTrainConfig(epochs=epochs, seed=seed),
+            val=(va.query, va.query_mask, yv))
+        scores = {split: score_dataset(params, rcfg, ds.query, ds.query_mask)
+                  for split, ds in exp.datasets.items()}
+        out[kind] = {"params": params, "rcfg": rcfg, "scores": scores,
+                     "t_star": t_star, "history": hist}
+    return out

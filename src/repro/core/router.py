@@ -1,0 +1,103 @@
+"""Router training (paper §3): BCE on a BERT-style encoder with hard or soft
+labels. The same trainer covers r_det / r_prob / r_trans — only the labels
+differ, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.encoder import RouterConfig, init_router_encoder, router_encode
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterTrainConfig:
+    epochs: int = 5                # paper: 5 epochs, best checkpoint on val
+    batch_size: int = 64
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    seed: int = 0
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Binary cross-entropy with soft labels (Eq. 1/2/4)."""
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(labels * logp + (1.0 - labels) * lognp)
+
+
+def make_train_step(rcfg: RouterConfig, ocfg: AdamWConfig):
+    @jax.jit
+    def step(params, opt_state, tokens, mask, labels):
+        def loss_fn(p):
+            logits = router_encode(p, tokens, mask, rcfg)
+            return bce_loss(logits, labels)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+    return step
+
+
+@jax.jit
+def _eval_logits(params, tokens, mask, rcfg_static):
+    return router_encode(params, tokens, mask, rcfg_static)
+
+
+def score_dataset(params, rcfg: RouterConfig, tokens: np.ndarray,
+                  mask: np.ndarray, batch_size: int = 256) -> np.ndarray:
+    """Router scores p_w(x) for a dataset, batched."""
+    outs = []
+    fn = jax.jit(lambda p, t, m: jax.nn.sigmoid(router_encode(p, t, m, rcfg)))
+    for i in range(0, len(tokens), batch_size):
+        outs.append(np.asarray(fn(params, jnp.asarray(tokens[i:i + batch_size]),
+                                  jnp.asarray(mask[i:i + batch_size]))))
+    return np.concatenate(outs)
+
+
+def train_router(rcfg: RouterConfig, tokens: np.ndarray, mask: np.ndarray,
+                 labels: np.ndarray, tcfg: RouterTrainConfig = RouterTrainConfig(),
+                 val: tuple | None = None) -> tuple[dict, Dict[str, List[float]]]:
+    """Train one router. ``val`` = (tokens, mask, labels) used to select the
+    best checkpoint across epochs (paper §4.1). Returns (params, history)."""
+    rng = np.random.default_rng(tcfg.seed)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = init_router_encoder(key, rcfg)
+    n_steps = max(1, len(tokens) // tcfg.batch_size) * tcfg.epochs
+    ocfg = AdamWConfig(lr=tcfg.lr, weight_decay=tcfg.weight_decay,
+                       warmup_steps=max(1, n_steps // 20), total_steps=n_steps)
+    opt_state = init_opt_state(params, ocfg)
+    step = make_train_step(rcfg, ocfg)
+
+    history = {"train_loss": [], "val_loss": []}
+    best = (np.inf, params)
+    N = len(tokens)
+    for epoch in range(tcfg.epochs):
+        order = rng.permutation(N)
+        losses = []
+        for i in range(0, N - tcfg.batch_size + 1, tcfg.batch_size):
+            idx = order[i:i + tcfg.batch_size]
+            params, opt_state, loss = step(
+                params, opt_state, jnp.asarray(tokens[idx]),
+                jnp.asarray(mask[idx]), jnp.asarray(labels[idx]))
+            losses.append(float(loss))
+        history["train_loss"].append(float(np.mean(losses)))
+        if val is not None:
+            vt, vm, vl = val
+            vlogits = []
+            fn = jax.jit(lambda p, t, m: router_encode(p, t, m, rcfg))
+            for i in range(0, len(vt), 256):
+                vlogits.append(np.asarray(fn(params, jnp.asarray(vt[i:i + 256]),
+                                             jnp.asarray(vm[i:i + 256]))))
+            vlog = jnp.asarray(np.concatenate(vlogits))
+            vloss = float(bce_loss(vlog, jnp.asarray(vl)))
+            history["val_loss"].append(vloss)
+            if vloss < best[0]:
+                best = (vloss, jax.tree_util.tree_map(np.asarray, params))
+    if val is not None and np.isfinite(best[0]):
+        params = jax.tree_util.tree_map(jnp.asarray, best[1])
+    return params, history

@@ -1,0 +1,63 @@
+"""The routing policy — the paper's r: X -> {0, 1} as a deployable object.
+
+``HybridRouter`` packages a trained router encoder + threshold; ``route``
+returns the dispatch decision per query (True = small model). The serving
+engine (repro.serving.hybrid) consumes this to drive two-model inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.encoder import RouterConfig, router_encode
+
+
+@dataclasses.dataclass
+class HybridRouter:
+    params: dict
+    rcfg: RouterConfig
+    threshold: float
+    label_kind: str = "trans"   # det | prob | trans — provenance only
+
+    def scores(self, tokens, mask) -> jnp.ndarray:
+        return jax.nn.sigmoid(router_encode(self.params, tokens, mask, self.rcfg))
+
+    def route(self, tokens, mask) -> jnp.ndarray:
+        """True where the query goes to the SMALL model ("easy")."""
+        return self.scores(tokens, mask) >= self.threshold
+
+    def with_threshold(self, threshold: float) -> "HybridRouter":
+        return dataclasses.replace(self, threshold=threshold)
+
+
+def route_scores_jit(rcfg: RouterConfig):
+    """jit-friendly scoring fn for fusing into a serving step."""
+    def fn(params, tokens, mask):
+        return jax.nn.sigmoid(router_encode(params, tokens, mask, rcfg))
+    return fn
+
+
+@dataclasses.dataclass
+class CostMeter:
+    """Accounting for the cost advantage of a serving session (§2.3)."""
+    to_small: int = 0
+    to_large: int = 0
+    small_tokens: int = 0
+    large_tokens: int = 0
+
+    def record(self, routed_small: np.ndarray, gen_tokens: int):
+        n_small = int(routed_small.sum())
+        n = len(routed_small)
+        self.to_small += n_small
+        self.to_large += n - n_small
+        self.small_tokens += n_small * gen_tokens
+        self.large_tokens += (n - n_small) * gen_tokens
+
+    @property
+    def cost_advantage(self) -> float:
+        total = self.to_small + self.to_large
+        return self.to_small / total if total else 0.0

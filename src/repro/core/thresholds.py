@@ -1,0 +1,53 @@
+"""Empirical routing-threshold calibration (paper §4.5).
+
+Given router scores + quality samples on a small calibration set, choose the
+threshold that maximises cost advantage subject to a performance-drop budget
+(the paper uses 500 validation samples and a <=1% drop budget, then shows
+the chosen threshold generalises to test).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .metrics import mixture_quality, perf_drop_pct
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    threshold: float
+    expected_cost_advantage: float
+    expected_drop_pct: float
+
+
+def calibrate_threshold(scores: np.ndarray, q_small: np.ndarray,
+                        q_large: np.ndarray, max_drop_pct: float = 1.0,
+                        n_grid: int = 201,
+                        sample_idx: int | None = None) -> CalibrationResult:
+    """Grid-search the score threshold (paper: grid search on 500 samples)."""
+    q_all_large = float(q_large.mean(axis=1).mean()
+                        if sample_idx is None else
+                        q_large[:, sample_idx].mean())
+    cands = np.quantile(scores, np.linspace(0.0, 1.0, n_grid))
+    cands = np.concatenate([[scores.min() - 1e-6], cands, [scores.max() + 1e-6]])
+    best = CalibrationResult(float(scores.max() + 1e-6), 0.0, 0.0)
+    for thr in np.unique(cands):
+        qm, ca = mixture_quality(scores, float(thr), q_small, q_large,
+                                 sample_idx)
+        drop = perf_drop_pct(qm, q_all_large)
+        if drop <= max_drop_pct and ca > best.expected_cost_advantage:
+            best = CalibrationResult(float(thr), ca, drop)
+    return best
+
+
+def evaluate_threshold(threshold: float, scores: np.ndarray,
+                       q_small: np.ndarray, q_large: np.ndarray,
+                       sample_idx: int | None = None) -> dict:
+    """Apply a calibrated threshold to a (test) set — Table 3 columns."""
+    q_all_large = float(q_large.mean(axis=1).mean()
+                        if sample_idx is None else
+                        q_large[:, sample_idx].mean())
+    qm, ca = mixture_quality(scores, threshold, q_small, q_large, sample_idx)
+    return {"cost_advantage": ca, "drop_pct": perf_drop_pct(qm, q_all_large),
+            "quality": qm}

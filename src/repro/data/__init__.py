@@ -1,0 +1,3 @@
+from . import tokenizer
+from .tasks import (TASKS, TaskSpec, QueryDataset, generate_dataset,
+                    lm_training_arrays)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving substrate's compute hot-spots.
+
+Each kernel lives in its own subpackage: kernel.py (pl.pallas_call +
+BlockSpec), ops.py (jit'd model-layout wrapper), ref.py (pure-jnp oracle).
+Kernels target TPU; on CPU they execute via interpret=True (tests validate
+against the oracle there).
+"""
+from . import flash_attention, decode_attention, ssd_scan  # noqa: F401

@@ -1,0 +1,67 @@
+"""Jit'd public wrapper for GQA decode attention.
+
+Model layout in: q (B, 1, H, D) pre-scaled, expanded kv (B, S, H, D), valid
+(S,) or (B, S). Internally regroups to the kernel's (B*K, G, D) GQA layout.
+Note the model passes *expanded* KV for interface parity with the jnp path;
+the wrapper de-duplicates back to KV heads so the kernel sees each cache
+byte once (this mirrors what a production engine would store).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_gqa
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_exp, v_exp, valid):
+    """q: (B, 1, H, D); k_exp/v_exp: (B, S, H, D) head-expanded cache;
+    valid: (S,) or (B, S). Returns (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    S = k_exp.shape[1]
+    # kernel wants one KV head per group; the expanded cache repeats each KV
+    # head G times consecutively — treat every head as its own "KV head"
+    # group of 1 unless a proper (B,S,K,D) cache is provided.
+    qg = q[:, 0].reshape(B * H, 1, D)
+    kg = jnp.moveaxis(k_exp, 2, 1).reshape(B * H, S, D)
+    vg = jnp.moveaxis(v_exp, 2, 1).reshape(B * H, S, D)
+    if valid.ndim == 1:
+        vmask = jnp.broadcast_to(valid[None], (B, S))
+    else:
+        vmask = valid
+    vmask = jnp.repeat(vmask, H, axis=0).astype(jnp.int8)
+    pad = (-S) % 512 if S > 512 else (-S) % S if S else 0
+    bk = min(512, S)
+    pad = (-S) % bk
+    if pad:
+        kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
+        vmask = jnp.pad(vmask, ((0, 0), (0, pad)))
+    out = decode_attention_gqa(qg, kg, vg, vmask, bk=bk,
+                               interpret=not _is_tpu())
+    return out.reshape(B, H, 1, D).transpose(0, 2, 1, 3)
+
+
+def decode_attention_kv(q, k, v, valid):
+    """True GQA entry: q (B, H, D) pre-scaled, k/v (B, S, K, D) raw cache,
+    valid (B, S). Returns (B, H, D). This is the production layout."""
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kg = jnp.moveaxis(k, 2, 1).reshape(B * K, S, D)
+    vg = jnp.moveaxis(v, 2, 1).reshape(B * K, S, D)
+    vmask = jnp.repeat(valid, K, axis=0).astype(jnp.int8)
+    bk = min(512, S)
+    pad = (-S) % bk
+    if pad:
+        kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
+        vmask = jnp.pad(vmask, ((0, 0), (0, pad)))
+    out = decode_attention_gqa(qg, kg, vg, vmask, bk=bk,
+                               interpret=not _is_tpu())
+    return out.reshape(B, K, G, D).reshape(B, H, D)

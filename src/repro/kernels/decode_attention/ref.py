@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the GQA decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (BK, G, D) pre-scaled; k, v: (BK, S, D); valid: (BK, S) bool/int.
+
+    Returns (BK, G, D)."""
+    s = jnp.einsum("bgd,bsd->bgs", q, k).astype(jnp.float32)
+    s = jnp.where(valid[:, None, :] > 0, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgs,bsd->bgd", w.astype(v.dtype), v)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q, k, v: (BH, S, D), q pre-scaled. Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (same math as
+repro.models.ssm.ssd_chunk_reference, in the kernel's flattened layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, dacum, B, C):
+    """x: (BC, H, l, P); dt, dacum: (BC, H, l, 1); B, C: (BC, l, N).
+    Returns (y (BC,H,l,P) fp32, states (BC,H,N,P) fp32)."""
+    x = x.astype(jnp.float32)
+    dt = dt[..., 0].astype(jnp.float32)       # (BC, H, l)
+    da = dacum[..., 0].astype(jnp.float32)    # (BC, H, l)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    l = x.shape[2]
+    rel = da[..., :, None] - da[..., None, :]             # (BC, H, i, j)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bin,bjn->bij", Cf, Bf)           # (BC, i, j)
+    gated = scores[:, None] * decay * dt[..., None, :]    # (BC, H, i, j)
+    y = jnp.einsum("bhij,bhjp->bhip", gated, x)
+    w = jnp.exp(da[..., -1:] - da) * dt                   # (BC, H, l)
+    st = jnp.einsum("bhl,bln,bhlp->bhnp", w, Bf, x)
+    return y, st

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only this launcher sees 512 placeholder devices; tests/benches see 1.
+
+# Multi-pod dry-run: AOT .lower().compile() of every (arch × input-shape)
+# combination on the production meshes, plus roofline-term extraction.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.config import INPUT_SHAPES
+from repro.sharding import rules
+from repro.sharding.context import activation_sharding, flash_decode
+from .inputs import needs_windowed_decode
+import contextlib
+from . import hlo_analysis
+from .inputs import dryrun_config
+from .mesh import make_production_mesh
+from .roofline import roofline_terms
+from .steps import build_step
+
+
+def sharding_for_args(arg_specs, shape, mesh):
+    """in_shardings matching build_step's arg order."""
+    batch = shape.global_batch
+    if shape.kind == "train":
+        p, opt, b = arg_specs
+        ps = rules.params_shardings(p, mesh)
+        os_ = {"m": rules.params_shardings(opt["m"], mesh),
+               "v": rules.params_shardings(opt["v"], mesh),
+               "step": rules.replicated(opt["step"], mesh)}
+        bs = rules.batch_shardings(b, mesh, batch)
+        return (ps, os_, bs)
+    if shape.kind == "prefill":
+        p, b = arg_specs
+        return (rules.params_shardings(p, mesh),
+                rules.batch_shardings(b, mesh, batch))
+    p, c, tok = arg_specs
+    return (rules.params_shardings(p, mesh),  # mode="decode" regressed: §Perf iter-3
+            rules.cache_shardings(c, mesh, batch),
+            rules.batch_shardings(tok, mesh, batch))
+
+
+def out_sharding_for(fn, arg_specs, in_sh, shape, mesh):
+    """Pin step outputs: params/opt keep their input shardings; caches follow
+    the cache rules; logits/loss shard on batch / replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    batch = shape.global_batch
+    ba = rules.batch_axes(mesh, batch)
+    out_shapes = jax.eval_shape(fn, *arg_specs)
+    if shape.kind == "train":   # (params, opt_state, loss)
+        return (in_sh[0], in_sh[1], NamedSharding(mesh, P()))
+    logits_spec, cache_shapes = out_shapes
+    logits_sh = NamedSharding(mesh, P(ba, None))
+    return (logits_sh, rules.cache_shardings(cache_shapes, mesh, batch))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            print_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rcfg = dryrun_config(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "chips": n_chips,
+           "ok": False}
+    t0 = time.time()
+    fn, arg_specs, trips = build_step(rcfg, shape)
+    in_sh = sharding_for_args(arg_specs, shape, mesh)
+    out_sh = out_sharding_for(fn, arg_specs, in_sh, shape, mesh)
+    ba = rules.batch_axes(mesh, shape.global_batch)
+    # Decode: replicate layer-boundary activations (they are ~MBs for one
+    # token) so weights stay STATIONARY — XLA then reduces partial matmul
+    # products with tiny all-reduces instead of gathering weight shards
+    # every step (perf iteration, EXPERIMENTS.md §Perf).
+    ba_act = None if shape.kind == "decode" else ba
+    donate = (0, 1) if shape.kind == "train" else \
+        ((1,) if shape.kind == "decode" else ())
+    # Flash-decode (shard_map over seq-sharded cache) when the cache fell to
+    # sequence sharding (kv heads don't divide the model axis) — §Perf.
+    use_flash = (shape.kind == "decode"
+                 and not needs_windowed_decode(rcfg, shape)
+                 and rcfg.n_kv_heads
+                 and rcfg.n_kv_heads % mesh.shape["model"] != 0
+                 and shape.seq_len % mesh.shape["model"] == 0)
+    fctx = flash_decode(mesh, ba) if use_flash else contextlib.nullcontext()
+    # Sequence-parallel activations: always for train (remat saves /16);
+    # for prefill only when the head count doesn't divide the model axis
+    # (attention weights are then model-replicated and attention runs
+    # seq-parallel — §Perf gemma3 iteration).
+    seq_shard = (shape.kind == "train"
+                 or (shape.kind == "prefill" and rcfg.n_heads
+                     and rcfg.n_heads % mesh.shape["model"] != 0))
+    with mesh, fctx, activation_sharding(mesh, ba_act, seq_shard=seq_shard):
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*arg_specs)
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gb": ma.argument_size_in_bytes / 1e9,
+        "output_gb": ma.output_size_in_bytes / 1e9,
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "alias_gb": ma.alias_size_in_bytes / 1e9,
+        "peak_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9,
+    }
+    ca = compiled.cost_analysis()
+    rec["cost_analysis_flops_uncorrected"] = float(ca.get("flops", 0.0))
+
+    txt = compiled.as_text()
+    if print_hlo:
+        print(txt)
+    hc = hlo_analysis.analyze(txt)
+    # HBM traffic per step per device: params+cache read (arguments) +
+    # produced buffers (analyzer proxy).
+    hbm = ma.argument_size_in_bytes + hc.hbm_bytes
+    rl = roofline_terms(rcfg, shape, flops_per_dev=hc.flops,
+                        coll_bytes_per_dev=hc.collective_bytes,
+                        hbm_bytes_per_dev=hbm, n_chips=n_chips)
+    rec.update({
+        "flops_per_dev": hc.flops,
+        "collective_bytes_per_dev": hc.collective_bytes,
+        "collective_by_kind": hc.collective_by_kind,
+        "hbm_bytes_per_dev": hbm,
+        "while_trips": hc.while_trips,
+        "roofline": rl.as_dict(),
+        "ok": True,
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--print-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if args.all else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                try:
+                    rec = run_one(arch, shape, multi, args.print_hlo)
+                    rl = rec["roofline"]
+                    print(f"[ok] {tag} compile={rec['compile_s']}s "
+                          f"peak={rec['memory']['peak_gb']:.1f}GB "
+                          f"c/m/coll={rl['compute_s']:.3f}/"
+                          f"{rl['memory_s']:.3f}/{rl['collective_s']:.3f}s "
+                          f"dom={rl['dominant']}")
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

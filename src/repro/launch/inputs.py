@@ -1,0 +1,86 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch × input-shape) combo.
+
+No device allocation — the dry-run lowers against these. Shapes follow the
+assignment:
+  train_4k    : teacher-forced train step, (B=256, S=4096)
+  prefill_32k : prompt prefill, (B=32, S=32768)
+  decode_32k  : ONE new token against a 32768-entry KV cache, B=128
+  long_500k   : ONE new token against a 524288-entry cache, B=1
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, InputShape, INPUT_SHAPES
+from repro.models.model import build_model
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def dryrun_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Production execution settings: bf16, remat for training, memory-bounded
+    attention chunking sized to the actual sequence."""
+    eff_seq = shape.seq_len
+    if cfg.frontend == "vision_stub":
+        eff_seq += cfg.num_frontend_tokens
+    chunk = _largest_divisor_leq(eff_seq, 1024)
+    return dataclasses.replace(
+        cfg,
+        dtype="bfloat16",
+        remat=(shape.kind == "train"),
+        attn_chunk=chunk,
+        use_pallas=False,     # jnp path for AOT lowering on CPU (kernels are TPU-only)
+    )
+
+
+def needs_windowed_decode(cfg: ArchConfig, shape: InputShape) -> bool:
+    """long_500k: pure full-attention archs use the sliding-window +
+    attention-sink serving mode (documented approximation, DESIGN.md §4);
+    ssm / hybrid / local:global archs decode natively."""
+    return (shape.name == "long_500k"
+            and not cfg.has_subquadratic_path
+            and not cfg.is_attention_free)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the step function's ``batch``-like inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one token; the cache spec comes from cache_specs()
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_frontend_tokens, cfg.d_model), act)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), act)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape):
+    """Abstract cache pytree for decode shapes (entries 0..S-1 assumed valid,
+    decode appends at position S-1+1)."""
+    bundle = build_model(cfg)
+    return jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+
+
+def params_specs(cfg: ArchConfig):
+    bundle = build_model(cfg)
+    return jax.eval_shape(bundle.init, jax.random.PRNGKey(0))

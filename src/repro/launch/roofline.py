@@ -1,0 +1,53 @@
+"""Roofline-term computation from dry-run artifacts (TPU v5e constants).
+
+All analyzer numbers are per device; the spec formulas divide global
+quantities by chip count, which is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS_BF16 = 197e12    # per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float         # global analytic 6ND / 2ND
+    hlo_flops_global: float
+    useful_ratio: float        # model_flops / hlo_flops_global
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs: 6·N_active·tokens (train) or 2·N_active·tokens
+    (inference); decode processes one token per sequence."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(cfg, shape, *, flops_per_dev: float, coll_bytes_per_dev: float,
+                   hbm_bytes_per_dev: float, n_chips: int) -> Roofline:
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = hbm_bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_per_dev * n_chips
+    return Roofline(compute_s, memory_s, collective_s, dominant, mf,
+                    hlo_global, mf / hlo_global if hlo_global else 0.0)

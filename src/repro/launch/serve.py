@@ -1,0 +1,109 @@
+"""Serving launcher: hybrid two-model serving on an assigned architecture
+family (reduced configs, CPU-runnable; full configs exercised via dry-run).
+
+Builds the (small-sibling, full-reduced) pair for --arch, trains both briefly
+on the synthetic suite, trains the r_trans router, and serves a request
+stream, reporting the realised cost advantage at the requested quality drop
+budget.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3.5-moe-42b-a6.6b \
+      --requests 256 --drop-budget 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import HybridRouter, calibrate_threshold
+from repro.core.experiment import make_labels
+from repro.core.quality import edit_similarity
+from repro.core.router import RouterTrainConfig, score_dataset, train_router
+from repro.data import tokenizer as tok
+from repro.data.tasks import generate_dataset, lm_training_arrays
+from repro.models import RouterConfig, build_model
+from repro.serving import Engine, HybridEngine
+from repro.serving.generate import sample_responses
+from repro.training.trainer import TrainConfig, train_lm
+
+
+def reduced_pair(arch: str):
+    full = dataclasses.replace(get_config(arch).reduced(),
+                               vocab_size=tok.VOCAB_SIZE, vocab_pad_multiple=16)
+    small = dataclasses.replace(full, n_layers=max(1, full.n_layers // 2),
+                                d_model=full.d_model // 2,
+                                n_heads=max(1, full.n_heads // 2),
+                                n_kv_heads=max(1, min(full.n_kv_heads,
+                                                      full.n_heads // 2))
+                                if full.n_kv_heads else 0,
+                                d_ff=full.d_ff // 2 if full.d_ff else 0,
+                                name=full.name + "-s")
+    return small, full
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-4b")
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--drop-budget", type=float, default=2.0)
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--samples", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg_s, cfg_l = reduced_pair(args.arch)
+    rng = np.random.default_rng(0)
+    train_ds = generate_dataset(rng, 1500)
+    arrays = lm_training_arrays(train_ds)
+
+    print(f"== training {cfg_s.name} and {cfg_l.name} ==")
+    pair = {}
+    for cfg, steps in ((cfg_s, args.steps // 2), (cfg_l, args.steps)):
+        bundle = build_model(cfg)
+        params, hist = train_lm(bundle, arrays,
+                                TrainConfig(steps=steps, batch_size=32,
+                                            lr=2e-3))
+        pair[cfg.name] = (bundle, params)
+        print(f"  {cfg.name}: loss {hist[-1]['loss']:.3f}")
+
+    print("== labelling + router training ==")
+    cal_ds = generate_dataset(rng, 300)
+    qualities = {}
+    for name, (bundle, params) in pair.items():
+        resp, lens = sample_responses(bundle, params, cal_ds.query,
+                                      args.samples, 12, 0.8)
+        q = np.zeros(resp.shape[:2], np.float32)
+        for s in range(resp.shape[1]):
+            q[:, s] = edit_similarity(resp[:, s], lens[:, s], cal_ds.ref,
+                                      cal_ds.ref_len)
+        qualities[name] = q
+    y, t_star = make_labels("trans", qualities[cfg_s.name],
+                            qualities[cfg_l.name])
+    rcfg = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=2, d_model=64,
+                        n_heads=4, d_ff=256)
+    rparams, _ = train_router(rcfg, cal_ds.query, cal_ds.query_mask, y,
+                              RouterTrainConfig(epochs=3))
+    scores = score_dataset(rparams, rcfg, cal_ds.query, cal_ds.query_mask)
+    cal = calibrate_threshold(scores, qualities[cfg_s.name],
+                              qualities[cfg_l.name],
+                              max_drop_pct=args.drop_budget)
+    print(f"  t*={t_star:.3f} threshold={cal.threshold:.3f} "
+          f"(expect {cal.expected_cost_advantage:.0%} cost adv)")
+
+    print("== serving ==")
+    router = HybridRouter(rparams, rcfg, cal.threshold)
+    small = Engine(*pair[cfg_s.name], max_new_tokens=12)
+    large = Engine(*pair[cfg_l.name], max_new_tokens=12)
+    hy = HybridEngine(router, small, large)
+    req = generate_dataset(rng, args.requests)
+    for i in range(0, args.requests, 64):
+        hy.serve(req.query[i:i + 64], req.query_mask[i:i + 64])
+    print(f"  cost advantage: {hy.meter.cost_advantage:.0%} "
+          f"({hy.meter.to_small}/{hy.meter.to_small + hy.meter.to_large} "
+          f"to {cfg_s.name})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Training launcher.
+
+Two modes:
+  * --arch <id>: train the REDUCED variant of an assigned architecture on the
+    synthetic instruction suite (CPU-runnable proof of the training substrate;
+    the full config is exercised via the AOT dry-run).
+  * --router PAIR: train the paper's router for a capacity pair
+    (e.g. --router tiny:large), including labels + t* transform.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --steps 200
+  PYTHONPATH=src python -m repro.launch.train --router tiny:large
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import tokenizer as tok
+from repro.data.tasks import generate_dataset, lm_training_arrays
+from repro.models import build_model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.trainer import TrainConfig, train_lm
+
+
+def train_arch(arch: str, steps: int, out: str | None):
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              vocab_size=tok.VOCAB_SIZE, vocab_pad_multiple=16)
+    bundle = build_model(cfg)
+    rng = np.random.default_rng(0)
+    ds = generate_dataset(rng, 2000)
+    arrays = lm_training_arrays(ds)
+    params, hist = train_lm(bundle, arrays,
+                            TrainConfig(steps=steps, batch_size=32, lr=2e-3))
+    print(f"{arch}: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"in {hist[-1]['t']:.0f}s")
+    if out:
+        save_checkpoint(out, params)
+        print(f"saved {out}")
+
+
+def train_router(pair: str, epochs: int):
+    from repro.core.experiment import build_experiment, train_pair_routers
+    s, l = pair.split(":")
+    exp = build_experiment(seed=0, n_train_queries=600, n_test_queries=300,
+                           n_samples=6, steps_scale=0.4, tiers=(s, l))
+    routers = train_pair_routers(exp, s, l, epochs=epochs)
+    from repro.core import drop_at_cost_advantages
+    qs, ql = exp.qualities[s]["test"], exp.qualities[l]["test"]
+    for kind, r in routers.items():
+        d = drop_at_cost_advantages(r["scores"]["test"], qs, ql)
+        print(f"r_{kind}: t*={r['t_star']:.3f} "
+              + " ".join(f"drop@{int(ca*100)}%={d[ca]['drop_pct']:.2f}"
+                         for ca in (0.1, 0.2, 0.4)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--router", help="small_tier:large_tier")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--out")
+    args = ap.parse_args()
+    if args.arch:
+        train_arch(args.arch, args.steps, args.out)
+    elif args.router:
+        train_router(args.router, args.epochs)
+    else:
+        ap.error("need --arch or --router")
+
+
+if __name__ == "__main__":
+    main()

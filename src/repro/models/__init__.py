@@ -1,0 +1,3 @@
+from .config import ArchConfig, InputShape, INPUT_SHAPES
+from .model import ModelBundle, build_model
+from .encoder import RouterConfig, init_router_encoder, router_encode, router_score

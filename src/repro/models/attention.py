@@ -1,0 +1,289 @@
+"""Grouped-query attention with RoPE, causal/sliding-window masking,
+memory-bounded chunked prefill, and KV-cache decode.
+
+Three execution paths:
+  * full forward (train / prefill): query-chunked streaming attention so the
+    (S, S) score matrix is never materialised — this is the pure-jnp analogue
+    of the Pallas flash_attention kernel (kernels/flash_attention) and is the
+    path used by the multi-pod dry-run;
+  * Pallas path (cfg.use_pallas): TPU flash-attention kernel;
+  * decode: one-token attention against a KV cache, optionally windowed
+    (attention-sink + last-W positions) for the long-context serving mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, dtype_of
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg) -> dict:
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, (H, Dh), dt),
+        "wk": dense_init(ks[1], D, (K, Dh), dt),
+        "wv": dense_init(ks[2], D, (K, Dh), dt),
+        "wo": dense_init(ks[3], H * Dh, D, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dt)
+        p["bk"] = jnp.zeros((K, Dh), dt)
+        p["bv"] = jnp.zeros((K, Dh), dt)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, K, D) -> (B, S, H, D) by repeating each KV head H/K times."""
+    K = k.shape[2]
+    if K == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // K, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int) -> jnp.ndarray:
+    """Additive bias (Q, Kv) from position grids."""
+    allowed = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        allowed &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        allowed &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+def attention_forward(params, x, cfg, *, is_global=True, causal=True,
+                      positions=None, kv_override=None, use_rope=True) -> jnp.ndarray:
+    """Full-sequence attention. x: (B, S, D).
+
+    ``is_global`` may be a python bool or a traced scalar (scanned layer flag);
+    False selects the sliding-window mask. ``kv_override``: (k, v) from an
+    encoder for cross-attention (positions then index the decoder side only).
+    """
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(S)
+    if kv_override is None and use_rope:
+        q, k, v = _project_qkv(params, x, cfg, positions)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        if cfg.qkv_bias:
+            q = q + params["bq"]
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_override is not None:
+            k, v = kv_override
+        else:
+            k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+            if cfg.qkv_bias:
+                k = k + params["bk"]
+                v = v + params["bv"]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = Dh ** -0.5
+
+    if cfg.use_pallas and isinstance(is_global, bool):
+        from repro.kernels.flash_attention import ops as fa_ops
+        window = cfg.sliding_window if (not is_global and cfg.sliding_window) else 0
+        return _out_proj(params, fa_ops.flash_attention(
+            q * scale, k, v, causal=causal, window=window), B, S, H, Dh)
+
+    kv_len = k.shape[1]
+    q_pos = positions if positions.ndim == 1 else positions[0]
+    k_pos = jnp.arange(kv_len)
+
+    chunk = min(cfg.attn_chunk, S)
+    if S % chunk != 0:
+        chunk = S  # irregular sizes (smoke tests): single chunk
+    n_chunks = S // chunk
+
+    window = cfg.sliding_window if cfg.sliding_window else 0
+
+    def chunk_attn(carry, idx):
+        qs = jax.lax.dynamic_slice_in_dim(q, idx * chunk, chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, idx * chunk, chunk, axis=0)
+        scores = jnp.einsum("bqhk,bshk->bhqs", qs, k).astype(jnp.float32) * scale
+        bias_local = _mask_bias(qp, k_pos, causal=causal, window=window)
+        bias_global = _mask_bias(qp, k_pos, causal=causal, window=0)
+        if isinstance(is_global, bool):
+            bias = bias_global if is_global else bias_local
+        else:
+            bias = jnp.where(is_global, bias_global, bias_local)
+        scores = scores + bias[None, None]
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhqs,bshk->bqhk", w, v)
+        return carry, o
+
+    if n_chunks == 1:
+        _, out = chunk_attn(None, 0)
+    else:
+        _, outs = jax.lax.scan(chunk_attn, None, jnp.arange(n_chunks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, Dh)
+    return _out_proj(params, out, B, S, H, Dh)
+
+
+def _out_proj(params, out, B, S, H, Dh):
+    return out.reshape(B, S, H * Dh) @ params["wo"]
+
+
+# ----------------------------------------------------------------------- cache
+def init_kv_cache(cfg, batch: int, max_seq: int, n_layers: int, dtype=None):
+    K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = dtype or dtype_of(cfg)
+    shape = (n_layers, batch, max_seq, K, Dh)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill_attention(params, x, cfg, *, is_global=True, positions=None):
+    """Prefill: full forward + return this layer's (k, v) for cache insertion."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    _, k, v = _project_qkv(params, x, cfg, positions)
+    out = attention_forward(params, x, cfg, is_global=is_global, positions=positions)
+    return out, (k, v)
+
+
+def decode_attention(params, x_t, layer_k, layer_v, pos, cfg, *,
+                     is_global=True, windowed=False):
+    """One decode step.
+
+    x_t: (B, 1, D); layer_k/v: (B, Smax, K, Dh) with entries < pos valid.
+    Returns (out (B,1,D), new_k, new_v). ``windowed``: long-context serving
+    mode — attend only to an attention-sink prefix + the trailing W positions.
+    """
+    B = x_t.shape[0]
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos)
+    q, k_t, v_t = _project_qkv(params, x_t, cfg, positions)
+
+    from repro.sharding.context import flash_decode_ctx
+    fctx = flash_decode_ctx()
+    if (fctx is not None and not windowed
+            and isinstance(is_global, bool) and is_global
+            and layer_k.shape[1] % fctx[0].shape["model"] == 0):
+        out, layer_k, layer_v = _flash_decode_seq_sharded(
+            q * (Dh ** -0.5), layer_k, layer_v, k_t, v_t, pos, H, *fctx)
+        return _out_proj(params, out, B, 1, H, Dh), layer_k, layer_v
+    layer_k = jax.lax.dynamic_update_slice_in_dim(layer_k, k_t, pos, axis=1)
+    layer_v = jax.lax.dynamic_update_slice_in_dim(layer_v, v_t, pos, axis=1)
+    scale = Dh ** -0.5
+
+    def attend(keys, vals, key_positions):
+        kk = _expand_kv(keys, H)
+        vv = _expand_kv(vals, H)
+        valid = key_positions <= pos
+        if cfg.sliding_window:
+            in_window = (pos - key_positions) < cfg.sliding_window
+            if isinstance(is_global, bool):
+                if not is_global:
+                    valid &= in_window
+            else:
+                valid &= jnp.where(is_global, True, in_window)
+        if cfg.use_pallas:
+            from repro.kernels.decode_attention import ops as da_ops
+            return da_ops.decode_attention(q * scale, kk, vv, valid)
+        scores = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) * scale
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", w, vv)
+
+    if windowed:
+        W = min(cfg.long_context_window, layer_k.shape[1])
+        sink = min(cfg.attention_sink, layer_k.shape[1])
+        start = jnp.clip(pos - W + 1, 0, layer_k.shape[1] - W)
+        k_win = jax.lax.dynamic_slice_in_dim(layer_k, start, W, axis=1)
+        v_win = jax.lax.dynamic_slice_in_dim(layer_v, start, W, axis=1)
+        win_pos = start + jnp.arange(W)
+        k_sink = layer_k[:, :sink]
+        v_sink = layer_v[:, :sink]
+        sink_pos = jnp.arange(sink)
+        # Avoid double-counting: sink positions may overlap the window at small pos.
+        sink_pos_masked = jnp.where(sink_pos < start, sink_pos, pos + 1)  # invalid->masked
+        keys = jnp.concatenate([k_sink, k_win], axis=1)
+        vals = jnp.concatenate([v_sink, v_win], axis=1)
+        kpos = jnp.concatenate([sink_pos_masked, win_pos])
+        out = attend(keys, vals, kpos)
+    else:
+        out = attend(layer_k, layer_v, jnp.arange(layer_k.shape[1]))
+    return _out_proj(params, out, B, 1, H, Dh), layer_k, layer_v
+
+
+def _flash_decode_seq_sharded(q, layer_k, layer_v, k_t, v_t, pos, n_heads,
+                              mesh, batch_axes=None):
+    """Flash-decode over a sequence-sharded KV cache (shard_map over "model").
+
+    q: (B, 1, H, Dh) pre-scaled; layer_k/v: (B, S, K, Dh) sharded S->"model"
+    (batch optionally on ``batch_axes``); k_t/v_t: (B, 1, K, Dh). Each seq
+    shard computes local max/denominator/weighted-sum; global combination is
+    two psums of (B, H, 1|Dh) — O(MB) instead of gathering the cache. The
+    cache update happens shard-locally (the owner shard writes the new KV).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    S = layer_k.shape[1]
+    m_size = mesh.shape["model"]
+    S_loc = S // m_size
+    ba = batch_axes
+
+    def local(q, k, v, kt, vt, pos):
+        mi = jax.lax.axis_index("model")
+        start = mi * S_loc
+        owns = (pos >= start) & (pos < start + S_loc)
+        li = jnp.clip(pos - start, 0, S_loc - 1)
+        k = jnp.where(owns, jax.lax.dynamic_update_slice_in_dim(k, kt, li, 1), k)
+        v = jnp.where(owns, jax.lax.dynamic_update_slice_in_dim(v, vt, li, 1), v)
+        kk = _expand_kv(k, n_heads)
+        vv = _expand_kv(v, n_heads)
+        s = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32)
+        kpos = start + jnp.arange(S_loc)
+        s = jnp.where((kpos <= pos)[None, None, None, :], s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1, keepdims=True)            # (B,H,1,1)
+        m_glob = jax.lax.pmax(m_loc, "model")
+        p = jnp.exp(s - m_glob)
+        l_loc = jnp.sum(p, axis=-1, keepdims=True)
+        o_loc = jnp.einsum("bhqs,bshk->bqhk", p.astype(vv.dtype), vv
+                           ).astype(jnp.float32)
+        l = jax.lax.psum(l_loc, "model")                      # (B,H,1,1)
+        o = jax.lax.psum(o_loc, "model")                      # (B,1,H,Dh)
+        out = o / jnp.maximum(l[:, :, 0, :, None].transpose(0, 2, 1, 3), 1e-30)
+        return out.astype(q.dtype), k, v
+
+    q4 = P(ba, None, None, None)
+    kv = P(ba, "model", None, None)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(q4, kv, kv, q4, q4, P()),
+                   out_specs=(q4, kv, kv), check_rep=False)
+    return fn(q, layer_k, layer_v, k_t, v_t, pos)
+
+
+def decode_cross_attention(params, x_t, enc_k, enc_v, cfg):
+    """Cross-attention decode step against fixed encoder memory (no cache update)."""
+    B = x_t.shape[0]
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x_t, params["wq"])
+    kk = _expand_kv(enc_k, H)
+    vv = _expand_kv(enc_v, H)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) * (Dh ** -0.5)
+    w = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, vv)
+    return _out_proj(params, out, B, 1, H, Dh)

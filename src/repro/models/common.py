@@ -1,0 +1,129 @@
+"""Common functional layers: init helpers, norms, embeddings, RoPE.
+
+Params are plain nested dicts of jnp arrays (pytrees). Every ``init_*`` takes a
+PRNG key and returns a param dict; every ``apply``-style function is pure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init; ``out_shape`` may be a tuple (e.g. heads)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, *out_shape), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "w_gate": dense_init(k2, d_model, d_ff, dtype),
+        "w_out": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP."""
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+    return h @ params["w_out"]
+
+
+# ------------------------------------------------------------------ embeddings
+def init_embedding(key, cfg) -> dict:
+    """Token embedding padded to cfg.padded_vocab (sharding-friendly)."""
+    return {"table": embed_init(key, cfg.padded_vocab, cfg.d_model, dtype_of(cfg))}
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["table"][tokens]
+
+
+def unembed(params: dict, x: jnp.ndarray, logical_vocab: int) -> jnp.ndarray:
+    """Project to (padded) vocab logits; mask padded tail to -inf."""
+    logits = x @ params["table"].T.astype(x.dtype)
+    padded = params["table"].shape[0]
+    if padded != logical_vocab:
+        mask = jnp.arange(padded) < logical_vocab
+        logits = jnp.where(mask[None, ...], logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def init_output_head(key, cfg) -> dict:
+    return {"w": dense_init(key, cfg.d_model, cfg.padded_vocab, dtype_of(cfg))}
+
+
+def output_head(params: dict, x: jnp.ndarray, logical_vocab: int) -> jnp.ndarray:
+    logits = x @ params["w"]
+    padded = params["w"].shape[1]
+    if padded != logical_vocab:
+        mask = jnp.arange(padded) < logical_vocab
+        logits = jnp.where(mask[None, ...], logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+# --------------------------------------------------------------------- losses
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy. logits (..., V) fp32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def stack_params(param_list):
+    """Stack a list of identical param pytrees along a new leading (layer) axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *param_list)

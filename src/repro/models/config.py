@@ -1,0 +1,256 @@
+"""Architecture configuration schema.
+
+Every assigned architecture (and every reduced smoke/sibling variant) is an
+``ArchConfig``. The config is a frozen dataclass so it can be hashed into jit
+caches and compared in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Configuration for one model architecture.
+
+    Families: dense | moe | ssm | hybrid | vlm | audio.
+    ``vlm``/``audio`` specify the transformer backbone; the modality frontend is
+    a stub that supplies precomputed patch/frame embeddings (see models/frontends).
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int  # logical vocabulary
+
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0          # N: state size per head
+    ssm_headdim: int = 64       # P: channels per SSD head
+    ssm_expand: int = 2         # d_inner = expand * d_model
+    ssm_chunk: int = 256        # SSD chunk length
+    ssm_conv_width: int = 4     # short causal conv width
+
+    # --- attention pattern ---
+    sliding_window: int = 0       # >0: window size for "local" attention layers
+    local_global_ratio: int = 0   # gemma3: N local layers per 1 global layer (=5)
+    attn_every: int = 0           # jamba: one attention layer per this many layers (=8)
+    attn_offset: int = 4          # jamba: index of the attn layer within each block
+    moe_every: int = 0            # jamba: MoE FFN every this many layers (=2)
+    qkv_bias: bool = False
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500           # encoder feature length (stub conv frontend output)
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"        # none | vision_stub | audio_stub
+    num_frontend_tokens: int = 0  # prepended embedding tokens (vlm)
+
+    # --- misc ---
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "float32"        # activation / param dtype
+    vocab_pad_multiple: int = 256
+
+    # --- long-context serving (beyond-paper substrate feature) ---
+    long_context_window: int = 8192
+    attention_sink: int = 128
+
+    # --- execution knobs ---
+    remat: bool = False           # remat each scanned layer
+    use_pallas: bool = False      # use Pallas kernels (TPU target) instead of jnp ref
+    attn_chunk: int = 1024        # query-chunk size for memory-bounded jnp attention
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim > 0 else self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_subquadratic_path(self) -> bool:
+        """True if the arch natively supports long-context decode without a
+        full-attention read of the whole cache (SSM, hybrid, sliding window)."""
+        return self.family in ("ssm", "hybrid") or self.local_global_ratio > 0
+
+    # ---------------------------------------------------------------- counting
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND checks."""
+        D, H, K, Dh, F = self.d_model, self.n_heads, self.n_kv_heads, self.resolved_head_dim, self.d_ff
+        emb = self.padded_vocab * D * (1 if self.tie_embeddings else 2)
+        attn = D * H * Dh + 2 * D * K * Dh + H * Dh * D
+        if self.qkv_bias:
+            attn += (H + 2 * K) * Dh
+        dense_ffn = 3 * D * F
+        moe_ffn = self.n_experts * 3 * D * F + D * self.n_experts  # experts + gate
+        ssm = 0
+        if self.ssm_state > 0:
+            di, N, G = self.d_inner, self.ssm_state, 1
+            # in_proj (x, z, B, C, dt), conv, A, D, norm, out_proj
+            ssm = D * (2 * di + 2 * G * N + self.ssm_nheads) + di * self.ssm_conv_width \
+                + 2 * self.ssm_nheads + di + di * D
+        norms = 2 * D
+
+        per_layer = []
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            p = norms
+            if kind["attn"]:
+                p += attn
+            if kind["ssm"]:
+                p += ssm
+            if kind["moe"]:
+                p += moe_ffn
+            elif kind["ffn"]:
+                p += dense_ffn
+            per_layer.append(p)
+        total = emb + sum(per_layer)
+        if self.is_encoder_decoder:
+            # encoder layers: attn + ffn (non-causal), plus decoder cross-attn
+            enc = self.n_enc_layers * (attn + dense_ffn + norms)
+            cross = self.n_layers * (attn + D)  # cross-attn per decoder layer
+            total += enc + cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        D, F = self.d_model, self.d_ff
+        total = self.param_count()
+        inactive = 0
+        for i in range(self.n_layers):
+            if self.layer_kind(i)["moe"]:
+                inactive += (self.n_experts - self.top_k) * 3 * D * F
+        return int(total - inactive)
+
+    # ------------------------------------------------------------ layer layout
+    def layer_kind(self, i: int) -> dict:
+        """What layer ``i`` contains: attention / ssm mixer, moe or dense ffn."""
+        if self.family == "ssm":
+            return dict(attn=False, ssm=True, moe=False, ffn=False, global_attn=False)
+        if self.family == "hybrid":
+            is_attn = self.attn_every > 0 and (i % self.attn_every) == self.attn_offset
+            is_moe = self.moe_every > 0 and (i % self.moe_every) == 1
+            return dict(attn=is_attn, ssm=not is_attn, moe=is_moe, ffn=not is_moe,
+                        global_attn=is_attn)
+        is_moe = self.n_experts > 0
+        if self.local_global_ratio > 0:
+            is_global = (i % (self.local_global_ratio + 1)) == self.local_global_ratio
+        else:
+            is_global = True
+        return dict(attn=True, ssm=False, moe=is_moe, ffn=not is_moe,
+                    global_attn=is_global)
+
+    def is_global_layer_flags(self) -> Tuple[bool, ...]:
+        return tuple(self.layer_kind(i)["global_attn"] for i in range(self.n_layers))
+
+    # --------------------------------------------------------------- variants
+    def reduced(self) -> "ArchConfig":
+        """Reduced smoke-test variant of the same family: 2 layers (enough to hit
+        every layer kind in the pattern), d_model<=512, <=4 experts."""
+        n_layers = 2
+        if self.family == "hybrid":
+            n_layers = self.attn_every or 2   # one full pattern block
+        elif self.local_global_ratio > 0:
+            n_layers = self.local_global_ratio + 1
+        d_model = min(self.d_model, 128)
+        n_heads = min(self.n_heads, 4)
+        n_kv = min(self.n_kv_heads, max(1, n_heads // 2)) if self.n_kv_heads else n_heads
+        if self.n_kv_heads == self.n_heads:
+            n_kv = n_heads
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=32,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else self.ssm_headdim,
+            ssm_chunk=8,
+            n_enc_layers=2 if self.is_encoder_decoder else 0,
+            enc_seq=16 if self.is_encoder_decoder else self.enc_seq,
+            num_frontend_tokens=min(self.num_frontend_tokens, 8),
+            sliding_window=min(self.sliding_window, 8) if self.sliding_window else 0,
+            long_context_window=64,
+            attention_sink=4,
+            attn_chunk=16,
+            vocab_pad_multiple=64,
+            remat=False,
+        )
+
+    def small_sibling(self, scale: int = 4) -> "ArchConfig":
+        """The 'S' role of the hybrid-routing pair for this family: a same-family
+        model with ~1/scale the layer count and width."""
+        def sh(x, m=1):
+            return max(m, x // scale) if x else 0
+        n_heads = max(2, self.n_heads // scale)
+        n_kv = min(self.n_kv_heads, n_heads) if self.n_kv_heads else n_heads
+        return dataclasses.replace(
+            self,
+            name=self.name + f"-s{scale}",
+            n_layers=max(2, self.n_layers // scale),
+            d_model=_round_up(sh(self.d_model, 64), 64),
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=_round_up(sh(self.d_ff, 64), 64) if self.d_ff else 0,
+            n_enc_layers=max(2, self.n_enc_layers // scale) if self.is_encoder_decoder else 0,
+        )
+
+
+# ------------------------------------------------------------------ input shapes
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,251 @@
+"""Decoder-only LM covering the dense / moe / ssm / vlm families (plus the
+gemma3 5:1 local:global sliding-window pattern).
+
+Layer stacks are ``jax.lax.scan``-ned with weights stacked on a leading layer
+axis — this keeps the HLO one-layer-sized so 64–88 layer production configs
+compile quickly in the AOT dry-run. Heterogeneity across layers (gemma3's
+local/global flag) is passed as scanned per-layer data, not as separate param
+structures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .common import (dtype_of, embed, init_embedding, init_mlp, init_rmsnorm,
+                     mlp, rmsnorm, stack_params, unembed)
+from repro.sharding.context import constrain_batch
+
+
+# ------------------------------------------------------------------- layer init
+def init_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    if cfg.family == "ssm":
+        return {"ln": init_rmsnorm(cfg.d_model, dt),
+                "ssm": ssm_lib.init_ssm(ks[0], cfg)}
+    p = {"ln1": init_rmsnorm(cfg.d_model, dt),
+         "attn": attn.init_attention(ks[0], cfg),
+         "ln2": init_rmsnorm(cfg.d_model, dt)}
+    if cfg.n_experts > 0:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_decoder(key, cfg) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = stack_params([init_layer(k, cfg) for k in layer_keys])
+    params = {
+        "embed": init_embedding(k_emb, cfg),
+        "layers": layers,
+        "ln_f": init_rmsnorm(cfg.d_model, dtype_of(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        from .common import init_output_head
+        params["head"] = init_output_head(k_head, cfg)
+    return params
+
+
+# ---------------------------------------------------------------- layer apply
+def _layer_forward(layer_p, x, cfg, is_global, positions):
+    """One layer, full-sequence. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = rmsnorm(layer_p["ln"], x, cfg.norm_eps)
+        return x + ssm_lib.ssm_forward(layer_p["ssm"], h, cfg), aux
+    h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+    x = x + attn.attention_forward(layer_p["attn"], h, cfg,
+                                   is_global=is_global, positions=positions)
+    h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts > 0:
+        y, aux = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+    else:
+        y = mlp(layer_p["mlp"], h)
+    return x + y, aux
+
+
+def _embed_inputs(params, batch: Dict[str, Any], cfg):
+    """Token embeddings, with stub-frontend embeddings prepended for vlm."""
+    x = embed(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision_stub" and cfg.num_frontend_tokens > 0:
+        fe = batch["frontend_embeds"].astype(x.dtype)  # (B, n_front, D) precomputed
+        x = jnp.concatenate([fe, x], axis=1)
+    return constrain_batch(x)
+
+
+def _logical_positions(cfg, seq: int):
+    return jnp.arange(seq)
+
+
+# -------------------------------------------------------------------- forward
+def decoder_forward(params, batch, cfg):
+    """Teacher-forced forward. Returns (logits over token positions, aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, D = x.shape
+    positions = _logical_positions(cfg, S)
+    flags = jnp.asarray(cfg.is_global_layer_flags())
+
+    def body(x, xs):
+        layer_p, is_global = xs
+        x, aux = _layer_forward(layer_p, x, cfg, is_global, positions)
+        return constrain_batch(x), aux
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, auxs = jax.lax.scan(fn, x, (params["layers"], flags))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    n_front = cfg.num_frontend_tokens if cfg.frontend == "vision_stub" else 0
+    if n_front:
+        x = x[:, n_front:]
+    logits = _unembed(params, x, cfg)
+    return logits, jnp.sum(auxs)
+
+
+def _unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x, cfg.vocab_size)
+    from .common import output_head
+    return output_head(params["head"], x, cfg.vocab_size)
+
+
+# -------------------------------------------------------------------- prefill
+def decoder_prefill(params, batch, cfg, max_seq: int | None = None):
+    """Run the prompt; return (last-token logits, cache). Cache KV buffers are
+    sized ``max_seq`` (>= prompt length) so decode can append in place."""
+    x = _embed_inputs(params, batch, cfg)
+    B, S, D = x.shape
+    max_seq = max(max_seq or S, S)
+    positions = _logical_positions(cfg, S)
+    flags = jnp.asarray(cfg.is_global_layer_flags())
+
+    if cfg.family == "ssm":
+        def body(x, layer_p):
+            h = rmsnorm(layer_p["ln"], x, cfg.norm_eps)
+            di, N = cfg.d_inner, cfg.ssm_state
+            # re-run projection pieces to extract final state/conv tail
+            y, state, tail = _ssm_prefill_layer(layer_p["ssm"], h, cfg)
+            return constrain_batch(x + y), (state, tail)
+        x, (h_states, tails) = jax.lax.scan(body, x, params["layers"])
+        cache = {"ssm_h": h_states, "ssm_conv": tails, "pos": jnp.array(S, jnp.int32)}
+    else:
+        def body(x, xs):
+            layer_p, is_global = xs
+            h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+            o, (k, v) = attn.prefill_attention(layer_p["attn"], h, cfg,
+                                               is_global=is_global,
+                                               positions=positions)
+            x = x + o
+            h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+            if cfg.n_experts > 0:
+                y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+            else:
+                y = mlp(layer_p["mlp"], h)
+            pad = max_seq - k.shape[1]
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return constrain_batch(x + y), (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], flags))
+        cache = {"k": ks, "v": vs, "pos": jnp.array(S, jnp.int32)}
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def _ssm_prefill_layer(p, h, cfg):
+    """SSD forward that also returns (final_state, conv_tail) for decoding."""
+    Bsz, S, D = h.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = h @ p["w_in"]
+    z = zxbcdt[..., :di]
+    xBC_raw = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., di + di + 2 * N:]
+    xBC = ssm_lib._causal_conv(xBC_raw, p["conv_w"])
+    xs = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    pad = (-S) % cfg.ssm_chunk
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_p = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        C_p = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xs_p, dt_p, B_p, C_p = xs, dt, Bmat, Cmat
+    y, final_state = ssm_lib.ssd_chunked(xs_p, dt_p, A, B_p, C_p, cfg.ssm_chunk,
+                                         use_pallas=cfg.use_pallas)
+    y = y[:, :S] + xs * p["D"][None, None, :, None].astype(h.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    cw = cfg.ssm_conv_width
+    tail = xBC_raw[:, -(cw - 1):, :]
+    if S < cw - 1:  # tiny prompts: left-pad
+        tail = jnp.pad(xBC_raw, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+    return y @ p["w_out"], final_state, tail
+
+
+# --------------------------------------------------------------------- decode
+def init_decode_cache(cfg, batch: int, max_seq: int):
+    if cfg.family == "ssm":
+        st = ssm_lib.init_ssm_state(cfg, batch, cfg.n_layers)
+        return {"ssm_h": st["h"], "ssm_conv": st["conv"],
+                "pos": jnp.array(0, jnp.int32)}
+    kv = attn.init_kv_cache(cfg, batch, max_seq, cfg.n_layers)
+    return {"k": kv["k"], "v": kv["v"], "pos": jnp.array(0, jnp.int32)}
+
+
+def decoder_decode_step(params, cache, token, cfg, *, windowed=False):
+    """One decode step. token: (B, 1) int32. Returns (logits (B, V), cache)."""
+    pos = cache["pos"]
+    x = embed(params["embed"], token)
+    flags = jnp.asarray(cfg.is_global_layer_flags())
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            layer_p, h_st, tail = xs
+            hn = rmsnorm(layer_p["ln"], x, cfg.norm_eps)
+            y, h_new, tail_new = ssm_lib.ssm_decode_step(layer_p["ssm"], hn,
+                                                         h_st, tail, cfg)
+            return constrain_batch(x + y), (h_new, tail_new)
+        x, (h_new, tails_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm_h"], cache["ssm_conv"]))
+        new_cache = {"ssm_h": h_new, "ssm_conv": tails_new, "pos": pos + 1}
+    else:
+        # all-global stacks keep a STATIC flag so the flash-decode
+        # (shard_map) fast path can engage; mixed local/global stacks
+        # (gemma3) scan the per-layer flag.
+        uniform_global = all(cfg.is_global_layer_flags())
+
+        def body(x, xs):
+            layer_p, lk, lv, is_global = xs
+            if uniform_global:
+                is_global = True
+            h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+            o, lk, lv = attn.decode_attention(layer_p["attn"], h, lk, lv, pos,
+                                              cfg, is_global=is_global,
+                                              windowed=windowed)
+            x = x + o
+            h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+            if cfg.n_experts > 0:
+                y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+            else:
+                y = mlp(layer_p["mlp"], h)
+            return constrain_batch(x + y), (lk, lv)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"], flags))
+        new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, new_cache

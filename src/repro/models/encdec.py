@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv+mel frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, enc_seq, d_model). The transformer backbone
+(encoder self-attn, decoder self-attn + cross-attn) is fully implemented.
+
+Adaptations (DESIGN.md): RoPE for decoder self-attention instead of learned
+positions (TPU-idiomatic, same role); SwiGLU FFN throughout for substrate
+uniformity; encoder uses learned absolute position embeddings like the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import (dtype_of, embed, init_embedding, init_mlp, init_rmsnorm,
+                     mlp, rmsnorm, stack_params)
+from .decoder import _unembed
+from repro.sharding.context import constrain_batch
+
+
+def init_enc_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = dtype_of(cfg)
+    return {"ln1": init_rmsnorm(cfg.d_model, dt),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(cfg.d_model, dt),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)}
+
+
+def init_dec_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    return {"ln1": init_rmsnorm(cfg.d_model, dt),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln_x": init_rmsnorm(cfg.d_model, dt),
+            "cross": attn.init_attention(ks[1], cfg),
+            "ln2": init_rmsnorm(cfg.d_model, dt),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dt)}
+
+
+def init_encdec(key, cfg) -> dict:
+    k_emb, k_pos, k_enc, k_dec, k_head = jax.random.split(key, 5)
+    dt = dtype_of(cfg)
+    p_head = {}
+    if not cfg.tie_embeddings:
+        from .common import init_output_head
+        p_head["head"] = init_output_head(k_head, cfg)
+    return {
+        **p_head,
+        "embed": init_embedding(k_emb, cfg),
+        "enc_pos": (jax.random.normal(k_pos, (cfg.enc_seq, cfg.d_model)) * 0.02
+                    ).astype(dt),
+        "enc_layers": stack_params([init_enc_layer(k, cfg)
+                                    for k in jax.random.split(k_enc, cfg.n_enc_layers)]),
+        "enc_ln_f": init_rmsnorm(cfg.d_model, dt),
+        "dec_layers": stack_params([init_dec_layer(k, cfg)
+                                    for k in jax.random.split(k_dec, cfg.n_layers)]),
+        "ln_f": init_rmsnorm(cfg.d_model, dt),
+    }
+
+
+def encode(params, enc_embeds, cfg):
+    """enc_embeds: (B, enc_seq, D) stub frontend output."""
+    x = enc_embeds.astype(dtype_of(cfg)) + params["enc_pos"][None, :enc_embeds.shape[1]]
+
+    def body(x, layer_p):
+        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+        x = x + attn.attention_forward(layer_p["attn"], h, cfg, causal=False,
+                                       use_rope=False)
+        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+        return constrain_batch(x + mlp(layer_p["mlp"], h)), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return rmsnorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def _cross_kv(layer_p, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["cross"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["cross"]["wv"])
+    return k, v
+
+
+def _dec_layer(layer_p, x, enc_out, cfg, positions):
+    h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+    x = x + attn.attention_forward(layer_p["attn"], h, cfg, positions=positions)
+    h = rmsnorm(layer_p["ln_x"], x, cfg.norm_eps)
+    kv = _cross_kv(layer_p, enc_out, cfg)
+    x = x + attn.attention_forward(layer_p["cross"], h, cfg, causal=False,
+                                   kv_override=kv, use_rope=False)
+    h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+    return x + mlp(layer_p["mlp"], h)
+
+
+def encdec_forward(params, batch, cfg):
+    """batch: {enc_embeds (B,enc_seq,D), tokens (B,S)} -> (logits, aux)."""
+    enc_out = encode(params, batch["enc_embeds"], cfg)
+    x = embed(params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, layer_p):
+        return constrain_batch(_dec_layer(layer_p, x, enc_out, cfg, positions)), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["dec_layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def encdec_prefill(params, batch, cfg, max_seq: int | None = None):
+    """Encode once, run decoder prompt, cache self-KV + per-layer cross-KV."""
+    enc_out = encode(params, batch["enc_embeds"], cfg)
+    x = embed(params["embed"], batch["tokens"])
+    B, S, D = x.shape
+    max_seq = max(max_seq or S, S)
+    positions = jnp.arange(S)
+
+    def body(x, layer_p):
+        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+        o, (k, v) = attn.prefill_attention(layer_p["attn"], h, cfg,
+                                           positions=positions)
+        x = x + o
+        h = rmsnorm(layer_p["ln_x"], x, cfg.norm_eps)
+        ck, cv = _cross_kv(layer_p, enc_out, cfg)
+        x = x + attn.attention_forward(layer_p["cross"], h, cfg, causal=False,
+                                       kv_override=(ck, cv), use_rope=False)
+        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(layer_p["mlp"], h)
+        pad = max_seq - k.shape[1]
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return constrain_batch(x), (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)[:, 0]
+    cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+             "pos": jnp.array(S, jnp.int32)}
+    return logits, cache
+
+
+def init_encdec_cache(cfg, batch: int, max_seq: int):
+    K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = dtype_of(cfg)
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_seq, K, Dh), dt),
+        "v": jnp.zeros((L, batch, max_seq, K, Dh), dt),
+        "cross_k": jnp.zeros((L, batch, cfg.enc_seq, K, Dh), dt),
+        "cross_v": jnp.zeros((L, batch, cfg.enc_seq, K, Dh), dt),
+        "pos": jnp.array(0, jnp.int32),
+    }
+
+
+def encdec_decode_step(params, cache, token, cfg, *, windowed=False):
+    pos = cache["pos"]
+    x = embed(params["embed"], token)
+
+    def body(x, xs):
+        layer_p, lk, lv, ck, cv = xs
+        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+        o, lk, lv = attn.decode_attention(layer_p["attn"], h, lk, lv, pos, cfg,
+                                          windowed=windowed)
+        x = x + o
+        h = rmsnorm(layer_p["ln_x"], x, cfg.norm_eps)
+        x = x + attn.decode_cross_attention(layer_p["cross"], h, ck, cv, cfg)
+        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+        x = constrain_batch(x + mlp(layer_p["mlp"], h))
+        return x, (lk, lv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}

@@ -1,0 +1,63 @@
+"""Uniform model bundle API over all architecture families.
+
+``build_model(cfg)`` returns a ``ModelBundle`` with pure functions:
+  init(key) -> params
+  forward(params, batch) -> (logits, aux)              # teacher-forced
+  prefill(params, batch, max_seq) -> (last_logits, cache)
+  decode_step(params, cache, token, windowed=False) -> (logits, cache)
+  init_cache(batch_size, max_seq) -> cache
+
+``batch`` is a dict: {"tokens": (B, S) int32} plus, per family,
+{"frontend_embeds": (B, n_front, D)} (vlm) or {"enc_embeds": (B, enc_seq, D)}
+(audio enc-dec). Stub frontends supply these embeddings (see frontends.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+from .config import ArchConfig
+from . import decoder, encdec, hybrid
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.is_encoder_decoder:
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            forward=lambda p, b: encdec.encdec_forward(p, b, cfg),
+            prefill=lambda p, b, max_seq=None: encdec.encdec_prefill(p, b, cfg, max_seq),
+            decode_step=lambda p, c, t, windowed=False:
+                encdec.encdec_decode_step(p, c, t, cfg, windowed=windowed),
+            init_cache=lambda bs, ms: encdec.init_encdec_cache(cfg, bs, ms),
+        )
+    if cfg.family == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid(key, cfg),
+            forward=lambda p, b: hybrid.hybrid_forward(p, b, cfg),
+            prefill=lambda p, b, max_seq=None: hybrid.hybrid_prefill(p, b, cfg, max_seq),
+            decode_step=lambda p, c, t, windowed=False:
+                hybrid.hybrid_decode_step(p, c, t, cfg, windowed=windowed),
+            init_cache=lambda bs, ms: hybrid.init_hybrid_cache(cfg, bs, ms),
+        )
+    # dense / moe / ssm / vlm all share the decoder-only path
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: decoder.init_decoder(key, cfg),
+        forward=lambda p, b: decoder.decoder_forward(p, b, cfg),
+        prefill=lambda p, b, max_seq=None: decoder.decoder_prefill(p, b, cfg, max_seq),
+        decode_step=lambda p, c, t, windowed=False:
+            decoder.decoder_decode_step(p, c, t, cfg, windowed=windowed),
+        init_cache=lambda bs, ms: decoder.init_decode_cache(cfg, bs, ms),
+    )

@@ -1,0 +1,97 @@
+"""Top-k routed mixture-of-experts FFN (GShard-style, group-local dispatch).
+
+GShard semantics: tokens are dispatched within *groups* with a per-group
+capacity; we use one group per batch row, so the sort/rank/scatter dispatch
+is local to the data shard under SPMD (no global token sort → no giant
+collectives). The only cross-device traffic the layer induces is the expert
+einsum against expert-parallel weights (the canonical MoE all-to-all when
+E % model == 0, or tensor-parallel d_ff otherwise).
+
+Dispatch is sort+gather (megablocks-lite) rather than one-hot einsums, so
+buffers stay O(G·k·S·D) instead of O(G·S·E·C). Tokens over capacity are
+dropped (standard). Returns the Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of
+
+
+def init_moe(key, cfg) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gate_logits": dense_init(ks[0], D, E, dt),
+        "w_in": (jax.random.truncated_normal(ks[1], -2., 2., (E, D, F), jnp.float32)
+                 * (D ** -0.5)).astype(dt),
+        "w_glu": (jax.random.truncated_normal(ks[2], -2., 2., (E, D, F), jnp.float32)
+                  * (D ** -0.5)).astype(dt),
+        "w_out": (jax.random.truncated_normal(ks[3], -2., 2., (E, F, D), jnp.float32)
+                  * (F ** -0.5)).astype(dt),
+    }
+
+
+def capacity_of(group_tokens: int, cfg) -> int:
+    c = int(cfg.top_k * group_tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((c + 127) // 128) * 128)  # MXU-aligned
+
+
+def _dispatch_group(xg, top_i, top_w, E: int, k: int, C: int):
+    """Group-local dispatch. xg: (T, D); top_i/top_w: (T, k).
+    Returns (buf (E, C, D), combine metadata)."""
+    T, D = xg.shape
+    A = T * k
+    expert_ids = top_i.reshape(A)
+    sort_idx = jnp.argsort(expert_ids)                  # local, stable
+    sorted_e = expert_ids[sort_idx]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank = jnp.arange(A) - seg_start[sorted_e]
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)  # E*C = drop slot
+    token_of = sort_idx // k
+    buf = jnp.zeros((E * C + 1, D), xg.dtype).at[slot].set(xg[token_of])
+    return buf[:-1].reshape(E, C, D), (slot, sort_idx, keep)
+
+
+def _combine_group(out, meta, top_w, T: int, k: int):
+    """out: (E*C+1, D) expert outputs (with drop row); -> (T, D)."""
+    slot, sort_idx, keep = meta
+    D = out.shape[-1]
+    per_assign = out[slot] * keep[:, None].astype(out.dtype)
+    unsorted = jnp.zeros((T * k, D), out.dtype).at[sort_idx].set(per_assign)
+    return (unsorted.reshape(T, k, D)
+            * top_w[..., None].astype(out.dtype)).sum(axis=1)
+
+
+def moe_forward(params, x, cfg):
+    """x: (B, S, D) -> (y, aux_loss). One dispatch group per batch row."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity_of(S, cfg)
+
+    gate_logits = (x @ params["w_gate_logits"]).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                           # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss (global means are cheap scalars)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    dispatch = jax.vmap(lambda xg, ti, tw: _dispatch_group(xg, ti, tw, E, k, C))
+    buf, meta = dispatch(x, top_i, top_w)               # buf: (B, E, C, D)
+
+    act = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_glu"])) \
+        * jnp.einsum("becd,edf->becf", buf, params["w_in"])
+    out = jnp.einsum("becf,efd->becd", act, params["w_out"])
+    out = out.reshape(B, E * C, D)
+    out = jnp.concatenate([out, jnp.zeros((B, 1, D), out.dtype)], axis=1)
+
+    combine = jax.vmap(lambda o, m, tw: _combine_group(o, m, tw, S, k))
+    y = combine(out, meta, top_w)
+    return y, aux

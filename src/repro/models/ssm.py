@@ -1,0 +1,211 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer layer.
+
+Forward uses the chunked SSD algorithm: intra-chunk quadratic (attention-like)
+term + inter-chunk recurrent state passing via lax.scan. The intra-chunk
+compute is the hot spot and has a Pallas kernel (kernels/ssd_scan); the pure
+jnp path below is the oracle and the dry-run path.
+
+Decode maintains a constant-size recurrent state (B, H, P, N) + conv tail —
+this is what makes long_500k native for ssm/hybrid families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, init_rmsnorm, rmsnorm
+
+
+def init_ssm(key, cfg) -> dict:
+    D = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_nheads
+    G = 1  # single B/C group
+    cw = cfg.ssm_conv_width
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * G * N + H  # z, x, B, C, dt
+    p = {
+        "w_in": dense_init(ks[0], D, d_in_proj, dt),
+        "conv_w": (jax.random.truncated_normal(ks[1], -2., 2., (cw, di + 2 * G * N),
+                                               jnp.float32) * 0.2).astype(dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))).astype(jnp.float32),
+        "norm": init_rmsnorm(di, dt),
+        "w_out": dense_init(ks[4], di, D, dt),
+    }
+    return p
+
+
+def _split_proj(zxbcdt, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w):
+    """Depthwise causal conv over seq. xBC: (B, S, C); conv_w: (W, C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False):
+    """Chunked SSD. Shapes: x (b, S, H, P); dt (b, S, H); A (H,);
+    B, C (b, S, N) [single group broadcast over heads]. Returns (y, final_state).
+
+    Math: h_t = exp(dt_t*A) h_{t-1} + dt_t * B_t x_t ; y_t = C_t^T h_t.
+
+    The jnp path scans SEQUENTIALLY over chunks so only one chunk's (l, l, H)
+    decay tensor is live at a time (memory-bounded, mirrors the Pallas
+    kernel's per-chunk grid); the Pallas path launches all chunks in the
+    kernel grid and does the state recurrence in XLA.
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xs = x.reshape(b, nc, chunk, H, P)
+    dts = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Bs = B.reshape(b, nc, chunk, N)
+    Cs = C.reshape(b, nc, chunk, N)
+
+    dA = dts * A  # (b, nc, l, H) ; A negative
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y_diag, states = ssd_ops.ssd_chunk(xs, dts, dA_cum, Bs, Cs)
+        chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b, nc, H)
+
+        def step(h, inp):
+            st, dec = inp
+            h_new = h * dec[..., None, None] + st
+            return h_new, h  # emit state entering the chunk
+
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+        final, h_prev = jax.lax.scan(
+            step, h0, (jnp.moveaxis(states, 1, 0),
+                       jnp.moveaxis(chunk_decay, 1, 0)))
+        h_prev = jnp.moveaxis(h_prev, 0, 1)  # (b, nc, H, P, N)
+        state_decay = jnp.exp(dA_cum)
+        y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cs.astype(jnp.float32),
+                           h_prev, state_decay)
+        y = (y_diag + y_off).reshape(b, S, H, P)
+        return y.astype(x.dtype), final
+
+    def chunk_step(h, inp):
+        xc, dtc, dac, Bc, Cc = inp
+        y_diag, st = ssd_chunk_reference(
+            xc[:, None], dtc[:, None], dac[:, None], Bc[:, None], Cc[:, None])
+        y_diag = y_diag[:, 0]          # (b, l, H, P)
+        st = st[:, 0]                  # (b, H, P, N)
+        state_decay = jnp.exp(dac)     # (b, l, H)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", Cc.astype(jnp.float32), h,
+                           state_decay)
+        dec = jnp.exp(dac[:, -1, :])   # (b, H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, (y_diag + y_off).astype(x.dtype)
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dts, 1, 0),
+         jnp.moveaxis(dA_cum, 1, 0), jnp.moveaxis(Bs, 1, 0),
+         jnp.moveaxis(Cs, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, P)
+    return y, final
+
+
+def ssd_chunk_reference(xs, dts, dA_cum, Bs, Cs):
+    """Intra-chunk quadratic term + per-chunk output states (pure jnp oracle).
+
+    xs (b,nc,l,H,P); dts (b,nc,l,H); dA_cum (b,nc,l,H); Bs/Cs (b,nc,l,N).
+    Returns y_diag (b,nc,l,H,P) fp32, states (b,nc,H,P,N) fp32.
+    """
+    l = xs.shape[2]
+    # decay(i,j) = exp(dA_cum_i - dA_cum_j) for j<=i
+    rel = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cs.astype(jnp.float32),
+                        Bs.astype(jnp.float32))
+    gated = scores[..., None] * decay * dts[:, :, None, :, :]  # (b,nc,i,j,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", gated, xs.astype(jnp.float32))
+    # chunk output state: sum_j exp(dA_cum_last - dA_cum_j) dt_j B_j x_j
+    last = dA_cum[:, :, -1:, :]  # (b,nc,1,H)
+    w = jnp.exp(last - dA_cum) * dts  # (b,nc,l,H)
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn", w, Bs.astype(jnp.float32),
+                        xs.astype(jnp.float32))
+    return y_diag, states
+
+
+def ssm_forward(params, x, cfg):
+    """Full-sequence SSD mixer. x: (B, S, D) -> (B, S, D)."""
+    Bsz, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = x @ params["w_in"]
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(xBC, params["conv_w"])
+    xs = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    pad = (-S) % cfg.ssm_chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    y, _ = ssd_chunked(xs, dt, A, Bmat, Cmat, cfg.ssm_chunk,
+                       use_pallas=cfg.use_pallas)
+    y = y[:, :S]
+    y = y + xs[:, :S] * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["w_out"]
+
+
+# ------------------------------------------------------------------- decoding
+def init_ssm_state(cfg, batch: int, n_layers: int):
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    di = cfg.d_inner
+    cw = cfg.ssm_conv_width
+    return {
+        "h": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cw - 1, di + 2 * N), dtype_of(cfg)),
+    }
+
+
+def ssm_decode_step(params, x_t, h, conv_tail, cfg):
+    """One-token recurrent step. x_t: (B, 1, D); h: (B, H, P, N) fp32;
+    conv_tail: (B, cw-1, di+2N). Returns (y_t, h_new, conv_tail_new)."""
+    Bsz = x_t.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = x_t[:, 0] @ params["w_in"]  # (B, d_in_proj)
+    z = zxbcdt[:, :di]
+    xBC_t = zxbcdt[:, di:di + di + 2 * N]
+    dt_raw = zxbcdt[:, di + di + 2 * N:]
+    # conv over [tail, current]
+    window = jnp.concatenate([conv_tail, xBC_t[:, None, :]], axis=1)  # (B, cw, C)
+    xBC = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, params["conv_w"]))
+    conv_tail_new = window[:, 1:]
+    xh = xBC[:, :di].reshape(Bsz, H, P)
+    Bm = xBC[:, di:di + N].astype(jnp.float32)
+    Cm = xBC[:, di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * A)  # (B, H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, xh.astype(jnp.float32))
+    h_new = h * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h_new)
+    y = y + xh.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(Bsz, di).astype(x_t.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return (y @ params["w_out"])[:, None, :], h_new, conv_tail_new

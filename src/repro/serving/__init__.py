@@ -1,0 +1,3 @@
+from .generate import build_generate_fn, sample_responses
+from .engine import Engine, ServeStats
+from .hybrid import HybridEngine, HybridResult, build_fused_hybrid_step

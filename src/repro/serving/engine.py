@@ -1,0 +1,60 @@
+"""Single-model serving engine: fixed-shape batched request serving with
+bucketed batches (powers of two) so jit caches stay warm across requests."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.models.model import ModelBundle
+from .generate import build_generate_fn
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    gen_tokens: int = 0
+    wall_s: float = 0.0
+
+
+class Engine:
+    """Serves one model. Queries are padded token arrays (N, Lq)."""
+
+    def __init__(self, bundle: ModelBundle, params, max_new_tokens: int = 16,
+                 temperature: float = 0.0):
+        self.bundle = bundle
+        self.params = params
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self._gen = build_generate_fn(bundle, max_new_tokens, temperature)
+        self.stats = ServeStats()
+
+    def serve(self, query_tokens: np.ndarray, seed: int = 0
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (responses (N, T), lengths (N,))."""
+        n = len(query_tokens)
+        b = _bucket(n)
+        padded = np.full((b, query_tokens.shape[1]), tok.PAD, np.int32)
+        padded[:n] = query_tokens
+        t0 = time.time()
+        toks, lens = self._gen(self.params, {"tokens": jnp.asarray(padded)},
+                               jax.random.PRNGKey(seed))
+        toks, lens = np.asarray(toks)[:n], np.asarray(lens)[:n]
+        self.stats.requests += n
+        self.stats.batches += 1
+        self.stats.gen_tokens += int(lens.sum())
+        self.stats.wall_s += time.time() - t0
+        return toks, lens

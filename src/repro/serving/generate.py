@@ -1,0 +1,78 @@
+"""Batched autoregressive generation: prefill + lax.scan decode with
+temperature sampling, EOS termination masking, and fixed shapes (jit-stable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.models.model import ModelBundle
+
+
+def _sample(key, logits, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+def build_generate_fn(bundle: ModelBundle, max_new_tokens: int,
+                      temperature: float, windowed: bool = False):
+    """Returns a jit'd fn(params, inputs, key) -> (tokens (B, T), lengths)."""
+
+    def gen(params, inputs: Dict[str, jnp.ndarray], key):
+        prompt_len = inputs["tokens"].shape[1]
+        extra = bundle.cfg.num_frontend_tokens \
+            if bundle.cfg.frontend == "vision_stub" else 0
+        last_logits, cache = bundle.prefill(
+            params, inputs, prompt_len + extra + max_new_tokens)
+
+        def step(carry, key_t):
+            logits, cache, done = carry
+            nxt = _sample(key_t, logits, temperature)
+            nxt = jnp.where(done, jnp.int32(tok.PAD), nxt)
+            done = done | (nxt == tok.EOS)
+            logits, cache = bundle.decode_step(params, cache, nxt[:, None],
+                                               windowed=windowed)
+            return (logits, cache, done), nxt
+
+        B = inputs["tokens"].shape[0]
+        keys = jax.random.split(key, max_new_tokens)
+        (_, _, done), toks = jax.lax.scan(
+            step, (last_logits, cache, jnp.zeros((B,), bool)), keys)
+        toks = jnp.moveaxis(toks, 0, 1)  # (B, T)
+        lengths = jnp.where(toks == tok.EOS,
+                            jnp.arange(max_new_tokens)[None, :] + 1,
+                            max_new_tokens + 1).min(axis=1)
+        lengths = jnp.minimum(lengths, max_new_tokens)
+        return toks, lengths
+
+    return jax.jit(gen)
+
+
+def sample_responses(bundle: ModelBundle, params, query_tokens: np.ndarray,
+                     n_samples: int, max_new_tokens: int,
+                     temperature: float = 0.8, seed: int = 0,
+                     batch_size: int = 256) -> tuple[np.ndarray, np.ndarray]:
+    """Draw n_samples responses/query (paper §3.2 uses 10).
+
+    Returns (responses (N, n_samples, T) int32, lengths (N, n_samples))."""
+    gen = build_generate_fn(bundle, max_new_tokens, temperature)
+    N = len(query_tokens)
+    out = np.zeros((N, n_samples, max_new_tokens), np.int32)
+    lens = np.zeros((N, n_samples), np.int32)
+    key = jax.random.PRNGKey(seed)
+    for s in range(n_samples):
+        key, sub = jax.random.split(key)
+        for i in range(0, N, batch_size):
+            chunk = jnp.asarray(query_tokens[i:i + batch_size])
+            k = jax.random.fold_in(sub, i)
+            toks, ln = gen(params, {"tokens": chunk}, k)
+            out[i:i + batch_size, s] = np.asarray(toks)
+            lens[i:i + batch_size, s] = np.asarray(ln)
+    return out, lens

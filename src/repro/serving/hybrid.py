@@ -1,0 +1,86 @@
+"""Hybrid two-model serving — the paper's deployment artifact.
+
+``HybridEngine`` is the host-side orchestrator: score queries with the
+router, partition the batch, serve each partition on its engine, and account
+cost advantage. This mirrors the paper's edge/cloud split (Fig. 2): in a real
+deployment the small-engine partition never leaves the edge device.
+
+``build_fused_hybrid_step`` is the TPU-side artifact for the dry-run: ONE
+XLA program lowering router + small-model decode + large-model decode with a
+routing mask selecting per-query outputs. XLA needs static shapes, so both
+models run over the full batch and the mask selects — the dry-run uses this
+to prove the whole hybrid stack (router included) shards on the production
+mesh. Cost accounting on real hardware comes from the host-side engine,
+where the partition is physical, not masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import CostMeter, HybridRouter
+from repro.models.encoder import RouterConfig, router_encode
+from repro.models.model import ModelBundle
+from .engine import Engine
+
+
+@dataclasses.dataclass
+class HybridResult:
+    responses: np.ndarray     # (N, T)
+    lengths: np.ndarray       # (N,)
+    routed_small: np.ndarray  # (N,) bool
+    scores: np.ndarray        # (N,)
+
+
+class HybridEngine:
+    def __init__(self, router: HybridRouter, small: Engine, large: Engine):
+        self.router = router
+        self.small = small
+        self.large = large
+        self.meter = CostMeter()
+
+    def serve(self, query_tokens: np.ndarray, query_mask: np.ndarray,
+              seed: int = 0) -> HybridResult:
+        scores = np.asarray(self.router.scores(jnp.asarray(query_tokens),
+                                               jnp.asarray(query_mask)))
+        to_small = scores >= self.router.threshold
+        T = self.small.max_new_tokens
+        N = len(query_tokens)
+        responses = np.zeros((N, T), np.int32)
+        lengths = np.zeros((N,), np.int32)
+        if to_small.any():
+            r, l = self.small.serve(query_tokens[to_small], seed)
+            responses[to_small], lengths[to_small] = r, l
+        if (~to_small).any():
+            r, l = self.large.serve(query_tokens[~to_small], seed)
+            responses[~to_small], lengths[~to_small] = r, l
+        self.meter.record(to_small, T)
+        return HybridResult(responses, lengths, to_small, scores)
+
+
+def build_fused_hybrid_step(router_cfg: RouterConfig, small: ModelBundle,
+                            large: ModelBundle, threshold: float = 0.5):
+    """One-token hybrid decode step as a single lowerable program.
+
+    fn(router_params, small_params, large_params, router_tokens, router_mask,
+       small_cache, large_cache, token) -> (logits, small_cache, large_cache,
+       route_mask)
+    """
+
+    def step(router_params, small_params, large_params, router_tokens,
+             router_mask, small_cache, large_cache, token):
+        score = jax.nn.sigmoid(router_encode(router_params, router_tokens,
+                                             router_mask, router_cfg))
+        to_small = score >= threshold                       # (B,)
+        ls, sc = small.decode_step(small_params, small_cache, token)
+        ll, lc = large.decode_step(large_params, large_cache, token)
+        # vocabs may differ in padding; align on the smaller padded width
+        V = min(ls.shape[-1], ll.shape[-1])
+        logits = jnp.where(to_small[:, None], ls[:, :V], ll[:, :V])
+        return logits, sc, lc, to_small
+
+    return step

@@ -1,0 +1,85 @@
+"""Activation-sharding constraint context.
+
+XLA's SPMD partitioner picks activation layouts by local cost model; with 2D
+(fsdp × tensor) weight sharding it can decide to all-gather the *batch* and
+shard activations by features (observed on the CPU backend), which destroys
+the FSDP memory plan. Production frameworks pin activations batch-sharded at
+layer boundaries with with_sharding_constraint; models call
+``constrain_batch(x)`` which no-ops unless a launcher installed a context.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = contextvars.ContextVar("activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes, seq_shard: bool = False):
+    """batch_axes: mesh axis (or tuple) the leading batch dim shards over.
+
+    seq_shard=True additionally shards dim 1 (sequence) of rank-3 activations
+    over the "model" axis — Megatron-style sequence parallelism. Layer-
+    boundary tensors are what scan-remat SAVES, so this divides the dominant
+    training-memory term by the model-axis size (the TP all-reduce becomes
+    reduce-scatter + all-gather, same bytes). Applied only when the seq dim
+    divides the axis.
+    """
+    token = _CTX.set((mesh, batch_axes, seq_shard))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain_batch(x):
+    """Pin a (B, ...) activation to batch-sharded (+ optionally seq-sharded)."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim == 0:
+        return x
+    mesh, ba, seq_shard = ctx
+    dims = [ba] + [None] * (x.ndim - 1)
+    if (seq_shard and x.ndim == 3 and "model" in mesh.shape
+            and x.shape[1] % mesh.shape["model"] == 0 and x.shape[1] > 1):
+        dims[1] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))
+
+
+def constrain(x, *spec_dims):
+    """Pin an activation to an explicit PartitionSpec (given per-dim)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec_dims)))
+
+
+def batch_axis_name():
+    ctx = _CTX.get()
+    return None if ctx is None else ctx[1]
+
+
+# --------------------------------------------------------------- flash decode
+_FLASH_DECODE = contextvars.ContextVar("flash_decode", default=None)
+
+
+@contextlib.contextmanager
+def flash_decode(mesh: Mesh, batch_axes=None):
+    """Enable the shard_map flash-decode attention path: KV caches are
+    sequence-sharded over "model"; decode attention computes local partial
+    softmax stats per seq shard and combines with tiny psums instead of
+    gathering the cache (EXPERIMENTS.md §Perf)."""
+    token = _FLASH_DECODE.set((mesh, batch_axes))
+    try:
+        yield
+    finally:
+        _FLASH_DECODE.reset(token)
+
+
+def flash_decode_ctx():
+    return _FLASH_DECODE.get()

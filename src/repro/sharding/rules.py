@@ -1,0 +1,223 @@
+"""Logical-axis sharding rules: param-path + shape -> PartitionSpec.
+
+Centralised so every launcher (train / serve / dryrun) shards identically.
+
+Layout (baseline):
+  * 2D weight sharding — one dim on "model" (tensor parallel), one on "data"
+    (FSDP). Required for memory: e.g. grok-1 bf16 params are 628 GB; TP-only
+    over 16 chips is 39 GB/chip (> v5e HBM), TP x FSDP over 256 is 2.5 GB.
+    XLA inserts the per-layer all-gathers (FSDP) / reduce-scatters.
+  * divisibility-aware fallbacks: attention shards heads on "model" when the
+    head count divides (48, 96), else head_dim (qwen's 40 heads, gemma3's 8,
+    whisper's 20 — head_dims 64–256 all divide 16).
+  * MoE experts shard on "model" when E divides (16-expert phi3.5/jamba);
+    8-expert grok falls back to d_ff sharding inside each expert.
+  * KV caches shard batch on "data", kv_heads on "model" when divisible else
+    head_dim.
+  * "pod" axis: pure data parallelism (batch / gradient all-reduce).
+
+Leading scan-stack dims are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(mesh: Mesh, axis: str, dim: int):
+    n = _axis_size(mesh, axis)
+    return axis if n > 1 and dim % n == 0 else None
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest data-parallel axis combo that divides the batch."""
+    pod = _axis_size(mesh, "pod")
+    data = _axis_size(mesh, "data")
+    if pod > 1 and batch % (pod * data) == 0:
+        return ("pod", "data")
+    if batch % data == 0 and data > 1:
+        return "data"
+    return None
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_spec(path, shape, mesh: Mesh, fsdp: bool = True,
+               mode: str = "default") -> P:
+    """Sharding rule for one parameter (trailing-dim semantics by name).
+
+    mode="decode": weights-STATIONARY layout for single-token serving — every
+    matmul either has its OUTPUT dim sharded (zero comms) or its CONTRACTED
+    dim sharded 256-way (partial sums + ~MB all-reduce of one-token
+    activations). No weight ever moves per step (§Perf iteration)."""
+    names = _path_names(path)
+    last = names[-1] if names else ""
+    parents = set(names[:-1])
+    nd = len(shape)
+    data = "data" if fsdp else None
+
+    def d(axis, dim):
+        return _div(mesh, axis, dim) if axis else None
+
+    def pad(rule):  # left-pad with None for scan-stack dims
+        rule = list(rule)
+        return P(*([None] * (nd - len(rule)) + rule))
+
+    if mode == "decode":
+        both = ("data", "model")
+        n_both = _axis_size(mesh, "data") * _axis_size(mesh, "model")
+
+        def dd(dim):
+            return both if dim % n_both == 0 else _div(mesh, "model", dim)
+
+        if last == "table":                   # (V, D) lookup
+            return P(dd(shape[0]), None)
+        if last == "w" and "head" in parents:  # (D, V)
+            return P(None, dd(shape[1]))
+        if last in ("wq", "wk", "wv"):        # (..., D, H, Dh): outputs sharded
+            h = d("model", shape[-2])
+            return pad([None, h, d("data", shape[-1]) if h else
+                        d("model", shape[-1])])
+        if last in ("bq", "bk", "bv"):
+            h = d("model", shape[-2])
+            return pad([h, d("data", shape[-1]) if h else
+                        d("model", shape[-1])])
+        if last == "wo":                      # (..., H*Dh, D): contract sharded
+            return pad([dd(shape[-2]), None])
+        if "moe" in parents:
+            if last in ("w_in", "w_glu"):     # (..., E, D, F): F out
+                return pad([d("model", shape[-3]), None,
+                            dd(shape[-1]) if not d("model", shape[-3])
+                            else None])
+            if last == "w_out":               # (..., E, F, D): F contract
+                return pad([d("model", shape[-3]),
+                            dd(shape[-2]) if not d("model", shape[-3])
+                            else None, None])
+            if last == "w_gate_logits":
+                return pad([None, None])
+        if "ssm" in parents:
+            if last == "w_out":               # (..., di, D): contract sharded
+                return pad([dd(shape[-2]), None])
+            return P(*([None] * nd))          # mixed-out in_proj: replicate
+        if last in ("w_in", "w_glu", "w_gate"):   # (..., D, F): F out
+            return pad([None, dd(shape[-1])])
+        if last == "w_out":                   # (..., F, D): F contract
+            return pad([dd(shape[-2]), None])
+        return P(*([None] * nd))
+
+    if last == "table":                       # (V, D) embedding
+        return P(d("model", shape[0]), d(data, shape[1]))
+    if last == "w" and "head" in parents:     # (D, V) output head
+        return P(d(data, shape[0]), d("model", shape[1]))
+    if last in ("wq", "wk", "wv"):            # (..., D, H, Dh)
+        # heads sharded on model when divisible; otherwise REPLICATE on
+        # model (Dh-sharding makes every attention contraction partial ->
+        # a (B,H,S,S)-sized all-reduce per chunk; §Perf gemma3 iteration).
+        h = d("model", shape[-2])
+        return pad([d(data, shape[-3]), h, None])
+    if last in ("bq", "bk", "bv"):            # (..., H, Dh)
+        return pad([d("model", shape[-2]), None])
+    if last == "wo":                          # (..., H*Dh, D)
+        return pad([d("model", shape[-2]), d(data, shape[-1])])
+    if "moe" in parents:
+        if last in ("w_in", "w_glu"):         # (..., E, D, F)
+            if d("model", shape[-3]):
+                return pad(["model", d(data, shape[-2]), None])
+            return pad([None, d(data, shape[-2]), d("model", shape[-1])])
+        if last == "w_out":                   # (..., E, F, D)
+            if d("model", shape[-3]):
+                return pad(["model", None, d(data, shape[-1])])
+            return pad([None, d("model", shape[-2]), d(data, shape[-1])])
+        if last == "w_gate_logits":           # (..., D, E)
+            return pad([d(data, shape[-2]), None])
+    if "ssm" in parents:
+        if last == "w_in":                    # (..., D, 2di+2N+H) mixed out dim
+            return pad([d(data, shape[-2]), None])
+        if last == "w_out":                   # (..., di, D)
+            return pad([d("model", shape[-2]), d(data, shape[-1])])
+        return P(*([None] * nd))
+    if last in ("w_in", "w_glu", "w_gate"):   # dense mlp (..., D, F)
+        return pad([d(data, shape[-2]), d("model", shape[-1])])
+    if last == "w_out":                       # dense mlp (..., F, D)
+        return pad([d("model", shape[-2]), d(data, shape[-1])])
+    if last in ("head_w1", "head_w2", "enc_pos", "embed", "rel_bias"):
+        return P(*([None] * nd))              # router encoder / small tables
+    return P(*([None] * nd))                  # norms, biases, misc: replicate
+
+
+def params_shardings(params_shapes, mesh: Mesh, fsdp: bool = True,
+                     mode: str = "default"):
+    """params_shapes: pytree of ShapeDtypeStruct (jax.eval_shape of init)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf.shape, mesh, fsdp, mode)),
+        params_shapes)
+
+
+def cache_spec(path, shape, mesh: Mesh, batch: int) -> P:
+    """KV-cache / ssm-state sharding."""
+    names = _path_names(path)
+    last = names[-1]
+    ba = batch_axes(mesh, batch)
+    if last == "pos":
+        return P()
+    nd = len(shape)
+    spec: list = [None] * nd
+    for i, dim in enumerate(shape):
+        if dim == batch:
+            spec[i] = ba
+            break
+    if last in ("k", "v", "cross_k", "cross_v") and nd >= 2:
+        kv = _div(mesh, "model", shape[-2])
+        spec[-2] = kv
+        if kv is None:
+            # Sequence-sharded cache (flash-decode layout): the attention
+            # softmax/weighted-sum reduce locally per seq shard and combine
+            # via tiny psums — far cheaper than gathering the cache to full
+            # head_dim. (Perf iteration: see EXPERIMENTS.md §Perf.)
+            spec[-3] = _div(mesh, "model", shape[-3])
+            if spec[-3] is None:
+                spec[-1] = _div(mesh, "model", shape[-1])
+    if last == "ssm_h":   # (..., B, H, P, N)
+        spec[-3] = _div(mesh, "model", shape[-3])
+    if last == "ssm_conv":  # (..., B, cw-1, C)
+        spec[-1] = None
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf.shape, mesh, batch)),
+        cache_shapes)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, batch: int):
+    ba = batch_axes(mesh, batch)
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(*([ba] + [None] * (nd - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def replicated(tree_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))),
+        tree_shapes)

@@ -1,0 +1,1 @@
+from .optim import AdamWConfig, adamw_update, init_opt_state, lr_at, global_norm

@@ -1,0 +1,50 @@
+"""Checkpointing: pytrees <-> .npz with '/'-joined path keys (no external
+checkpoint libraries in this container; flat-key npz is robust and portable).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str) -> dict:
+    """Returns a nested dict of jnp arrays (list/tuple nodes become dicts with
+    integer-string keys — fine for our param trees, which are dicts)."""
+    data = np.load(path)
+    root: dict = {}
+    for key in data.files:
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(data[key])
+    return root
+
+
+def trees_equal(a, b, atol=0.0) -> bool:
+    fa, fb = _flatten(a), _flatten(b)
+    if fa.keys() != fb.keys():
+        return False
+    return all(np.allclose(fa[k], fb[k], atol=atol) for k in fa)

@@ -1,0 +1,73 @@
+"""LM training loop (used by the end-to-end examples to train the small and
+large models of a routing pair, and by per-arch smoke tests for one step)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import softmax_xent
+from repro.models.model import ModelBundle
+from .optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 500
+    batch_size: int = 64
+    lr: float = 1e-3
+    aux_weight: float = 0.01   # MoE load-balance loss weight
+    log_every: int = 50
+    seed: int = 0
+
+
+def lm_loss(bundle: ModelBundle, params, batch, aux_weight: float):
+    logits, aux = bundle.forward(params, batch)
+    loss = softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def make_lm_train_step(bundle: ModelBundle, ocfg: AdamWConfig,
+                       aux_weight: float = 0.01):
+    def step(params, opt_state, batch):
+        (tot, (loss, aux)), grads = jax.value_and_grad(
+            lambda p: lm_loss(bundle, p, batch, aux_weight), has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, {"loss": loss, "aux": aux, **om}
+    return jax.jit(step)
+
+
+def batch_iterator(rng: np.random.Generator, arrays: dict, batch_size: int
+                   ) -> Iterator[dict]:
+    n = len(next(iter(arrays.values())))
+    while True:
+        idx = rng.integers(0, n, size=batch_size)
+        yield {k: jnp.asarray(v[idx]) for k, v in arrays.items()}
+
+
+def train_lm(bundle: ModelBundle, arrays: dict, tcfg: TrainConfig,
+             params=None, extra_batch_fn: Callable | None = None):
+    """Train an LM on teacher-forced arrays. Returns (params, history)."""
+    rng = np.random.default_rng(tcfg.seed)
+    if params is None:
+        params = bundle.init(jax.random.PRNGKey(tcfg.seed))
+    ocfg = AdamWConfig(lr=tcfg.lr, warmup_steps=max(1, tcfg.steps // 20),
+                       total_steps=tcfg.steps)
+    opt_state = init_opt_state(params, ocfg)
+    step_fn = make_lm_train_step(bundle, ocfg, tcfg.aux_weight)
+    it = batch_iterator(rng, arrays, tcfg.batch_size)
+    history = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        batch = next(it)
+        if extra_batch_fn is not None:
+            batch = extra_batch_fn(batch)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            history.append({"step": step, "loss": float(m["loss"]),
+                            "t": time.time() - t0})
+    return params, history

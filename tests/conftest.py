@@ -1,0 +1,33 @@
+import numpy as np
+import pytest
+
+from repro.models.config import ArchConfig
+
+
+def tiny_cfg(family="dense", **kw):
+    base = dict(
+        name=f"{family}-tiny", family=family, n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16,
+        vocab_pad_multiple=64, attn_chunk=8,
+    )
+    if family == "moe":
+        base.update(n_experts=4, top_k=2)
+    if family == "ssm":
+        base.update(n_heads=0, n_kv_heads=0, d_ff=0, ssm_state=16,
+                    ssm_headdim=16, ssm_chunk=8)
+    if family == "hybrid":
+        base.update(n_layers=8, n_experts=4, top_k=2, attn_every=8,
+                    attn_offset=4, moe_every=2, ssm_state=16, ssm_headdim=16,
+                    ssm_chunk=8)
+    if family == "vlm":
+        base.update(frontend="vision_stub", num_frontend_tokens=8)
+    if family == "audio":
+        base.update(n_kv_heads=4, is_encoder_decoder=True, n_enc_layers=2,
+                    enc_seq=16)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

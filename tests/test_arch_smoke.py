@@ -1,0 +1,86 @@
+"""Per-assigned-architecture smoke tests: a REDUCED variant of each family
+(2 layers / d_model<=512 / <=4 experts) runs one forward + one train step +
+one decode step on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.frontends import make_batch
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.models.common import softmax_xent
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512 and (cfg.n_experts or 0) <= 4
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    seq = 16
+    batch = make_batch(jax.random.PRNGKey(1), cfg, 2, seq)
+
+    # forward
+    logits, aux = m.forward(params, batch)
+    assert logits.shape == (2, seq, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab_size]).all()), arch
+
+    # one train step
+    ocfg = AdamWConfig(lr=1e-3, total_steps=10)
+    opt = init_opt_state(params, ocfg)
+
+    def loss_fn(p):
+        lg, ax = m.forward(p, batch)
+        return softmax_xent(lg, batch["labels"], batch["loss_mask"]) + 0.01 * ax
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), arch
+    params2, opt2, met = adamw_update(params, grads, opt, ocfg)
+    assert bool(jnp.isfinite(met["grad_norm"])), arch
+    # params actually changed
+    delta = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l[0] - l[1]))),
+        jax.tree_util.tree_map(lambda a, b: (a, b), params, params2), 0.0)
+    assert delta > 0, arch
+
+    # prefill + decode step
+    inf = {k: v for k, v in batch.items() if k not in ("labels", "loss_mask")}
+    last, cache = m.prefill(params, inf, seq + 4)
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    lg, _ = m.decode_step(params, cache, tok)
+    assert lg.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.isfinite(lg[..., :cfg.vocab_size]).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_config_exactness(arch):
+    """Configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_archs_have_experts():
+    assert get_config("grok-1-314b").n_experts == 8
+    assert get_config("grok-1-314b").top_k == 2
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("jamba-v0.1-52b").n_experts == 16
+
+
+def test_mamba2_ssm_state():
+    cfg = get_config("mamba2-130m")
+    assert cfg.ssm_state == 128 and cfg.is_attention_free

@@ -1,0 +1,79 @@
+"""Synthetic data pipeline: task answers, tokenizer, LM arrays, quality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import tokenizer as tok
+from repro.data.tasks import TASKS, _answer, generate_dataset, lm_training_arrays
+from repro.core.quality import edit_distance_batch, edit_similarity
+
+
+def test_task_answers():
+    spec = {s.name: s for s in TASKS}
+    assert _answer(spec["copy"], "abc") == "abc"
+    assert _answer(spec["reverse"], "abc") == "cba"
+    assert _answer(spec["shift1"], "az") == "ba"
+    assert _answer(spec["sort"], "cba") == "abc"
+    assert _answer(spec["sumdigits"], "19") == "0"
+
+
+def test_dataset_shapes(rng):
+    ds = generate_dataset(rng, 50)
+    assert len(ds) == 50
+    assert ds.query.shape[0] == 50
+    assert (ds.query[:, 0] == tok.BOS).all()
+    # SEP terminates every query
+    for i in range(50):
+        assert tok.SEP in ds.query[i][:ds.query_len[i]]
+    arrays = lm_training_arrays(ds)
+    assert arrays["tokens"].shape[1] == ds.query.shape[1] + ds.ref.shape[1]
+    # every example supervises at least one position (the answer)
+    assert (arrays["loss_mask"].sum(1) >= 1).all()
+    # first supervised position predicts the first answer token
+    Lq = ds.query.shape[1]
+    for i in range(10):
+        assert arrays["loss_mask"][i, Lq - 1] == 1.0
+        assert arrays["labels"][i, Lq - 1] == ds.ref[i, 0]
+
+
+def test_tokenizer_roundtrip():
+    s = "abc0123xyz"
+    ids = tok.encode_chars(s)
+    assert tok.decode(ids) == s
+    assert tok.VOCAB_SIZE == 48
+
+
+def test_edit_distance_known_cases():
+    a = np.array([[5, 6, 7, 0]], np.int32)
+    b = np.array([[5, 7, 0, 0]], np.int32)
+    d = edit_distance_batch(a, np.array([3]), b, np.array([2]))
+    assert d[0] == 1  # delete the 6
+    # identical
+    d2 = edit_distance_batch(a, np.array([3]), a, np.array([3]))
+    assert d2[0] == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=8),
+       st.lists(st.integers(1, 5), min_size=1, max_size=8))
+def test_edit_distance_property(xs, ys):
+    """Matches a classic scalar DP implementation."""
+    def lev(x, y):
+        dp = list(range(len(y) + 1))
+        for i, cx in enumerate(x, 1):
+            prev, dp[0] = dp[0], i
+            for j, cy in enumerate(y, 1):
+                prev, dp[j] = dp[j], min(dp[j] + 1, dp[j - 1] + 1,
+                                         prev + (cx != cy))
+        return dp[-1]
+    L = 10
+    a = np.zeros((1, L), np.int32); a[0, :len(xs)] = xs
+    b = np.zeros((1, L), np.int32); b[0, :len(ys)] = ys
+    d = edit_distance_batch(a, np.array([len(xs)]), b, np.array([len(ys)]))
+    assert d[0] == lev(xs, ys)
+
+
+def test_edit_similarity_range(rng):
+    ds = generate_dataset(rng, 20)
+    q = edit_similarity(ds.ref, ds.ref_len, ds.ref, ds.ref_len)
+    np.testing.assert_allclose(q, 0.0)  # perfect response

@@ -1,0 +1,71 @@
+"""HLO cost-analyzer tests: trip-count correction, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+FIXTURE = """
+HloModule test
+
+%body.1 (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %w = f32[64,64]{1,0} constant({...})
+  %d = f32[64,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[64,64]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,64]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64,64]) tuple(%zero, %a)
+  %w = (s32[], f32[64,64]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[64,128]{1,0} all-gather(%a), replica_groups={}, dimensions={1}
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_fixture_trip_multiplication():
+    res = analyze(FIXTURE)
+    # dot: 2*64*64*64 flops, x12 iterations
+    assert res.flops == 12 * 2 * 64 * 64 * 64
+    # all-reduce 64*64*4 bytes x12 + all-gather 64*128*4 once
+    ar = 12 * 64 * 64 * 4
+    ag = 64 * 128 * 4
+    assert res.collective_bytes == ar + ag
+    assert res.collective_by_kind["all-reduce"] == ar
+    assert res.collective_by_kind["all-gather"] == ag
+    assert list(res.while_trips.values()) == [12]
+
+
+def test_real_compiled_scan_matches_analytic():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    res = analyze(compiled.as_text())
+    expected = 7 * 2 * 32 * 64 * 64
+    assert abs(res.flops - expected) / expected < 0.01
+
+
+def test_parse_computations():
+    comps = parse_hlo(FIXTURE)
+    assert "__entry__" in comps and "body.1" in comps and "cond.1" in comps
+    assert comps["body.1"].dot_flops == 2 * 64 * 64 * 64

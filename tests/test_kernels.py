@@ -1,0 +1,122 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.decode_attention.kernel import decode_attention_gqa
+from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan.kernel import ssd_chunk_scan
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+from repro.models.ssm import ssd_chunk_reference
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("S,H,D", [(128, 2, 32), (256, 4, 64), (512, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_sweep(S, H, D, dtype, window):
+    rng = np.random.default_rng(S + H + window)
+    B = 2
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype) * (D ** -0.5)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    out = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * H, S, D)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * H, S, D)
+    ref = fa_ref.attention_ref(qt, kt, vt, causal=True, window=window)
+    ref = jnp.moveaxis(ref.reshape(B, H, S, D), 1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(0)
+    B, S, H, D = 1, 256, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32) * (D ** -0.5)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, causal=False)
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * H, S, D)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * H, S, D)
+    ref = fa_ref.attention_ref(qt, kt, vt, causal=False)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.moveaxis(ref.reshape(B, H, S, D), 1, 2)),
+        rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("S,G,D,bk", [(512, 1, 64, 128), (1024, 4, 64, 512),
+                                      (2048, 12, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(S, G, D, bk, dtype):
+    rng = np.random.default_rng(S + G)
+    BK = 3
+    q = jnp.asarray(rng.standard_normal((BK, G, D)), dtype) * (D ** -0.5)
+    k = jnp.asarray(rng.standard_normal((BK, S, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((BK, S, D)), dtype)
+    valid = jnp.asarray(rng.integers(0, 2, (BK, S)), jnp.int8).at[:, 0].set(1)
+    out = decode_attention_gqa(q, k, v, valid, bk=bk)
+    ref = da_ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_kv_layout():
+    """Production entry: raw (B, S, K, D) cache, q (B, H, D)."""
+    rng = np.random.default_rng(7)
+    B, H, K, D, S = 2, 8, 2, 32, 1024
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32) * (D ** -0.5)
+    k = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, D)), jnp.float32)
+    valid = jnp.asarray(rng.integers(0, 2, (B, S)), jnp.int8).at[:, 0].set(1)
+    out = da_ops.decode_attention_kv(q, k, v, valid)
+    # oracle: expand kv and use ref per head-group
+    G = H // K
+    qg = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kg = jnp.moveaxis(k, 2, 1).reshape(B * K, S, D)
+    vg = jnp.moveaxis(v, 2, 1).reshape(B * K, S, D)
+    ref = da_ref.decode_attention_ref(qg, kg, vg, jnp.repeat(valid, K, 0))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reshape(B, H, D)),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("l,H,P,N", [(16, 2, 8, 8), (32, 4, 16, 8),
+                                     (64, 3, 32, 16)])
+def test_ssd_kernel_sweep(l, H, P, N):
+    rng = np.random.default_rng(l + H)
+    bc = 4
+    x = jnp.asarray(rng.standard_normal((bc, H, l, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (bc, H, l, 1)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    da = jnp.cumsum(dt * A[None, :, None, None], axis=2)
+    B = jnp.asarray(rng.standard_normal((bc, l, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((bc, l, N)), jnp.float32)
+    y, st = ssd_chunk_scan(x, dt, da, B, C)
+    y_r, st_r = ssd_chunk_ref(x, dt, da, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_r), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_ops_matches_model_reference():
+    rng = np.random.default_rng(3)
+    b, nc, l, H, P, N = 2, 3, 32, 4, 16, 8
+    xs = jnp.asarray(rng.standard_normal((b, nc, l, H, P)), jnp.float32)
+    dts = jnp.asarray(rng.uniform(0.01, 0.2, (b, nc, l, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    dA = jnp.cumsum(dts * A, axis=2)
+    Bs = jnp.asarray(rng.standard_normal((b, nc, l, N)), jnp.float32)
+    Cs = jnp.asarray(rng.standard_normal((b, nc, l, N)), jnp.float32)
+    y_k, st_k = ssd_ops.ssd_chunk(xs, dts, dA, Bs, Cs)
+    y_r, st_r = ssd_chunk_reference(xs, dts, dA, Bs, Cs)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,83 @@
+"""Unit + property tests for the paper's label construction (§3.1–3.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import labels as L
+
+
+def _qpair(rng, n=50, s=6, gap=0.3):
+    q_small = rng.normal(-gap, 0.2, (n, s)).astype(np.float32)
+    q_large = rng.normal(0.0, 0.2, (n, s)).astype(np.float32)
+    return q_small, q_large
+
+
+def test_det_equals_prob_with_one_sample(rng):
+    qs, ql = _qpair(rng)
+    det = L.det_labels(qs, ql)
+    prob1 = L.prob_labels(qs[:, :1], ql[:, :1])
+    np.testing.assert_array_equal(det, prob1)
+
+
+def test_prob_labels_in_unit_interval(rng):
+    qs, ql = _qpair(rng)
+    y = L.prob_labels(qs, ql)
+    assert ((y >= 0) & (y <= 1)).all()
+
+
+def test_prob_labels_monotone_in_t(rng):
+    """Pr[H >= -t] is nondecreasing in t (§3.3: relaxation only adds mass)."""
+    qs, ql = _qpair(rng)
+    prev = L.prob_labels(qs, ql, 0.0)
+    for t in (0.1, 0.3, 0.7, 2.0):
+        cur = L.prob_labels(qs, ql, t)
+        assert (cur >= prev - 1e-7).all()
+        prev = cur
+
+
+def test_mean_abs_pairwise_matches_bruteforce(rng):
+    y = rng.uniform(size=37).astype(np.float64)
+    brute = np.abs(y[:, None] - y[None, :]).mean()
+    fast = L.mean_abs_pairwise_diff(y)
+    assert abs(brute - fast) < 1e-10
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0, 1), min_size=2, max_size=60))
+def test_mean_abs_pairwise_property(ys):
+    y = np.asarray(ys)
+    brute = float(np.abs(y[:, None] - y[None, :]).mean())
+    assert abs(brute - L.mean_abs_pairwise_diff(y)) < 1e-9
+
+
+def test_transform_balances_skewed_labels(rng):
+    """Large-gap regime: y_prob ~ all-zero; t* must spread the labels
+    (reproduces the Fig. 4 effect)."""
+    q_small = rng.normal(-3.0, 0.3, (200, 8)).astype(np.float32)
+    q_large = rng.normal(0.0, 0.3, (200, 8)).astype(np.float32)
+    y0 = L.prob_labels(q_small, q_large)
+    assert y0.mean() < 0.02  # extremely imbalanced before transform
+    y_t, t_star = L.trans_labels(q_small, q_large)
+    assert t_star > 0
+    assert L.mean_abs_pairwise_diff(y_t) > L.mean_abs_pairwise_diff(y0) + 0.05
+
+
+def test_tstar_maximizes_grid(rng):
+    qs, ql = _qpair(rng, gap=1.0)
+    t_star, obj, ts = L.optimal_transform(qs, ql)
+    assert obj[np.argmax(obj)] == obj.max()
+    assert t_star == ts[int(np.argmax(obj))]
+
+
+def test_gap_samples_shape(rng):
+    qs, ql = _qpair(rng, n=7, s=3)
+    h = L.quality_gap_samples(qs, ql)
+    assert h.shape == (7, 9)
+    # H sign: small minus large
+    assert (h.mean() < 0)
+
+
+def test_paired_estimator(rng):
+    qs, ql = _qpair(rng)
+    y = L.prob_labels(qs, ql, paired=True)
+    assert ((y >= 0) & (y <= 1)).all()

@@ -1,0 +1,73 @@
+"""Routing metrics (§2.3, §4.2/4.3) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+
+
+def _setup(rng, n=200):
+    # scores correlated with true gap: higher score = easier
+    gap = rng.normal(-0.5, 0.5, n)
+    scores = 1 / (1 + np.exp(-(gap + rng.normal(0, 0.1, n))))
+    q_large = rng.normal(0, 0.05, (n, 4)).astype(np.float32)
+    q_small = (q_large.mean(1, keepdims=True) + gap[:, None]
+               + rng.normal(0, 0.05, (n, 4))).astype(np.float32)
+    return scores, q_small, q_large
+
+
+def test_threshold_for_cost_advantage_hits_fraction(rng):
+    scores = rng.uniform(size=1000)
+    for ca in (0.1, 0.25, 0.5, 0.9):
+        thr = M.threshold_for_cost_advantage(scores, ca)
+        assert abs((scores >= thr).mean() - ca) < 0.02
+
+
+def test_all_at_large_has_zero_drop(rng):
+    scores, qs, ql = _setup(rng)
+    thr = M.threshold_for_cost_advantage(scores, 0.0)
+    qm, ca = M.mixture_quality(scores, thr, qs, ql)
+    assert ca == 0.0
+    assert abs(M.perf_drop_pct(qm, ql.mean(1).mean())) < 1e-6
+
+
+def test_curve_cost_monotone(rng):
+    scores, qs, ql = _setup(rng)
+    pts = M.error_cost_curve(scores, qs, ql, n_points=21)
+    cas = [p.cost_advantage for p in pts]
+    assert all(b >= a - 1e-9 for a, b in zip(cas, cas[1:]))
+
+
+def test_oracle_router_beats_random(rng):
+    scores, qs, ql = _setup(rng)
+    oracle = (qs.mean(1) - ql.mean(1))  # perfect knowledge of the gap
+    d_oracle = M.drop_at_cost_advantages(oracle, qs, ql)[0.4]["drop_pct"]
+    rand = M.random_routing_curve(rng, len(qs), qs, ql, n_points=21)
+    d_rand = [p.drop_pct for p in rand if abs(p.cost_advantage - 0.4) < 0.03]
+    assert d_oracle < d_rand[0]
+
+
+def test_quality_gap_difference_positive_for_good_router(rng):
+    scores, qs, ql = _setup(rng)
+    assert M.quality_gap_difference(scores, qs, ql, 0.3) > 0.0
+    # random scores: near zero
+    rand = rng.uniform(size=len(qs))
+    assert abs(M.quality_gap_difference(rand, qs, ql, 0.3)) < \
+        M.quality_gap_difference(scores, qs, ql, 0.3)
+
+
+def test_correlations():
+    a = np.arange(50, dtype=np.float64)
+    assert abs(M.pearson(a, 2 * a + 1) - 1) < 1e-9
+    assert abs(M.spearman(a, a ** 3) - 1) < 1e-9
+    assert abs(M.pearson(a, -a) + 1) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(10, 200), st.floats(0.05, 0.95))
+def test_threshold_property(n, ca):
+    rng = np.random.default_rng(n)
+    scores = rng.uniform(size=n)
+    thr = M.threshold_for_cost_advantage(scores, ca)
+    frac = (scores >= thr).mean()
+    assert frac <= ca + 1.0 / n + 1e-9  # never overshoots by more than one item

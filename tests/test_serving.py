@@ -1,0 +1,118 @@
+"""Serving engines: generation, EOS masking, hybrid dispatch + cost meter,
+fused hybrid step."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.routing import CostMeter, HybridRouter
+from repro.data import tokenizer as tok
+from repro.models import RouterConfig, build_model, init_router_encoder
+from repro.models.frontends import make_batch
+from repro.serving import Engine, HybridEngine, build_fused_hybrid_step
+from repro.serving.generate import build_generate_fn
+from conftest import tiny_cfg
+
+
+def _engine(seed=0, **kw):
+    cfg = tiny_cfg("dense")
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(seed))
+    return cfg, Engine(m, p, max_new_tokens=8, **kw)
+
+
+def test_generate_shapes_and_determinism():
+    cfg, eng = _engine(temperature=0.0)
+    q = np.random.default_rng(0).integers(4, cfg.vocab_size, (5, 12)).astype(np.int32)
+    r1, l1 = eng.serve(q)
+    r2, l2 = eng.serve(q)
+    assert r1.shape == (5, 8)
+    np.testing.assert_array_equal(r1, r2)  # greedy is deterministic
+    assert (l1 <= 8).all() and (l1 >= 1).all()
+
+
+def test_generate_eos_masking():
+    """After EOS, emitted tokens must be PAD."""
+    cfg, eng = _engine(temperature=0.9)
+    q = np.random.default_rng(1).integers(4, cfg.vocab_size, (8, 12)).astype(np.int32)
+    r, lens = eng.serve(q, seed=3)
+    for i in range(len(r)):
+        row = r[i]
+        eos_pos = np.where(row == tok.EOS)[0]
+        if len(eos_pos):
+            assert (row[eos_pos[0] + 1:] == tok.PAD).all()
+            assert lens[i] == eos_pos[0] + 1
+
+
+def test_sampling_differs_across_seeds():
+    cfg, eng = _engine(temperature=1.5)
+    q = np.random.default_rng(2).integers(4, cfg.vocab_size, (8, 12)).astype(np.int32)
+    r1, _ = eng.serve(q, seed=0)
+    r2, _ = eng.serve(q, seed=1)
+    assert (r1 != r2).any()
+
+
+def _router(threshold):
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    params = init_router_encoder(jax.random.PRNGKey(0), rc)
+    return HybridRouter(params, rc, threshold)
+
+
+def test_hybrid_engine_routing_and_meter():
+    cfg = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE)
+    m = build_model(cfg)
+    small = Engine(m, m.init(jax.random.PRNGKey(1)), max_new_tokens=8)
+    large = Engine(m, m.init(jax.random.PRNGKey(2)), max_new_tokens=8)
+    q = np.random.default_rng(0).integers(4, tok.VOCAB_SIZE, (16, 12)).astype(np.int32)
+    mask = np.ones_like(q, np.float32)
+
+    hy = HybridEngine(_router(threshold=-1.0), small, large)  # all -> small
+    res = hy.serve(q, mask)
+    assert res.routed_small.all()
+    assert hy.meter.cost_advantage == 1.0
+
+    hy2 = HybridEngine(_router(threshold=2.0), small, large)  # all -> large
+    res2 = hy2.serve(q, mask)
+    assert not res2.routed_small.any()
+    assert hy2.meter.cost_advantage == 0.0
+
+    # mid threshold: partition consistent with scores
+    scores = np.asarray(_router(0.5).scores(jnp.asarray(q), jnp.asarray(mask)))
+    hy3 = HybridEngine(_router(float(np.median(scores))), small, large)
+    res3 = hy3.serve(q, mask)
+    assert res3.routed_small.any() and (~res3.routed_small).any()
+    np.testing.assert_array_equal(res3.routed_small,
+                                  res3.scores >= float(np.median(scores)))
+
+
+def test_fused_hybrid_step_lowers_and_runs():
+    """The one-program router+S+L decode step (the dry-run artifact)."""
+    cfg_s = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE)
+    cfg_l = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE, n_layers=3)
+    ms, ml = build_model(cfg_s), build_model(cfg_l)
+    ps = ms.init(jax.random.PRNGKey(1))
+    pl_ = ml.init(jax.random.PRNGKey(2))
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    pr = init_router_encoder(jax.random.PRNGKey(0), rc)
+    step = build_fused_hybrid_step(rc, ms, ml, threshold=0.5)
+    B = 4
+    toks = jnp.zeros((B, 12), jnp.int32)
+    mask = jnp.ones((B, 12))
+    cs = ms.init_cache(B, 16)
+    cl = ml.init_cache(B, 16)
+    token = jnp.ones((B, 1), jnp.int32)
+    logits, cs2, cl2, routed = jax.jit(step)(pr, ps, pl_, toks, mask, cs, cl,
+                                             token)
+    assert logits.shape[0] == B
+    assert routed.shape == (B,)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_cost_meter_accounting():
+    m = CostMeter()
+    m.record(np.array([True, True, False, False, False]), gen_tokens=10)
+    assert m.to_small == 2 and m.to_large == 3
+    assert abs(m.cost_advantage - 0.4) < 1e-9
+    assert m.small_tokens == 20 and m.large_tokens == 30

@@ -1,0 +1,27 @@
+"""Threshold calibration (§4.5)."""
+import numpy as np
+
+from repro.core import calibrate_threshold, evaluate_threshold
+
+
+def test_calibration_respects_drop_budget(rng):
+    n = 400
+    gap = rng.normal(-0.3, 0.4, n)
+    scores = 1 / (1 + np.exp(-gap * 4))
+    q_large = rng.normal(0, 0.05, (n, 4)).astype(np.float32) - 1.0
+    q_small = (q_large + gap[:, None]).astype(np.float32)
+    res = calibrate_threshold(scores, q_small, q_large, max_drop_pct=1.0)
+    assert res.expected_drop_pct <= 1.0 + 1e-6
+    assert res.expected_cost_advantage > 0.05
+    # applying to a fresh sample from the same distribution generalises
+    ev = evaluate_threshold(res.threshold, scores, q_small, q_large)
+    assert abs(ev["cost_advantage"] - res.expected_cost_advantage) < 1e-6
+
+
+def test_calibration_zero_budget_stays_all_large(rng):
+    n = 100
+    scores = rng.uniform(size=n)
+    q_large = np.zeros((n, 2), np.float32)
+    q_small = np.full((n, 2), -10.0, np.float32)  # small model is terrible
+    res = calibrate_threshold(scores, q_small, q_large, max_drop_pct=0.0)
+    assert res.expected_cost_advantage == 0.0
