@@ -1,0 +1,301 @@
+"""Serving throughput: dense-batch vs continuous-paged engines.
+
+Replays one ragged request stream (ragged prompt lengths AND ragged
+per-request output caps) through both serving architectures at three tiers
+— small model, large model, and router-split hybrid — and reports:
+
+  * tokens/s        — *useful* generated tokens per wall second. A token is
+                      useful if it falls within the request's own output cap;
+                      the dense engine has no per-request caps, so everything
+                      it generates past a cap (and every decode step spent on
+                      requests that already hit EOS) is counted as work but
+                      not as useful output. That asymmetry is the measured
+                      systems gap, not an accounting trick.
+  * p50/p99 latency — per-request completion latency from stream submission.
+                      Dense requests complete when their batch joins;
+                      continuous requests complete when they individually
+                      retire.
+  * KV high-water   — bytes of KV cache held at the worst moment: the dense
+                      slab (bucket x (prompt + max_new)) vs the paged pool's
+                      high-water page count.
+
+Both engines are warmed up (jit compiles excluded from the timed stream).
+
+Usage:
+  PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
+      [--out BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import HybridRouter
+from repro.data import tokenizer as tok
+from repro.models import (RouterConfig, build_model, init_router_encoder)
+from repro.models.config import ArchConfig
+from repro.serving import (ContinuousEngine, ContinuousHybridEngine, Engine,
+                           HybridEngine)
+
+
+def tier_configs(smoke: bool):
+    base = dict(family="dense", vocab_size=tok.VOCAB_SIZE,
+                vocab_pad_multiple=16, head_dim=16, attn_chunk=32,
+                cache_layout="paged", kv_page_size=16)
+    small = ArchConfig(name="serve-small", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=2, d_ff=128, **base)
+    if smoke:
+        large = ArchConfig(name="serve-large", n_layers=3, d_model=64,
+                           n_heads=4, n_kv_heads=2, d_ff=128, **base)
+    else:
+        large = ArchConfig(name="serve-large", n_layers=6, d_model=128,
+                           n_heads=8, n_kv_heads=4, d_ff=256, **base)
+    return small, large
+
+
+def make_stream(rng, n: int, t_max: int):
+    """Ragged prompts (padded into one (N, Lmax) array for the dense API)
+    with heavy-tailed per-request output caps: most requests want a short
+    answer, a few want the full budget — the regime continuous batching is
+    built for."""
+    lens = rng.integers(6, 25, (n,))
+    lmax = int(lens.max())
+    toks = np.full((n, lmax), tok.PAD, np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(4, tok.VOCAB_SIZE, (l,))
+    caps = np.where(rng.random(n) < 0.75,
+                    rng.integers(2, max(3, t_max // 4), (n,)),
+                    t_max).astype(np.int32)
+    return toks, lens.astype(np.int32), caps
+
+
+def _percentiles(lat):
+    lat = np.asarray(lat)
+    return {"p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99))}
+
+
+def run_dense(bundle, params, stream, t_max: int, batch: int):
+    toks, lens, caps = stream
+    eng = Engine(bundle, params, max_new_tokens=t_max)
+    eng.warmup(toks.shape[1], batch)
+    useful = 0
+    latencies = []
+    t0 = time.time()
+    for i in range(0, len(toks), batch):
+        r, l = eng.serve(toks[i:i + batch])
+        done_t = time.time() - t0
+        useful += int(np.minimum(l, caps[i:i + batch]).sum())
+        latencies += [done_t] * len(r)
+    wall = time.time() - t0
+    return {
+        "engine": "dense_batch",
+        "requests": len(toks),
+        "useful_tokens": useful,
+        "generated_tokens": int(eng.stats.gen_tokens),
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "kv_high_water_bytes": int(eng.stats.kv_high_water_bytes),
+        "padding_waste": round(eng.stats.padding_waste, 4),
+        "compiles": eng.stats.compiles,
+        **_percentiles(latencies),
+    }
+
+
+def _continuous(bundle, params, t_max, n_slots):
+    return ContinuousEngine(bundle, params, max_new_tokens=t_max,
+                            n_slots=n_slots, max_seq=64)
+
+
+def _warm_continuous(eng, rng, lens):
+    """Compile prefill/scatter/decode shapes outside the timed window:
+    prefill traces per distinct prompt length, so warm every length in the
+    stream; max_new_tokens=2 so at least one decode step runs (cap-1
+    requests retire at admission and would leave the decode jit cold)."""
+    for l in sorted(set(int(x) for x in lens)):
+        eng.submit(rng.integers(4, tok.VOCAB_SIZE, (l,)).astype(np.int32),
+                   max_new_tokens=2)
+        eng.run()
+
+
+def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
+                   rng):
+    toks, lens, caps = stream
+    eng = _continuous(bundle, params, t_max, n_slots)
+    _warm_continuous(eng, rng, lens)
+    hw0 = eng.cache.stats.high_water_pages  # warmup's mark, superseded below
+    t0 = time.time()
+    reqs = [eng.submit(toks[i, :lens[i]], max_new_tokens=int(caps[i]))
+            for i in range(len(toks))]
+    eng.run()
+    wall = time.time() - t0
+    useful = sum(r.n_generated for r in reqs)
+    latencies = [r.finish_t - t0 for r in reqs]
+    return {
+        "engine": "continuous_paged",
+        "requests": len(toks),
+        "useful_tokens": useful,
+        "generated_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "kv_high_water_bytes": int(max(eng.cache.stats.high_water_pages, hw0)
+                                   * eng.cache.bytes_per_page),
+        "mean_slot_occupancy": round(eng.stats.mean_occupancy, 2),
+        "admission_stalls": eng.stats.admission_stalls,
+        **_percentiles(latencies),
+    }
+
+
+def _median_router(q, mask):
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    params = init_router_encoder(jax.random.PRNGKey(0), rc)
+    r = HybridRouter(params, rc, 0.5)
+    scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    return r.with_threshold(float(np.median(scores)))
+
+
+def run_hybrid_dense(bundles, stream, t_max, batch):
+    (bs, ps_), (bl, pl_) = bundles
+    toks, lens, caps = stream
+    mask = (toks != tok.PAD).astype(np.float32)
+    router = _median_router(toks, mask)
+    small = Engine(bs, ps_, max_new_tokens=t_max)
+    large = Engine(bl, pl_, max_new_tokens=t_max)
+    small.warmup(toks.shape[1], batch)
+    large.warmup(toks.shape[1], batch)
+    for i in range(0, len(toks), batch):  # warm every batch-slice shape
+        router.scores(jnp.asarray(toks[i:i + batch]),
+                      jnp.asarray(mask[i:i + batch]))
+    hy = HybridEngine(router, small, large)
+    useful = 0
+    latencies = []
+    t0 = time.time()
+    for i in range(0, len(toks), batch):
+        res = hy.serve(toks[i:i + batch], mask[i:i + batch])
+        done_t = time.time() - t0
+        useful += int(np.minimum(res.lengths, caps[i:i + batch]).sum())
+        latencies += [done_t] * len(res.lengths)
+    wall = time.time() - t0
+    return {
+        "engine": "dense_batch_hybrid",
+        "requests": len(toks),
+        "useful_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "kv_high_water_bytes": int(small.stats.kv_high_water_bytes
+                                   + large.stats.kv_high_water_bytes),
+        "cost_advantage": round(hy.meter.cost_advantage, 4),
+        **_percentiles(latencies),
+    }
+
+
+def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng):
+    (bs, ps_), (bl, pl_) = bundles
+    toks, lens, caps = stream
+    mask = (toks != tok.PAD).astype(np.float32)
+    router = _median_router(toks, mask)
+    small = _continuous(bs, ps_, t_max, n_slots)
+    large = _continuous(bl, pl_, t_max, max(2, n_slots // 2))
+    _warm_continuous(small, rng, lens)
+    _warm_continuous(large, rng, lens)
+    router.scores(jnp.asarray(toks), jnp.asarray(mask))
+    hw = (small.cache.stats.high_water_pages,
+          large.cache.stats.high_water_pages)
+    hy = ContinuousHybridEngine(router, small, large)
+    t0 = time.time()
+    reqs, to_small, _ = hy.submit(toks, mask, max_new_tokens=caps)
+    hy.run()
+    wall = time.time() - t0
+    useful = sum(r.n_generated for r in reqs)
+    latencies = [r.finish_t - t0 for r in reqs]
+    bpp = small.cache.bytes_per_page
+    bpl = large.cache.bytes_per_page
+    return {
+        "engine": "continuous_paged_hybrid",
+        "requests": len(toks),
+        "useful_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "kv_high_water_bytes": int(
+            max(small.cache.stats.high_water_pages, hw[0]) * bpp
+            + max(large.cache.stats.high_water_pages, hw[1]) * bpl),
+        "cost_advantage": round(hy.meter.cost_advantage, 4),
+        "routed_small": int(to_small.sum()),
+        **_percentiles(latencies),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny models + short stream (CI perf canary)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_serving.json; --smoke defaults to no file)")
+    args = ap.parse_args()
+
+    n = args.requests or (12 if args.smoke else 64)
+    t_max = 8 if args.smoke else 32
+    batch = 8 if args.smoke else 16
+    n_slots = 4 if args.smoke else 8
+    rng = np.random.default_rng(0)
+    stream = make_stream(rng, n, t_max)
+
+    cfg_s, cfg_l = tier_configs(args.smoke)
+    bundles = []
+    for cfg, seed in ((cfg_s, 1), (cfg_l, 2)):
+        b = build_model(cfg)
+        bundles.append((b, b.init(jax.random.PRNGKey(seed))))
+
+    results = {"config": {"requests": n, "t_max": t_max, "batch": batch,
+                          "n_slots": n_slots, "smoke": args.smoke,
+                          "small": cfg_s.name, "large": cfg_l.name},
+               "tiers": {}}
+    for tier, (bundle, params) in (("small", bundles[0]),
+                                   ("large", bundles[1])):
+        print(f"== {tier} ==")
+        d = run_dense(bundle, params, stream, t_max, batch)
+        c = run_continuous(bundle, params, stream, t_max, n_slots,
+                           np.random.default_rng(7))
+        results["tiers"][tier] = {"dense": d, "continuous": c}
+        print(f"  dense      {d['tokens_per_s']:>8} tok/s  "
+              f"p99 {d['p99_s']:.2f}s  kv {d['kv_high_water_bytes']}")
+        print(f"  continuous {c['tokens_per_s']:>8} tok/s  "
+              f"p99 {c['p99_s']:.2f}s  kv {c['kv_high_water_bytes']}")
+
+    print("== hybrid ==")
+    d = run_hybrid_dense(bundles, stream, t_max, batch)
+    c = run_hybrid_continuous(bundles, stream, t_max, n_slots,
+                              np.random.default_rng(7))
+    results["tiers"]["hybrid"] = {"dense": d, "continuous": c}
+    print(f"  dense      {d['tokens_per_s']:>8} tok/s  p99 {d['p99_s']:.2f}s  "
+          f"kv {d['kv_high_water_bytes']}")
+    print(f"  continuous {c['tokens_per_s']:>8} tok/s  p99 {c['p99_s']:.2f}s  "
+          f"kv {c['kv_high_water_bytes']}")
+
+    speedup = c["tokens_per_s"] / max(d["tokens_per_s"], 1e-9)
+    kv_ratio = c["kv_high_water_bytes"] / max(d["kv_high_water_bytes"], 1)
+    results["hybrid_speedup"] = round(speedup, 3)
+    results["hybrid_kv_ratio"] = round(kv_ratio, 3)
+    print(f"hybrid: {speedup:.2f}x tokens/s, {kv_ratio:.2f}x KV high-water")
+
+    out = args.out
+    if out is None and not args.smoke:
+        out = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_serving.json")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ engine (repro.serving.hybrid) consumes this to drive two-model inference.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -14,6 +15,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.encoder import RouterConfig, router_encode
+
+
+@functools.lru_cache(maxsize=None)
+def _scores_jit(rcfg: RouterConfig):
+    """Jitted scorer shared across HybridRouter instances with the same
+    config — serving scores queries per admission, so eager dispatch cost
+    matters."""
+    return jax.jit(route_scores_jit(rcfg))
 
 
 @dataclasses.dataclass
@@ -24,7 +33,7 @@ class HybridRouter:
     label_kind: str = "trans"   # det | prob | trans — provenance only
 
     def scores(self, tokens, mask) -> jnp.ndarray:
-        return jax.nn.sigmoid(router_encode(self.params, tokens, mask, self.rcfg))
+        return _scores_jit(self.rcfg)(self.params, tokens, mask)
 
     def route(self, tokens, mask) -> jnp.ndarray:
         """True where the query goes to the SMALL model ("easy")."""

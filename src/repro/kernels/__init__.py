@@ -2,7 +2,10 @@
 
 Each kernel lives in its own subpackage: kernel.py (pl.pallas_call +
 BlockSpec), ops.py (jit'd model-layout wrapper), ref.py (pure-jnp oracle).
-Kernels target TPU; on CPU they execute via interpret=True (tests validate
-against the oracle there).
+The ``interpret`` flag auto-detects the backend (common.default_interpret):
+compiled kernels on TPU, interpreter on CPU (tests validate against the
+oracle there; an explicit bool still overrides).
 """
-from . import flash_attention, decode_attention, ssd_scan  # noqa: F401
+from . import (flash_attention, decode_attention, paged_decode_attention,  # noqa: F401
+               ssd_scan)
+from .common import default_interpret  # noqa: F401

@@ -1,0 +1,16 @@
+"""Shared helpers for the Pallas kernel subpackages."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the ``interpret`` flag for a pallas_call.
+
+    ``None`` (the default everywhere) auto-detects: compiled kernels on TPU,
+    interpreter elsewhere (CPU CI / tests). An explicit bool wins, so tests
+    can force interpret mode on any backend.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -61,15 +61,24 @@ def _dec_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def decode_attention_gqa(q, k, v, valid, *, bk: int = 512,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """q: (BK, G, D) pre-scaled; k, v: (BK, S, D); valid: (BK, S) int8.
 
     Returns (BK, G, D). BK = batch * n_kv_heads; G = n_heads / n_kv_heads.
+    Irregular S is padded up to a block multiple (padding arrives masked via
+    ``valid``); ``interpret=None`` auto-detects the backend.
     """
+    from repro.kernels.common import default_interpret
+    interpret = default_interpret(interpret)
     BK, G, D = q.shape
     S = k.shape[1]
     bk = min(bk, S)
-    assert S % bk == 0, (S, bk)
+    pad = (-S) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+        S += pad
     grid = (BK, S // bk)
     return pl.pallas_call(
         functools.partial(_dec_kernel, bk=bk),

@@ -8,14 +8,9 @@ byte once (this mirrors what a production engine would store).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .kernel import decode_attention_gqa
-
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def decode_attention(q, k_exp, v_exp, valid):
@@ -34,15 +29,8 @@ def decode_attention(q, k_exp, v_exp, valid):
     else:
         vmask = valid
     vmask = jnp.repeat(vmask, H, axis=0).astype(jnp.int8)
-    pad = (-S) % 512 if S > 512 else (-S) % S if S else 0
-    bk = min(512, S)
-    pad = (-S) % bk
-    if pad:
-        kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
-        vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
-        vmask = jnp.pad(vmask, ((0, 0), (0, pad)))
-    out = decode_attention_gqa(qg, kg, vg, vmask, bk=bk,
-                               interpret=not _is_tpu())
+    # the kernel pads irregular S and auto-detects interpret mode
+    out = decode_attention_gqa(qg, kg, vg, vmask, bk=min(512, S))
     return out.reshape(B, H, 1, D).transpose(0, 2, 1, 3)
 
 
@@ -56,12 +44,5 @@ def decode_attention_kv(q, k, v, valid):
     kg = jnp.moveaxis(k, 2, 1).reshape(B * K, S, D)
     vg = jnp.moveaxis(v, 2, 1).reshape(B * K, S, D)
     vmask = jnp.repeat(valid, K, axis=0).astype(jnp.int8)
-    bk = min(512, S)
-    pad = (-S) % bk
-    if pad:
-        kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
-        vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
-        vmask = jnp.pad(vmask, ((0, 0), (0, pad)))
-    out = decode_attention_gqa(qg, kg, vg, vmask, bk=bk,
-                               interpret=not _is_tpu())
+    out = decode_attention_gqa(qg, kg, vg, vmask, bk=min(512, S))
     return out.reshape(B, K, G, D).reshape(B, H, D)

@@ -22,7 +22,7 @@ NEG_INF = -1e30
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-               *, bq: int, bk: int, causal: bool, window: int):
+               *, bq: int, bk: int, causal: bool, window: int, kv_len: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -41,7 +41,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
+    mask = k_pos < kv_len  # padded tail of an irregular S is never attended
     if causal:
         mask &= k_pos <= q_pos
     if window > 0:
@@ -69,16 +69,30 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          bq: int = 128, bk: int = 128,
-                         interpret: bool = True):
-    """q, k, v: (BH, S, D) with q pre-scaled. Returns (BH, S, D)."""
+                         interpret: bool | None = None):
+    """q, k, v: (BH, S, D) with q pre-scaled. Returns (BH, S, D).
+
+    Irregular S is padded to a block multiple internally (padded key columns
+    are masked, padded query rows sliced off); ``interpret=None`` auto-detects
+    the backend.
+    """
+    from repro.kernels.common import default_interpret
+    interpret = default_interpret(interpret)
     BH, S, D = q.shape
     bq = min(bq, S)
     bk = min(bk, S)
-    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
-    grid = (BH, S // bq, S // bk)
+    if S % bq or S % bk:
+        blk = max(bq, bk)
+        bq = bk = blk
+        Sp = ((S + blk - 1) // blk) * blk
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0)))
+    Sp = q.shape[1]
+    grid = (BH, Sp // bq, Sp // bk)
     kernel = functools.partial(_fa_kernel, bq=bq, bk=bk, causal=causal,
-                               window=window)
-    return pl.pallas_call(
+                               window=window, kv_len=S)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -87,7 +101,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -95,3 +109,4 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :S] if Sp != S else out

@@ -14,24 +14,14 @@ import jax.numpy as jnp
 from .kernel import flash_attention_bhsd
 
 
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
     """q,k,v: (B, S, H, D); q pre-scaled. Returns (B, S, H, D)."""
     B, S, H, D = q.shape
-    bq = bk = min(128, S)
-    pad = (-S) % bq
     qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
     kt = jnp.moveaxis(k, 2, 1).reshape(B * H, S, D)
     vt = jnp.moveaxis(v, 2, 1).reshape(B * H, S, D)
-    if pad:
-        qt = jnp.pad(qt, ((0, 0), (0, pad), (0, 0)))
-        kt = jnp.pad(kt, ((0, 0), (0, pad), (0, 0)))
-        vt = jnp.pad(vt, ((0, 0), (0, pad), (0, 0)))
-    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
-                               bq=bq, bk=bk, interpret=not _is_tpu())
-    out = out[:, :S].reshape(B, H, S, D)
+    # the kernel pads irregular S and auto-detects interpret mode
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window)
+    out = out.reshape(B, H, S, D)
     return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,119 @@
+"""Paged GQA decode-attention Pallas TPU kernel.
+
+Continuous-batching serving stores the KV cache as fixed-size *pages* drawn
+from a shared pool instead of one dense (B, max_seq) slab per request. Each
+request owns a page list (its row of the page table), so KV *memory* tracks
+the tokens actually resident, not the engine-wide ``max_seq``. Compute-wise
+this kernel still walks the full static page-table width per slot (pages
+past a request's length resolve to the reserved scratch page and are fully
+masked); bounding the sequential page dim by the live maximum is an open
+item (see ROADMAP).
+
+This kernel extends the dense GQA decode kernel (kernels/decode_attention)
+with that gather: the page table and per-request sequence lengths arrive as
+*scalar-prefetch* operands (``PrefetchScalarGridSpec``), so the K/V
+BlockSpec index maps can look up the physical page id for grid position
+(b, h, p) before the block DMA is issued — the canonical TPU paged-attention
+pattern. Masking: key position ``p * page_size + i`` is valid iff it is
+``< seq_lens[b]``; page-table entries past a request's length may point
+anywhere (conventionally page 0, the pool's reserved scratch page) and are
+fully masked.
+
+Layouts:
+  q        (B, K, G, D)   pre-scaled; G = n_heads / n_kv_heads
+  k_pages  (P, ps, K, D)  shared page pool (P pages of ps tokens)
+  v_pages  (P, ps, K, D)
+  page_table (B, MP) int32; seq_lens (B,) int32
+Grid = (B, K, MP); (m, l, acc) accumulate in VMEM scratch across the
+sequential trailing page dim, exactly like the dense decode kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]        # (G, D)
+    k = k_ref[0, :, 0, :]  # (ps, D)
+    v = v_ref[0, :, 0, :]  # (ps, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, ps)
+    kpos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    s = jnp.where(kpos < sl_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    pexp = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        pexp.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_gqa(q, k_pages, v_pages, page_table, seq_lens, *,
+                               interpret: bool | None = None):
+    """q: (B, K, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
+    page_table: (B, MP) int32; seq_lens: (B,) int32.
+
+    Returns (B, K, G, D). ``interpret=None`` auto-detects the backend.
+    """
+    from repro.kernels.common import default_interpret
+    interpret = default_interpret(interpret)
+    B, K, G, D = q.shape
+    _, ps, Kk, Dk = k_pages.shape
+    assert (Kk, Dk) == (K, D), (k_pages.shape, q.shape)
+    MP = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, pt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, page_size=ps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for paged GQA decode attention.
+
+Model layout in: q (B, H, D) pre-scaled (one new token per request slot),
+the shared page pool (P, ps, K, D), the per-slot page table (B, MP) and
+sequence lengths (B,). Regroups q to the kernel's (B, K, G, D) GQA layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_decode_attention_gqa
+
+
+@jax.jit
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens):
+    """q: (B, H, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
+    page_table: (B, MP); seq_lens: (B,). Returns (B, H, D)."""
+    B, H, D = q.shape
+    K = k_pages.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D)  # heads are grouped per KV head (GQA order)
+    out = paged_decode_attention_gqa(qg, k_pages, v_pages, page_table,
+                                     seq_lens)
+    return out.reshape(B, H, D)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the paged GQA decode-attention kernel.
+
+Gathers each request's pages through its page-table row into a dense
+(B, MP*ps) key space and runs masked attention — semantically identical to
+the kernel, used both as the test oracle and as the non-Pallas model path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """q: (B, K, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
+    page_table: (B, MP) int32; seq_lens: (B,) int32. Returns (B, K, G, D)."""
+    B, K, G, D = q.shape
+    ps = k_pages.shape[1]
+    MP = page_table.shape[1]
+    # (B, MP, ps, K, D) -> (B, K, MP*ps, D)
+    k = jnp.moveaxis(k_pages[page_table], 3, 1).reshape(B, K, MP * ps, D)
+    v = jnp.moveaxis(v_pages[page_table], 3, 1).reshape(B, K, MP * ps, D)
+    s = jnp.einsum("bkgd,bksd->bkgs", q, k).astype(jnp.float32)
+    valid = jnp.arange(MP * ps)[None] < seq_lens[:, None]      # (B, MP*ps)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", w.astype(v.dtype), v)

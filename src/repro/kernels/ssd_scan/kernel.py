@@ -50,10 +50,13 @@ def _ssd_kernel(x_ref, dt_ref, dacum_ref, b_ref, c_ref, y_ref, st_ref, *, l: int
     st_ref[0] = st.astype(st_ref.dtype)
 
 
-def ssd_chunk_scan(x, dt, dacum, B, C, *, interpret: bool = True):
+def ssd_chunk_scan(x, dt, dacum, B, C, *, interpret: bool | None = None):
     """x: (BC, H, l, P); dt, dacum: (BC, H, l, 1); B, C: (BC, l, N) shared
     across heads (pre-broadcast by ops). Returns (y (BC,H,l,P) fp32,
-    states (BC,H,N,P) fp32). BC = batch*chunks."""
+    states (BC,H,N,P) fp32). BC = batch*chunks. ``interpret=None``
+    auto-detects the backend."""
+    from repro.kernels.common import default_interpret
+    interpret = default_interpret(interpret)
     BCH = x.shape[0] * x.shape[1]
     bc, H, l, P = x.shape
     N = B.shape[-1]

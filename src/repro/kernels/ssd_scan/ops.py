@@ -1,14 +1,9 @@
 """Jit'd wrapper bridging the model's SSD layout to the kernel layout."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .kernel import ssd_chunk_scan
-
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def ssd_chunk(xs, dts, dA_cum, Bs, Cs):
@@ -22,7 +17,7 @@ def ssd_chunk(xs, dts, dA_cum, Bs, Cs):
     da = jnp.transpose(dA_cum, (0, 1, 3, 2)).reshape(b * nc, H, l, 1)
     Bf = Bs.reshape(b * nc, l, N)
     Cf = Cs.reshape(b * nc, l, N)
-    y, st = ssd_chunk_scan(x, dt, da, Bf, Cf, interpret=not _is_tpu())
+    y, st = ssd_chunk_scan(x, dt, da, Bf, Cf)  # interpret auto-detects backend
     y_diag = jnp.transpose(y.reshape(b, nc, H, l, P), (0, 1, 3, 2, 4))
     states = jnp.transpose(st.reshape(b, nc, H, N, P), (0, 1, 2, 4, 3))
     return y_diag, states

@@ -9,6 +9,10 @@ budget.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3.5-moe-42b-a6.6b \
       --requests 256 --drop-budget 2.0
+
+``--continuous`` serves the stream through the continuous-batching paged-KV
+engines (serving.ContinuousHybridEngine) instead of the dense-batch pair —
+the production path for ragged online traffic (attention families only).
 """
 from __future__ import annotations
 
@@ -25,7 +29,8 @@ from repro.core.router import RouterTrainConfig, score_dataset, train_router
 from repro.data import tokenizer as tok
 from repro.data.tasks import generate_dataset, lm_training_arrays
 from repro.models import RouterConfig, build_model
-from repro.serving import Engine, HybridEngine
+from repro.serving import ContinuousEngine, ContinuousHybridEngine, \
+    HybridEngine, make_engine
 from repro.serving.generate import sample_responses
 from repro.training.trainer import TrainConfig, train_lm
 
@@ -51,6 +56,8 @@ def main():
     ap.add_argument("--drop-budget", type=float, default=2.0)
     ap.add_argument("--steps", type=int, default=250)
     ap.add_argument("--samples", type=int, default=4)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve via continuous-batching paged-KV engines")
     args = ap.parse_args()
 
     cfg_s, cfg_l = reduced_pair(args.arch)
@@ -94,9 +101,23 @@ def main():
 
     print("== serving ==")
     router = HybridRouter(rparams, rcfg, cal.threshold)
-    small = Engine(*pair[cfg_s.name], max_new_tokens=12)
-    large = Engine(*pair[cfg_l.name], max_new_tokens=12)
-    hy = HybridEngine(router, small, large)
+    layout = "paged" if args.continuous else "dense"
+    engines = []
+    for name in (cfg_s.name, cfg_l.name):
+        bundle, params = pair[name]
+        # cache_layout only selects the serving engine; params are unchanged
+        bundle = build_model(dataclasses.replace(bundle.cfg,
+                                                 cache_layout=layout))
+        engines.append(make_engine(bundle, params, max_new_tokens=12,
+                                   n_slots=8, max_seq=64))
+    small, large = engines
+    if isinstance(small, ContinuousEngine):
+        hy = ContinuousHybridEngine(router, small, large)
+    else:
+        if args.continuous:
+            print(f"  ({cfg_s.name}: no paged-KV path; falling back to "
+                  "dense-batch engines)")
+        hy = HybridEngine(router, small, large)
     req = generate_dataset(rng, args.requests)
     for i in range(0, args.requests, 64):
         hy.serve(req.query[i:i + 64], req.query_mask[i:i + 64])

@@ -152,6 +152,19 @@ def init_kv_cache(cfg, batch: int, max_seq: int, n_layers: int, dtype=None):
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
+def init_paged_kv_cache(cfg, num_pages: int, page_size: int, n_layers: int,
+                        dtype=None):
+    """Shared page pool: (n_layers, num_pages, page_size, K, Dh) per tensor.
+
+    Page 0 is reserved as the pool's scratch page (writes for inactive slots
+    and masked reads land there); allocators hand out pages >= 1.
+    """
+    K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = dtype or dtype_of(cfg)
+    shape = (n_layers, num_pages, page_size, K, Dh)
+    return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+
+
 def prefill_attention(params, x, cfg, *, is_global=True, positions=None):
     """Prefill: full forward + return this layer's (k, v) for cache insertion."""
     B, S, D = x.shape
@@ -225,6 +238,47 @@ def decode_attention(params, x_t, layer_k, layer_v, pos, cfg, *,
     else:
         out = attend(layer_k, layer_v, jnp.arange(layer_k.shape[1]))
     return _out_proj(params, out, B, 1, H, Dh), layer_k, layer_v
+
+
+def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
+                           seq_lens, active, cfg):
+    """One decode step against a paged KV cache (continuous batching).
+
+    x_t: (B, 1, D) — one new token per serving slot. k_pages/v_pages:
+    (P, ps, K, Dh) shared pool; page_table: (B, MP); seq_lens: (B,) tokens
+    already in each slot's cache (the new token lands at index seq_lens);
+    active: (B,) bool — inactive slots write to the reserved scratch page 0
+    and their output is garbage the engine masks.
+
+    Returns (out (B, 1, D), k_pages, v_pages). Requires uniform global
+    attention (cfg.supports_paged_kv).
+    """
+    B = x_t.shape[0]
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ps = k_pages.shape[1]
+    MP = page_table.shape[1]
+    cap = MP * ps
+    pos = jnp.minimum(seq_lens, cap - 1)                  # write position
+    q, k_t, v_t = _project_qkv(params, x_t, cfg, pos[:, None])
+    page = page_table[jnp.arange(B), pos // ps]           # (B,)
+    page = jnp.where(active, page, 0)                     # scratch for idle
+    k_pages = k_pages.at[page, pos % ps].set(k_t[:, 0])
+    v_pages = v_pages.at[page, pos % ps].set(v_t[:, 0])
+    lens = jnp.minimum(seq_lens + 1, cap)                 # incl. new token
+    scale = Dh ** -0.5
+    qg = (q[:, 0] * scale).reshape(B, K, H // K, Dh)
+    if cfg.use_pallas:
+        from repro.kernels.paged_decode_attention.kernel import \
+            paged_decode_attention_gqa
+        out = paged_decode_attention_gqa(qg, k_pages, v_pages, page_table,
+                                         lens)
+    else:
+        from repro.kernels.paged_decode_attention.ref import \
+            paged_decode_attention_ref
+        out = paged_decode_attention_ref(qg, k_pages, v_pages, page_table,
+                                         lens)
+    out = out.reshape(B, 1, H, Dh)
+    return _out_proj(params, out, B, 1, H, Dh), k_pages, v_pages
 
 
 def _flash_decode_seq_sharded(q, layer_k, layer_v, k_t, v_t, pos, n_heads,

@@ -80,6 +80,12 @@ class ArchConfig:
     use_pallas: bool = False      # use Pallas kernels (TPU target) instead of jnp ref
     attn_chunk: int = 1024        # query-chunk size for memory-bounded jnp attention
 
+    # --- KV-cache layout (serving) ---
+    cache_layout: str = "dense"   # dense: per-request (B, max_seq) slab;
+    #                               paged: shared block pool + page table
+    #                               (continuous-batching serving path)
+    kv_page_size: int = 16        # tokens per KV page when cache_layout="paged"
+
     # ------------------------------------------------------------------ helpers
     @property
     def resolved_head_dim(self) -> int:
@@ -101,6 +107,19 @@ class ArchConfig:
     @property
     def is_attention_free(self) -> bool:
         return self.family == "ssm"
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        """True if the paged KV-cache decode path (continuous-batching
+        serving) covers this architecture: a decoder-only attention stack
+        with uniform global attention and no modality frontend. SSM/hybrid
+        state and sliding-window layers keep recurrent/windowed state the
+        page pool doesn't model; frontend embeddings would occupy cache
+        entries the engine's token-count bookkeeping doesn't cover."""
+        return (not self.is_encoder_decoder
+                and self.family not in ("ssm", "hybrid")
+                and self.frontend == "none"
+                and all(self.is_global_layer_flags()))
 
     @property
     def has_subquadratic_path(self) -> bool:

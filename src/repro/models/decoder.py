@@ -196,6 +196,47 @@ def _ssm_prefill_layer(p, h, cfg):
 
 
 # --------------------------------------------------------------------- decode
+def init_paged_decode_cache(cfg, num_pages: int, page_size: int):
+    """Paged KV cache (continuous-batching serving): a shared page pool per
+    layer. Slot bookkeeping (page table, seq lens) lives with the serving
+    engine's allocator, not in the cache pytree."""
+    if not cfg.supports_paged_kv:
+        raise ValueError(f"{cfg.name}: paged KV cache requires a decoder-only "
+                         "uniform-global attention stack")
+    kv = attn.init_paged_kv_cache(cfg, num_pages, page_size, cfg.n_layers)
+    return {"k_pages": kv["k_pages"], "v_pages": kv["v_pages"]}
+
+
+def decoder_decode_step_paged(params, cache, token, page_table, seq_lens,
+                              active, cfg):
+    """One continuous-batching decode step over the serving slots.
+
+    token: (B, 1) int32 — per-slot next token; page_table (B, MP),
+    seq_lens (B,) int32, active (B,) bool come from the engine's page
+    allocator. Returns (logits (B, V), cache with updated pools)."""
+    x = embed(params["embed"], token)
+
+    def body(x, xs):
+        layer_p, kp, vp = xs
+        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+        o, kp, vp = attn.paged_decode_attention(layer_p["attn"], h, kp, vp,
+                                                page_table, seq_lens, active,
+                                                cfg)
+        x = x + o
+        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+        else:
+            y = mlp(layer_p["mlp"], h)
+        return constrain_batch(x + y), (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, {"k_pages": kps, "v_pages": vps}
+
+
 def init_decode_cache(cfg, batch: int, max_seq: int):
     if cfg.family == "ssm":
         st = ssm_lib.init_ssm_state(cfg, batch, cfg.n_layers)

@@ -14,7 +14,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 from .config import ArchConfig
 from . import decoder, encdec, hybrid
@@ -28,6 +28,11 @@ class ModelBundle:
     prefill: Callable
     decode_step: Callable
     init_cache: Callable
+    # Paged-KV (continuous-batching) serving path; None where the family
+    # doesn't support it (see ArchConfig.supports_paged_kv). Selected by
+    # cfg.cache_layout="paged" / the ContinuousEngine.
+    decode_step_paged: Optional[Callable] = None
+    init_paged_cache: Optional[Callable] = None
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -52,6 +57,16 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
             init_cache=lambda bs, ms: hybrid.init_hybrid_cache(cfg, bs, ms),
         )
     # dense / moe / ssm / vlm all share the decoder-only path
+    paged = {}
+    if cfg.supports_paged_kv:
+        paged = dict(
+            decode_step_paged=lambda p, c, t, page_table, seq_lens, active:
+                decoder.decoder_decode_step_paged(p, c, t, page_table,
+                                                  seq_lens, active, cfg),
+            init_paged_cache=lambda num_pages, page_size=None:
+                decoder.init_paged_decode_cache(
+                    cfg, num_pages, page_size or cfg.kv_page_size),
+        )
     return ModelBundle(
         cfg=cfg,
         init=lambda key: decoder.init_decoder(key, cfg),
@@ -60,4 +75,5 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
         decode_step=lambda p, c, t, windowed=False:
             decoder.decoder_decode_step(p, c, t, cfg, windowed=windowed),
         init_cache=lambda bs, ms: decoder.init_decode_cache(cfg, bs, ms),
+        **paged,
     )

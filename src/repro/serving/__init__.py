@@ -1,3 +1,7 @@
 from .generate import build_generate_fn, sample_responses
-from .engine import Engine, ServeStats
-from .hybrid import HybridEngine, HybridResult, build_fused_hybrid_step
+from .engine import (ContinuousEngine, ContinuousStats, Engine, ServeStats,
+                     make_engine)
+from .cache import CacheStats, PagedKVCache
+from .scheduler import ContinuousScheduler, Request
+from .hybrid import (ContinuousHybridEngine, HybridEngine, HybridResult,
+                     build_fused_hybrid_step)

@@ -1,0 +1,146 @@
+"""Paged KV cache: a block-pool allocator over a shared device page pool.
+
+Dense serving gives every request a (max_seq, K, Dh) slab per layer — memory
+scales with the *worst-case* context. The paged cache instead carves the
+device KV buffers into fixed-size pages (``models.attention.init_paged_kv_cache``)
+and hands each serving slot just the pages its context actually occupies,
+vLLM-style. The allocator here is host-side bookkeeping (free list, page
+table, per-slot lengths); the jitted decode step consumes snapshots of the
+table as device arrays, so the step stays shape-stable while occupancy churns.
+
+Page 0 is reserved: inactive slots' writes and fully-masked reads land there,
+so the jitted step never needs a branch on slot liveness.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheStats:
+    num_pages: int = 0            # allocatable pages (excl. reserved page 0)
+    page_size: int = 0
+    pages_in_use: int = 0
+    high_water_pages: int = 0     # max pages_in_use over the session
+    allocs: int = 0               # slot admissions
+    appends: int = 0              # decode-time page extensions
+    oom_denials: int = 0          # admissions/extensions refused for space
+
+    @property
+    def high_water_tokens(self) -> int:
+        return self.high_water_pages * self.page_size
+
+
+class PagedKVCache:
+    """Block-pool KV cache for one model's serving slots.
+
+    ``bundle.init_paged_cache`` builds the device pool; this class owns the
+    host-side page table (n_slots, max_pages_per_slot), per-slot lengths,
+    and the free list. The engine reassigns ``self.pool`` with the jit
+    step's updated pool arrays each step.
+    """
+
+    def __init__(self, bundle, n_slots: int, num_pages: int, page_size: int,
+                 max_pages_per_slot: int):
+        if bundle.init_paged_cache is None:
+            raise ValueError(f"{bundle.cfg.name}: architecture does not "
+                             "support the paged KV cache layout")
+        self.pool = bundle.init_paged_cache(num_pages, page_size)
+        self.n_slots = n_slots
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        self.page_table = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        self.seq_lens = np.zeros((n_slots,), np.int32)
+        self._free = list(range(num_pages - 1, 0, -1))  # pop() -> 1, 2, ...
+        self._owned: dict[int, list[int]] = {s: [] for s in range(n_slots)}
+        self.stats = CacheStats(num_pages=num_pages - 1, page_size=page_size)
+
+    # ------------------------------------------------------------- allocation
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        n = self.pages_for(max(n_tokens, 1))
+        return n <= len(self._free) and n <= self.max_pages_per_slot
+
+    def alloc_slot(self, slot: int, n_tokens: int):
+        """Allocate pages covering ``n_tokens`` for an empty slot. Returns the
+        page ids (np.int32) or None if the pool can't satisfy the request."""
+        assert not self._owned[slot], f"slot {slot} already owns pages"
+        n = self.pages_for(max(n_tokens, 1))
+        if n > len(self._free) or n > self.max_pages_per_slot:
+            self.stats.oom_denials += 1
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = pages
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :n] = pages
+        self.seq_lens[slot] = n_tokens
+        self.stats.allocs += 1
+        self._mark_usage()
+        return np.asarray(pages, np.int32)
+
+    def ensure_append(self, slot: int) -> bool:
+        """Guarantee room for one more token in ``slot`` (the next decode
+        step's write). Allocates a fresh page at a page boundary. Returns
+        False when the pool is exhausted or the slot hit its page cap — the
+        engine then skips the slot this step (admission-control stall)."""
+        used = int(self.seq_lens[slot])
+        owned = self._owned[slot]
+        if used < len(owned) * self.page_size:
+            return True
+        if len(owned) >= self.max_pages_per_slot or not self._free:
+            self.stats.oom_denials += 1
+            return False
+        page = self._free.pop()
+        self.page_table[slot, len(owned)] = page
+        owned.append(page)
+        self.stats.appends += 1
+        self._mark_usage()
+        return True
+
+    def free_slot(self, slot: int):
+        """Return the slot's pages to the pool."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.page_table[slot, :] = 0
+        self.seq_lens[slot] = 0
+        self._mark_usage()
+
+    # ------------------------------------------------------------------ views
+    def device_tables(self):
+        """(page_table, seq_lens) as device arrays for the jitted step.
+
+        Copies, not views: on CPU ``jnp.asarray`` may alias the numpy
+        buffer zero-copy, and the allocator mutates these arrays while the
+        dispatched step is still reading them asynchronously."""
+        return jnp.array(self.page_table), jnp.array(self.seq_lens)
+
+    # ------------------------------------------------------------------ stats
+    def _mark_usage(self):
+        in_use = self.stats.num_pages - len(self._free)
+        self.stats.pages_in_use = in_use
+        self.stats.high_water_pages = max(self.stats.high_water_pages, in_use)
+
+    @property
+    def bytes_per_page(self) -> int:
+        k = self.pool["k_pages"]  # (L, P, ps, K, Dh) x2 for k and v
+        per_token = k.shape[0] * k.shape[3] * k.shape[4] * 2 * k.dtype.itemsize
+        return per_token * self.page_size
+
+    @property
+    def high_water_bytes(self) -> int:
+        return self.stats.high_water_pages * self.bytes_per_page
+
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of allocated token slots not holding a token (tail waste
+        of partially-filled last pages). Dense serving's analogue is the
+        entire (max_seq - len) tail."""
+        alloc = sum(len(p) for p in self._owned.values()) * self.page_size
+        used = int(self.seq_lens.sum())
+        return (alloc - used) / alloc if alloc else 0.0

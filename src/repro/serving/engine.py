@@ -1,10 +1,34 @@
-"""Single-model serving engine: fixed-shape batched request serving with
-bucketed batches (powers of two) so jit caches stay warm across requests."""
+"""Serving engines: dense-batch and continuous-paged.
+
+Serving architecture — two execution models:
+
+* **Dense batch** (``Engine``): one synchronous fixed-shape batch at a time.
+  Requests are padded to a power-of-two bucket and a shared prompt width;
+  every request gets a dense per-request KV slab sized ``prompt + max_new``
+  and the whole batch decodes for ``max_new_tokens`` steps regardless of
+  where EOS lands. Simple, one jit cache entry per (bucket, prompt-len),
+  ideal for offline evaluation sweeps where requests are homogeneous.
+
+* **Continuous paged** (``ContinuousEngine``): a step-driven engine over a
+  fixed number of serving *slots* and a shared paged KV pool
+  (serving.cache.PagedKVCache + serving.scheduler.ContinuousScheduler).
+  Each step admits pending requests into freed slots, decodes one token for
+  every occupied slot, and retires requests at EOS / their own length cap —
+  so KV memory tracks the tokens actually resident, every decode step is
+  spent on a live request, and short requests never barrier on stragglers.
+  Use for online serving with ragged prompt/output
+  lengths; this is the substrate the hybrid router's small-model stream
+  needs to realise its latency win (see serving.hybrid).
+
+``Engine.stats`` exposes compile counts and padding waste so bucket
+recompiles show up in benchmarks; ``ContinuousEngine.stats`` + its cache
+stats expose occupancy, admission stalls, and the KV high-water mark.
+"""
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +36,9 @@ import numpy as np
 
 from repro.data import tokenizer as tok
 from repro.models.model import ModelBundle
-from .generate import build_generate_fn
+from .cache import PagedKVCache
+from .generate import build_generate_fn, _sample
+from .scheduler import ContinuousScheduler, Request
 
 
 def _bucket(n: int) -> int:
@@ -22,16 +48,30 @@ def _bucket(n: int) -> int:
     return b
 
 
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
 @dataclasses.dataclass
 class ServeStats:
     requests: int = 0
     batches: int = 0
     gen_tokens: int = 0
     wall_s: float = 0.0
+    compiles: int = 0            # distinct (bucket, prompt-len) generate shapes
+    pad_slots: int = 0           # bucket-padding rows across batches
+    slot_count: int = 0          # total rows (incl. padding) across batches
+    kv_high_water_bytes: int = 0  # largest dense KV slab held by one batch
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of batch rows that were bucket padding, not requests."""
+        return self.pad_slots / self.slot_count if self.slot_count else 0.0
 
 
 class Engine:
-    """Serves one model. Queries are padded token arrays (N, Lq)."""
+    """Serves one model, dense-batch mode. Queries are padded token arrays
+    (N, Lq)."""
 
     def __init__(self, bundle: ModelBundle, params, max_new_tokens: int = 16,
                  temperature: float = 0.0):
@@ -40,15 +80,43 @@ class Engine:
         self.max_new_tokens = max_new_tokens
         self.temperature = temperature
         self._gen = build_generate_fn(bundle, max_new_tokens, temperature)
+        self._shapes: set = set()   # (bucket, prompt_len) already compiled
         self.stats = ServeStats()
+
+    def warmup(self, prompt_len: int, max_batch: int):
+        """Precompile the generate fn for every bucket up to ``max_batch`` at
+        ``prompt_len``, so first-request latency doesn't eat the compiles."""
+        b = 1
+        while b <= _bucket(max_batch):
+            dummy = np.full((b, prompt_len), tok.PAD, np.int32)
+            self._gen(self.params, {"tokens": jnp.asarray(dummy)},
+                      jax.random.PRNGKey(0))
+            if (b, prompt_len) not in self._shapes:
+                self._shapes.add((b, prompt_len))
+                self.stats.compiles += 1
+            b *= 2
+
+    def _kv_slab_bytes(self, batch: int, prompt_len: int) -> int:
+        cfg = self.bundle.cfg
+        if not cfg.n_kv_heads:
+            return 0
+        extra = cfg.num_frontend_tokens if cfg.frontend == "vision_stub" else 0
+        seq = prompt_len + extra + self.max_new_tokens
+        itemsize = 4 if cfg.dtype == "float32" else 2
+        return (cfg.n_layers * batch * seq * cfg.n_kv_heads
+                * cfg.resolved_head_dim * 2 * itemsize)
 
     def serve(self, query_tokens: np.ndarray, seed: int = 0
               ) -> tuple[np.ndarray, np.ndarray]:
         """Returns (responses (N, T), lengths (N,))."""
         n = len(query_tokens)
         b = _bucket(n)
-        padded = np.full((b, query_tokens.shape[1]), tok.PAD, np.int32)
+        Lq = query_tokens.shape[1]
+        padded = np.full((b, Lq), tok.PAD, np.int32)
         padded[:n] = query_tokens
+        if (b, Lq) not in self._shapes:   # jit compiles on first use
+            self._shapes.add((b, Lq))
+            self.stats.compiles += 1
         t0 = time.time()
         toks, lens = self._gen(self.params, {"tokens": jnp.asarray(padded)},
                                jax.random.PRNGKey(seed))
@@ -57,4 +125,244 @@ class Engine:
         self.stats.batches += 1
         self.stats.gen_tokens += int(lens.sum())
         self.stats.wall_s += time.time() - t0
+        self.stats.pad_slots += b - n
+        self.stats.slot_count += b
+        self.stats.kv_high_water_bytes = max(
+            self.stats.kv_high_water_bytes, self._kv_slab_bytes(b, Lq))
         return toks, lens
+
+
+def make_engine(bundle: ModelBundle, params, **kw):
+    """Engine factory honouring the config's cache-layout flag:
+    ``cfg.cache_layout == "paged"`` selects the continuous-batching paged
+    engine (when the architecture supports it — see
+    ArchConfig.supports_paged_kv), anything else the dense-batch engine.
+    Continuous-only kwargs (n_slots, max_seq, ...) are dropped for dense."""
+    if bundle.cfg.cache_layout == "paged" and bundle.decode_step_paged:
+        return ContinuousEngine(bundle, params, **kw)
+    return Engine(bundle, params, **{k: v for k, v in kw.items()
+                                     if k in ("max_new_tokens", "temperature")})
+
+
+# --------------------------------------------------------------- continuous
+@dataclasses.dataclass
+class ContinuousStats:
+    steps: int = 0
+    admitted: int = 0
+    retired: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    occupancy_sum: int = 0       # steppable slots summed over steps
+    admission_stalls: int = 0    # admissions deferred for page-pool space
+    wall_s: float = 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+
+class ContinuousEngine:
+    """Step-driven continuous-batching engine over a paged KV cache.
+
+    ``submit`` enqueues a request (its own ``max_new_tokens`` cap allowed);
+    ``step`` advances the world by one decode token per occupied slot,
+    admitting and retiring as it goes; ``run`` drains the queue. ``serve``
+    is the batch-API compatibility wrapper.
+    """
+
+    def __init__(self, bundle: ModelBundle, params, max_new_tokens: int = 16,
+                 temperature: float = 0.0, *, n_slots: int = 8,
+                 page_size: Optional[int] = None, max_seq: int = 256,
+                 num_pages: Optional[int] = None, seed: int = 0):
+        if bundle.decode_step_paged is None:
+            raise ValueError(f"{bundle.cfg.name}: no paged decode path "
+                             "(ArchConfig.supports_paged_kv is False)")
+        self.bundle = bundle
+        self.params = params
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        ps = page_size or bundle.cfg.kv_page_size
+        mp = _round_up(max_seq, ps) // ps
+        if num_pages is None:
+            num_pages = 1 + n_slots * mp   # page 0 reserved
+        self.cache = PagedKVCache(bundle, n_slots, num_pages, ps, mp)
+        self.sched = ContinuousScheduler(n_slots)
+        self.stats = ContinuousStats()
+        self.n_slots = n_slots
+        self._next_in = np.full((n_slots,), tok.PAD, np.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(bundle.prefill, static_argnums=(2,))
+        self._decode = self._build_decode()
+        # donated pools: scatter updates in place rather than copying
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ jit pieces
+    def _build_decode(self):
+        bundle, temperature = self.bundle, self.temperature
+
+        def fn(params, k_pages, v_pages, token, page_table, seq_lens, active,
+               key):
+            logits, cache = bundle.decode_step_paged(
+                params, {"k_pages": k_pages, "v_pages": v_pages}, token,
+                page_table, seq_lens, active)
+            nxt = _sample(key, logits, temperature)
+            nxt = jnp.where(active, nxt, jnp.int32(tok.PAD))
+            return nxt, cache["k_pages"], cache["v_pages"]
+
+        # donate the pools: the step updates them in place instead of
+        # copying the whole pool per decoded token (engine reassigns
+        # cache.pool from the outputs immediately)
+        return jax.jit(fn, donate_argnums=(1, 2))
+
+    @staticmethod
+    def _scatter_impl(k_pool, v_pool, ks, vs, page_ids):
+        """Scatter a prefilled dense cache (L, 1, Spad, K, D) into the pool
+        pages listed in ``page_ids`` (Spad = len(page_ids) * page_size).
+        Pools are donated — updated in place, not copied."""
+        L, _, Spad, K, D = ks.shape
+        n = page_ids.shape[0]
+        ksr = ks[:, 0].reshape(L, n, Spad // n, K, D)
+        vsr = vs[:, 0].reshape(L, n, Spad // n, K, D)
+        return (k_pool.at[:, page_ids].set(ksr),
+                v_pool.at[:, page_ids].set(vsr))
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -------------------------------------------------------------- requests
+    def submit(self, tokens: np.ndarray, max_new_tokens: Optional[int] = None
+               ) -> Request:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if len(tokens) == 0:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "token to prefill")
+        cap = self.cache.max_pages_per_slot * self.cache.page_size
+        if len(tokens) + 1 > cap:
+            raise ValueError(f"prompt of {len(tokens)} tokens + 1 exceeds the "
+                             f"engine context capacity {cap}")
+        max_new = self.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens
+        if max_new < 1:
+            raise ValueError(f"max_new_tokens={max_new}: a request must be "
+                             "allowed at least one output token")
+        # worst-case cache footprint if this request runs alone: prompt plus
+        # every generated token but the last (which is sampled, not written),
+        # bounded by the per-slot context cap. Beyond the pool it can never
+        # finish even after every other slot retires.
+        peak = self.cache.pages_for(min(len(tokens) + max_new - 1, cap))
+        if peak > self.cache.stats.num_pages:
+            raise ValueError(f"prompt of {len(tokens)} tokens with "
+                             f"max_new_tokens={max_new} needs {peak} pages "
+                             f"but the pool only has "
+                             f"{self.cache.stats.num_pages}; it could never "
+                             "complete")
+        req = Request(tokens=tokens, max_new_tokens=max_new)
+        return self.sched.submit(req)
+
+    def _retire(self, slot: int) -> Request:
+        self.cache.free_slot(slot)
+        self._next_in[slot] = tok.PAD
+        self.stats.retired += 1
+        return self.sched.retire(slot)
+
+    def _push_token(self, req: Request, token: int) -> Optional[Request]:
+        """Record an emitted token; retire on EOS / request cap."""
+        req.out.append(int(token))
+        if token == tok.EOS or req.n_generated >= req.max_new_tokens:
+            return self._retire(req.slot)
+        self._next_in[req.slot] = token
+        return None
+
+    def _admit(self, retired: List[Request]):
+        while self.sched.pending and self.sched.has_free_slot:
+            nxt = self.sched.peek_pending()
+            if not self.cache.can_admit(len(nxt.tokens)):
+                self.stats.admission_stalls += 1
+                break
+            req = self.sched.admit()
+            n_tok = len(req.tokens)
+            spad = _round_up(n_tok, self.cache.page_size)
+            logits, kv = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.tokens[None])}, spad)
+            pages = self.cache.alloc_slot(req.slot, n_tok)
+            kp, vp = self._scatter(self.cache.pool["k_pages"],
+                                   self.cache.pool["v_pages"],
+                                   kv["k"], kv["v"], jnp.asarray(pages))
+            self.cache.pool = {"k_pages": kp, "v_pages": vp}
+            self.stats.admitted += 1
+            self.stats.prefill_tokens += n_tok
+            first = int(_sample(self._next_key(), logits,
+                                self.temperature)[0])
+            done = self._push_token(req, first)
+            if done is not None:
+                retired.append(done)
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[Request]:
+        """Admit, decode one token per occupied slot, retire. Returns the
+        requests completed during this step."""
+        t0 = time.time()
+        retired: List[Request] = []
+        self._admit(retired)
+        cap = self.cache.max_pages_per_slot * self.cache.page_size
+        steppable = []
+        for slot in self.sched.active_slots():
+            if int(self.cache.seq_lens[slot]) + 1 > cap:
+                retired.append(self._retire(slot))   # context-length cap
+            elif self.cache.ensure_append(slot):
+                steppable.append(slot)
+        if steppable:
+            active = np.zeros((self.n_slots,), bool)
+            active[steppable] = True
+            pt, sl = self.cache.device_tables()
+            # jnp.array (copy): _next_in is mutated below while the
+            # dispatched step may still be reading it (CPU zero-copy alias)
+            nxt, kp, vp = self._decode(
+                self.params, self.cache.pool["k_pages"],
+                self.cache.pool["v_pages"],
+                jnp.array(self._next_in[:, None]), pt, sl,
+                jnp.asarray(active), self._next_key())
+            self.cache.pool = {"k_pages": kp, "v_pages": vp}
+            self.cache.seq_lens[steppable] += 1
+            nxt = np.asarray(nxt)
+            for slot in steppable:
+                self.stats.decode_tokens += 1
+                done = self._push_token(self.sched.running[slot],
+                                        int(nxt[slot]))
+                if done is not None:
+                    retired.append(done)
+            self.stats.steps += 1
+            self.stats.occupancy_sum += len(steppable)
+        elif (self.sched.running or self.sched.pending) and not retired:
+            # nothing stepped, nothing retired, yet work remains: occupied
+            # slots all stalled on pages, or a pending request can't admit
+            # into an otherwise idle pool — neither can ever resolve
+            raise RuntimeError(
+                "page pool deadlock: no slot could step and no request "
+                "could admit or retire; provision more pages")
+        self.stats.wall_s += time.time() - t0
+        return retired
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns all requests retired during the drain."""
+        done: List[Request] = []
+        while self.sched.has_work:
+            done.extend(self.step())
+        return done
+
+    # ----------------------------------------------------------- compat API
+    def serve(self, query_tokens: np.ndarray, seed: int = 0
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Batch-API wrapper: submit every row, drain, return
+        (responses (N, T), lengths (N,)) like ``Engine.serve``."""
+        del seed  # per-engine RNG stream; kept for API parity
+        reqs = [self.submit(row) for row in query_tokens]
+        self.run()
+        T = self.max_new_tokens
+        out = np.full((len(reqs), T), tok.PAD, np.int32)
+        lens = np.zeros((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            lens[i] = r.n_generated
+            out[i, :r.n_generated] = r.out[:T]
+        return out, lens

@@ -1,22 +1,36 @@
 """Hybrid two-model serving — the paper's deployment artifact.
 
-``HybridEngine`` is the host-side orchestrator: score queries with the
-router, partition the batch, serve each partition on its engine, and account
-cost advantage. This mirrors the paper's edge/cloud split (Fig. 2): in a real
-deployment the small-engine partition never leaves the edge device.
+Two orchestration models, mirroring serving.engine's two execution models:
+
+* ``HybridEngine`` (dense batch): score a batch with the router, partition
+  it, serve each partition on its dense engine, join. The join is a *batch
+  barrier*: the small-model stream's results are held until the large-model
+  partition finishes, so the latency separation the router creates is thrown
+  away at the systems level. Kept for offline evaluation parity with the
+  paper's tables.
+
+* ``ContinuousHybridEngine`` (continuous paged): the router is an
+  *admission-time classifier*. Each submitted query is scored once and
+  enqueued on the small or large ``ContinuousEngine``; both engines step
+  independently, so small-model requests admit, decode, and retire while
+  large-model requests are still in flight — no cross-engine barrier. This
+  is the paper's edge/cloud split (Fig. 2) as a serving system: in a real
+  deployment each engine is a separate device and ``step`` is its event
+  loop.
 
 ``build_fused_hybrid_step`` is the TPU-side artifact for the dry-run: ONE
 XLA program lowering router + small-model decode + large-model decode with a
 routing mask selecting per-query outputs. XLA needs static shapes, so both
 models run over the full batch and the mask selects — the dry-run uses this
 to prove the whole hybrid stack (router included) shards on the production
-mesh. Cost accounting on real hardware comes from the host-side engine,
+mesh. Cost accounting on real hardware comes from the host-side engines,
 where the partition is physical, not masked.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +39,8 @@ import numpy as np
 from repro.core.routing import CostMeter, HybridRouter
 from repro.models.encoder import RouterConfig, router_encode
 from repro.models.model import ModelBundle
-from .engine import Engine
+from .engine import ContinuousEngine, Engine
+from .scheduler import Request
 
 
 @dataclasses.dataclass
@@ -37,6 +52,8 @@ class HybridResult:
 
 
 class HybridEngine:
+    """Dense-batch hybrid serving: partition, serve both, barrier-join."""
+
     def __init__(self, router: HybridRouter, small: Engine, large: Engine):
         self.router = router
         self.small = small
@@ -59,6 +76,81 @@ class HybridEngine:
             r, l = self.large.serve(query_tokens[~to_small], seed)
             responses[~to_small], lengths[~to_small] = r, l
         self.meter.record(to_small, T)
+        return HybridResult(responses, lengths, to_small, scores)
+
+
+class ContinuousHybridEngine:
+    """Admission-time routed serving over two independently-stepping
+    continuous engines. The small stream never barriers on the large one."""
+
+    def __init__(self, router: HybridRouter, small: ContinuousEngine,
+                 large: ContinuousEngine):
+        self.router = router
+        self.small = small
+        self.large = large
+        self.meter = CostMeter()
+        self._routed: Dict[int, bool] = {}   # rid -> routed_small
+
+    def submit(self, query_tokens: np.ndarray, query_mask: np.ndarray,
+               max_new_tokens: Optional[np.ndarray] = None,
+               trim_padding: bool = True
+               ) -> Tuple[List[Request], np.ndarray, np.ndarray]:
+        """Score and enqueue a batch of queries. Returns (requests,
+        routed_small, scores); requests retire later via step()/run().
+
+        ``max_new_tokens``: optional per-request output caps (N,).
+        ``trim_padding``: drop each row's PAD tail (from ``query_mask``)
+        before enqueueing — paged prefill only pays for real tokens."""
+        scores = np.asarray(self.router.scores(jnp.asarray(query_tokens),
+                                               jnp.asarray(query_mask)))
+        to_small = scores >= self.router.threshold
+        reqs = []
+        for i, (row, small_bound) in enumerate(zip(query_tokens, to_small)):
+            eng = self.small if small_bound else self.large
+            if trim_padding:
+                row = row[:max(1, int(np.asarray(query_mask[i]).sum()))]
+            cap = int(max_new_tokens[i]) if max_new_tokens is not None else None
+            req = eng.submit(row, max_new_tokens=cap)
+            self._routed[req.rid] = bool(small_bound)
+            reqs.append(req)
+        return reqs, to_small, scores
+
+    def _account(self, retired: List[Request]):
+        for req in retired:
+            # pop: the registry must not grow for the life of the process
+            self.meter.record(np.array([self._routed.pop(req.rid)]),
+                              req.n_generated)
+
+    def step(self) -> List[Request]:
+        """Advance both engines by one decode step each (no cross-engine
+        join). Returns the requests retired this step."""
+        retired = []
+        if self.small.sched.has_work:
+            retired.extend(self.small.step())
+        if self.large.sched.has_work:
+            retired.extend(self.large.step())
+        self._account(retired)
+        return retired
+
+    def run(self) -> List[Request]:
+        done = []
+        while self.small.sched.has_work or self.large.sched.has_work:
+            done.extend(self.step())
+        return done
+
+    def serve(self, query_tokens: np.ndarray, query_mask: np.ndarray,
+              seed: int = 0) -> HybridResult:
+        """Batch-API wrapper matching ``HybridEngine.serve``."""
+        del seed
+        reqs, to_small, scores = self.submit(query_tokens, query_mask)
+        self.run()
+        T = max(self.small.max_new_tokens, self.large.max_new_tokens)
+        N = len(reqs)
+        responses = np.zeros((N, T), np.int32)
+        lengths = np.zeros((N,), np.int32)
+        for i, req in enumerate(reqs):
+            lengths[i] = req.n_generated
+            responses[i, :req.n_generated] = req.out[:T]
         return HybridResult(responses, lengths, to_small, scores)
 
 

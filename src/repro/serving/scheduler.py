@@ -1,0 +1,88 @@
+"""Slot-based continuous-batching scheduler.
+
+The engine decodes a fixed number of *slots* every step (jit-stable shapes).
+Requests queue in submission order; whenever a slot frees up (EOS /
+length-cap retirement) the scheduler admits the next pending request into it
+— no batch barrier, so short requests never wait for stragglers that merely
+shared their admission batch. Page-pool admission control lives with the
+engine (a request is only admitted when ``PagedKVCache.can_admit`` holds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+_RID = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request's lifecycle record."""
+    tokens: np.ndarray                     # prompt (1-d int32)
+    max_new_tokens: int
+    rid: int = dataclasses.field(default_factory=lambda: next(_RID))
+    submit_t: float = 0.0                  # wall time enqueued
+    start_t: float = 0.0                   # wall time admitted to a slot
+    finish_t: float = 0.0                  # wall time retired
+    slot: Optional[int] = None
+    out: list = dataclasses.field(default_factory=list)  # emitted token ids
+    done: bool = False
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.out)
+
+    @property
+    def latency(self) -> float:
+        return self.finish_t - self.submit_t
+
+
+class ContinuousScheduler:
+    """Tracks pending queue and the slot -> request assignment."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.pending: deque[Request] = deque()
+        self.running: dict[int, Request] = {}
+        self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0,1,..
+
+    def submit(self, req: Request) -> Request:
+        req.submit_t = time.time()
+        self.pending.append(req)
+        return req
+
+    @property
+    def has_free_slot(self) -> bool:
+        return bool(self._free_slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.running)
+
+    def peek_pending(self) -> Optional[Request]:
+        return self.pending[0] if self.pending else None
+
+    def admit(self) -> Request:
+        """Move the head-of-queue request into a free slot (caller has
+        already secured its cache pages)."""
+        req = self.pending.popleft()
+        req.slot = self._free_slots.pop()
+        req.start_t = time.time()
+        self.running[req.slot] = req
+        return req
+
+    def retire(self, slot: int) -> Request:
+        req = self.running.pop(slot)
+        req.done = True
+        req.finish_t = time.time()
+        req.slot = None
+        self._free_slots.append(slot)
+        return req
+
+    def active_slots(self) -> list[int]:
+        return sorted(self.running)

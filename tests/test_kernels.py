@@ -90,6 +90,41 @@ def test_decode_attention_kv_layout():
                                rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("S", [5, 130, 300])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_irregular_lengths(S, causal):
+    """Irregular S (not a block multiple) pads internally; padded key
+    columns must be masked even without causal masking."""
+    rng = np.random.default_rng(S)
+    B, H, D = 1, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32) * (D ** -0.5)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, causal=causal)
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * H, S, D)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * H, S, D)
+    ref = fa_ref.attention_ref(qt, kt, vt, causal=causal)
+    ref = jnp.moveaxis(ref.reshape(B, H, S, D), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("S,bk", [(700, 512), (63, 512), (129, 128)])
+def test_decode_attention_irregular_lengths(S, bk):
+    """Cache lengths that don't divide the block size pad internally."""
+    rng = np.random.default_rng(S)
+    BK, G, D = 2, 2, 32
+    q = jnp.asarray(rng.standard_normal((BK, G, D)), jnp.float32) * (D ** -0.5)
+    k = jnp.asarray(rng.standard_normal((BK, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BK, S, D)), jnp.float32)
+    valid = jnp.asarray(rng.integers(0, 2, (BK, S)), jnp.int8).at[:, 0].set(1)
+    out = decode_attention_gqa(q, k, v, valid, bk=bk)
+    ref = da_ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
 @pytest.mark.parametrize("l,H,P,N", [(16, 2, 8, 8), (32, 4, 16, 8),
                                      (64, 3, 32, 16)])
 def test_ssd_kernel_sweep(l, H, P, N):

@@ -80,6 +80,41 @@ def test_windowed_decode_matches_full_within_window():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("pos", [0, 3, 6, 8, 10, 12, 20])
+def test_windowed_decode_sink_window_overlap(pos):
+    """Windowed decode must attend exactly sink ∪ window with no double
+    counting — including small ``pos`` where the attention-sink prefix
+    overlaps the sliding window (0 <= start <= sink)."""
+    from repro.models import attention as attn_mod
+    cfg = tiny_cfg("dense", long_context_window=8, attention_sink=4)
+    params = attn_mod.init_attention(jax.random.PRNGKey(0), cfg)
+    B, Smax = 2, 32
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(pos)
+    lk = jnp.asarray(rng.standard_normal((B, Smax, cfg.n_kv_heads, Dh)),
+                     jnp.float32)
+    lv = jnp.asarray(rng.standard_normal((B, Smax, cfg.n_kv_heads, Dh)),
+                     jnp.float32)
+    x_t = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+    out_w, k2, v2 = attn_mod.decode_attention(params, x_t, lk, lv, pos, cfg,
+                                              windowed=True)
+    # oracle: full-cache attention masked to sink ∪ window positions
+    q, _, _ = attn_mod._project_qkv(params, x_t, cfg, jnp.full((B, 1), pos))
+    kk = attn_mod._expand_kv(k2, H)
+    vv = attn_mod._expand_kv(v2, H)
+    kpos = jnp.arange(Smax)
+    W, sink = cfg.long_context_window, cfg.attention_sink
+    valid = (kpos <= pos) & ((kpos >= max(pos - W + 1, 0)) | (kpos < sink))
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32) \
+        * (Dh ** -0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, attn_mod.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    ref = jnp.einsum("bhqs,bshk->bqhk", w, vv)
+    ref = attn_mod._out_proj(params, ref, B, 1, H, Dh)
+    np.testing.assert_allclose(np.asarray(out_w), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_gemma3_local_global_pattern():
     cfg = tiny_cfg("dense", n_layers=6, sliding_window=4, local_global_ratio=5)
     flags = cfg.is_global_layer_flags()

@@ -110,6 +110,94 @@ def test_fused_hybrid_step_lowers_and_runs():
     assert bool(jnp.isfinite(logits).all())
 
 
+def _scripted_bundle(cfg, fav_id, eos_at=None):
+    """A ModelBundle whose logits always favor ``fav_id`` until step
+    ``eos_at`` (token index), after which they favor EOS. Deterministic
+    oracle for generate-length accounting."""
+    from repro.models.model import ModelBundle
+    V = cfg.vocab_size
+
+    def logits_at(i, B):
+        if eos_at is None:
+            tid = jnp.int32(fav_id)
+        else:
+            tid = jnp.where(i >= eos_at, jnp.int32(tok.EOS),
+                            jnp.int32(fav_id))
+        return jnp.broadcast_to(jax.nn.one_hot(tid, V) * 10.0, (B, V))
+
+    def prefill(params, inputs, max_seq=None):
+        return logits_at(0, inputs["tokens"].shape[0]), {"i": jnp.int32(1)}
+
+    def decode_step(params, cache, token, windowed=False):
+        i = cache["i"]
+        return logits_at(i, token.shape[0]), {"i": i + 1}
+
+    return ModelBundle(cfg=cfg, init=None, forward=None, prefill=prefill,
+                       decode_step=decode_step, init_cache=None)
+
+
+def test_generate_length_eos_on_first_token():
+    cfg = tiny_cfg("dense")
+    bundle = _scripted_bundle(cfg, fav_id=10, eos_at=0)
+    gen = build_generate_fn(bundle, 8, 0.0)
+    toks, lens = gen(None, {"tokens": jnp.zeros((3, 5), jnp.int32)},
+                     jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(lens), [1, 1, 1])
+    assert (np.asarray(toks)[:, 0] == tok.EOS).all()
+    assert (np.asarray(toks)[:, 1:] == tok.PAD).all()
+
+
+def test_generate_length_no_eos_and_eos_at_last_step():
+    cfg = tiny_cfg("dense")
+    gen = build_generate_fn(_scripted_bundle(cfg, fav_id=10), 8, 0.0)
+    toks, lens = gen(None, {"tokens": jnp.zeros((2, 5), jnp.int32)},
+                     jax.random.PRNGKey(0))
+    assert (np.asarray(lens) == 8).all()          # no EOS -> full budget
+    assert (np.asarray(toks) == 10).all()
+
+    gen = build_generate_fn(_scripted_bundle(cfg, fav_id=10, eos_at=7), 8, 0.0)
+    toks, lens = gen(None, {"tokens": jnp.zeros((2, 5), jnp.int32)},
+                     jax.random.PRNGKey(0))
+    assert (np.asarray(lens) == 8).all()          # EOS on the last token
+    assert (np.asarray(toks)[:, 7] == tok.EOS).all()
+    assert (np.asarray(toks)[:, :7] == 10).all()
+
+
+def test_generate_length_mid_stream_eos():
+    cfg = tiny_cfg("dense")
+    gen = build_generate_fn(_scripted_bundle(cfg, fav_id=10, eos_at=3), 8, 0.0)
+    toks, lens = gen(None, {"tokens": jnp.zeros((2, 5), jnp.int32)},
+                     jax.random.PRNGKey(0))
+    assert (np.asarray(lens) == 4).all()          # 3 tokens + EOS
+    row = np.asarray(toks)[0]
+    assert row.tolist() == [10, 10, 10, tok.EOS] + [tok.PAD] * 4
+
+
+def test_engine_compile_and_padding_stats():
+    """Bucket recompiles and padding waste are visible in ServeStats."""
+    cfg, eng = _engine()
+    q = np.random.default_rng(0).integers(4, cfg.vocab_size, (3, 12)).astype(np.int32)
+    eng.serve(q)                                   # bucket 4: compile 1
+    assert eng.stats.compiles == 1
+    eng.serve(np.repeat(q, 2, axis=0)[:5])         # bucket 8: compile 2
+    assert eng.stats.compiles == 2
+    eng.serve(q)                                   # bucket 4 again: cached
+    assert eng.stats.compiles == 2
+    assert eng.stats.pad_slots == (4 - 3) + (8 - 5) + (4 - 3)
+    assert eng.stats.slot_count == 4 + 8 + 4
+    assert abs(eng.stats.padding_waste - 5 / 16) < 1e-9
+    assert eng.stats.kv_high_water_bytes > 0
+
+
+def test_engine_warmup_precompiles_buckets():
+    cfg, eng = _engine()
+    eng.warmup(prompt_len=12, max_batch=4)
+    assert eng.stats.compiles == 3                 # buckets 1, 2, 4
+    q = np.random.default_rng(0).integers(4, cfg.vocab_size, (3, 12)).astype(np.int32)
+    eng.serve(q)                                   # bucket 4 pre-warmed
+    assert eng.stats.compiles == 3
+
+
 def test_cost_meter_accounting():
     m = CostMeter()
     m.record(np.array([True, True, False, False, False]), gen_tokens=10)
