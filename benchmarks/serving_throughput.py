@@ -15,6 +15,16 @@ per-request output caps) through both serving architectures at three tiers
                       Dense requests complete when their batch joins;
                       continuous requests complete when they individually
                       retire.
+  * TTFT p50/p99    — submission to first emitted token. Continuous engines
+                      report the real per-request first-token time (chunked
+                      prefill admits long prompts without stalling decode);
+                      a dense request's first token only exists when its
+                      whole batch joins, so dense TTFT equals its latency.
+  * inter-token p99 — worst-case gap between consecutive tokens of one
+                      request (continuous only; dense emits all tokens at
+                      the join). This is the column chunked prefill moves:
+                      one-shot admission stalls every live decode slot for a
+                      whole-prompt prefill.
   * KV high-water   — bytes of KV cache held at the worst moment: the dense
                       slab (bucket x (prompt + max_new)) vs the paged pool's
                       high-water page count.
@@ -23,7 +33,7 @@ Both engines are warmed up (jit compiles excluded from the timed stream).
 
 Usage:
   PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
-      [--out BENCH_serving.json]
+      [--prefill-chunk W] [--out BENCH_serving.json]
 """
 from __future__ import annotations
 
@@ -63,8 +73,10 @@ def make_stream(rng, n: int, t_max: int):
     """Ragged prompts (padded into one (N, Lmax) array for the dense API)
     with heavy-tailed per-request output caps: most requests want a short
     answer, a few want the full budget — the regime continuous batching is
-    built for."""
-    lens = rng.integers(6, 25, (n,))
+    built for. One request in eight carries a long prompt, the case where
+    one-shot admission stalls every live decode slot."""
+    lens = np.where(rng.random(n) < 0.125, rng.integers(32, 49, (n,)),
+                    rng.integers(6, 25, (n,)))
     lmax = int(lens.max())
     toks = np.full((n, lmax), tok.PAD, np.int32)
     for i, l in enumerate(lens):
@@ -79,6 +91,35 @@ def _percentiles(lat):
     lat = np.asarray(lat)
     return {"p50_s": float(np.percentile(lat, 50)),
             "p99_s": float(np.percentile(lat, 99))}
+
+
+def _streaming_metrics(reqs):
+    """TTFT and inter-token percentiles from per-request token timestamps.
+    If no request ever emitted a second token, inter-token p99 is NaN — the
+    CI finiteness assertion then fails loudly instead of reading a
+    fabricated 0ms as an impossibly good result."""
+    ttft = [r.ttft for r in reqs]
+    gaps = [np.diff(r.token_t) for r in reqs if len(r.token_t) > 1]
+    return {"ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "intertoken_p99_s": float(np.percentile(np.concatenate(gaps), 99))
+            if gaps else float("nan")}
+
+
+def _finish_reasons(reqs):
+    """Per-reason retirement counts; a nonzero context_cap means the two
+    engine families served different effective workloads."""
+    counts: dict = {}
+    for r in reqs:
+        counts[r.finish_reason] = counts.get(r.finish_reason, 0) + 1
+    return counts
+
+
+def _join_ttft(latencies):
+    """Dense engines emit a request's tokens only at the batch join, so
+    TTFT equals completion latency."""
+    return {"ttft_p50_s": float(np.percentile(latencies, 50)),
+            "ttft_p99_s": float(np.percentile(latencies, 99))}
 
 
 def run_dense(bundle, params, stream, t_max: int, batch: int):
@@ -105,31 +146,44 @@ def run_dense(bundle, params, stream, t_max: int, batch: int):
         "padding_waste": round(eng.stats.padding_waste, 4),
         "compiles": eng.stats.compiles,
         **_percentiles(latencies),
+        **_join_ttft(latencies),
     }
 
 
-def _continuous(bundle, params, t_max, n_slots):
+def _continuous(bundle, params, t_max, n_slots, prefill_chunk=None):
+    # max_seq covers the longest prompt (48) + full output budget (32), so
+    # no request context-caps and the dense comparison stays apples-to-apples
     return ContinuousEngine(bundle, params, max_new_tokens=t_max,
-                            n_slots=n_slots, max_seq=64)
+                            n_slots=n_slots, max_seq=96,
+                            prefill_chunk=prefill_chunk)
 
 
 def _warm_continuous(eng, rng, lens):
-    """Compile prefill/scatter/decode shapes outside the timed window:
+    """Compile prefill/decode shapes outside the timed window. One-shot
     prefill traces per distinct prompt length, so warm every length in the
-    stream; max_new_tokens=2 so at least one decode step runs (cap-1
-    requests retire at admission and would leave the decode jit cold)."""
-    for l in sorted(set(int(x) for x in lens)):
+    stream; chunked prefill traces only per bucketed chunk width, so one
+    prompt per width suffices. max_new_tokens=2 so at least one decode step
+    runs (cap-1 requests retire at admission and would leave the decode jit
+    cold)."""
+    if eng.prefill_chunk:
+        warm_lens = {w for l in set(int(x) for x in lens)
+                     for w in eng.chunk_widths(l)}
+    else:
+        warm_lens = set(int(x) for x in lens)
+    for l in sorted(warm_lens):
         eng.submit(rng.integers(4, tok.VOCAB_SIZE, (l,)).astype(np.int32),
                    max_new_tokens=2)
         eng.run()
 
 
 def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
-                   rng):
+                   rng, prefill_chunk=None):
     toks, lens, caps = stream
-    eng = _continuous(bundle, params, t_max, n_slots)
+    eng = _continuous(bundle, params, t_max, n_slots, prefill_chunk)
     _warm_continuous(eng, rng, lens)
-    hw0 = eng.cache.stats.high_water_pages  # warmup's mark, superseded below
+    # drop the warmup's high-water mark so the metric reflects the timed
+    # stream only (the allocator's mark is monotone and never resets)
+    eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
     t0 = time.time()
     reqs = [eng.submit(toks[i, :lens[i]], max_new_tokens=int(caps[i]))
             for i in range(len(toks))]
@@ -144,11 +198,16 @@ def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
         "generated_tokens": useful,
         "wall_s": round(wall, 4),
         "tokens_per_s": round(useful / wall, 2),
-        "kv_high_water_bytes": int(max(eng.cache.stats.high_water_pages, hw0)
+        "kv_high_water_bytes": int(eng.cache.stats.high_water_pages
                                    * eng.cache.bytes_per_page),
         "mean_slot_occupancy": round(eng.stats.mean_occupancy, 2),
         "admission_stalls": eng.stats.admission_stalls,
+        "prefill_chunk": eng.prefill_chunk,
+        "prefill_compiles": eng.stats.prefill_compiles,
+        "prefill_stalls": eng.stats.prefill_stalls,
+        "finish_reasons": _finish_reasons(reqs),
         **_percentiles(latencies),
+        **_streaming_metrics(reqs),
     }
 
 
@@ -193,21 +252,23 @@ def run_hybrid_dense(bundles, stream, t_max, batch):
                                    + large.stats.kv_high_water_bytes),
         "cost_advantage": round(hy.meter.cost_advantage, 4),
         **_percentiles(latencies),
+        **_join_ttft(latencies),
     }
 
 
-def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng):
+def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng,
+                          prefill_chunk=None):
     (bs, ps_), (bl, pl_) = bundles
     toks, lens, caps = stream
     mask = (toks != tok.PAD).astype(np.float32)
     router = _median_router(toks, mask)
-    small = _continuous(bs, ps_, t_max, n_slots)
-    large = _continuous(bl, pl_, t_max, max(2, n_slots // 2))
+    small = _continuous(bs, ps_, t_max, n_slots, prefill_chunk)
+    large = _continuous(bl, pl_, t_max, max(2, n_slots // 2), prefill_chunk)
     _warm_continuous(small, rng, lens)
     _warm_continuous(large, rng, lens)
     router.scores(jnp.asarray(toks), jnp.asarray(mask))
-    hw = (small.cache.stats.high_water_pages,
-          large.cache.stats.high_water_pages)
+    for eng in (small, large):   # timed-stream high-water only (see above)
+        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
     hy = ContinuousHybridEngine(router, small, large)
     t0 = time.time()
     reqs, to_small, _ = hy.submit(toks, mask, max_new_tokens=caps)
@@ -224,11 +285,15 @@ def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng):
         "wall_s": round(wall, 4),
         "tokens_per_s": round(useful / wall, 2),
         "kv_high_water_bytes": int(
-            max(small.cache.stats.high_water_pages, hw[0]) * bpp
-            + max(large.cache.stats.high_water_pages, hw[1]) * bpl),
+            small.cache.stats.high_water_pages * bpp
+            + large.cache.stats.high_water_pages * bpl),
         "cost_advantage": round(hy.meter.cost_advantage, 4),
         "routed_small": int(to_small.sum()),
+        "prefill_compiles": small.stats.prefill_compiles
+        + large.stats.prefill_compiles,
+        "finish_reasons": _finish_reasons(reqs),
         **_percentiles(latencies),
+        **_streaming_metrics(reqs),
     }
 
 
@@ -237,6 +302,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny models + short stream (CI perf canary)")
     ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill width for the continuous engines "
+                         "(0 = one-shot; default: the config's knob)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: repo-root "
                          "BENCH_serving.json; --smoke defaults to no file)")
@@ -257,29 +325,35 @@ def main():
 
     results = {"config": {"requests": n, "t_max": t_max, "batch": batch,
                           "n_slots": n_slots, "smoke": args.smoke,
+                          "prefill_chunk": args.prefill_chunk,
                           "small": cfg_s.name, "large": cfg_l.name},
                "tiers": {}}
+
+    def report(name, r):
+        ttft = f"ttft p99 {r['ttft_p99_s']:.2f}s"
+        itk = f"  itk p99 {r['intertoken_p99_s'] * 1e3:.0f}ms" \
+            if "intertoken_p99_s" in r else ""
+        print(f"  {name:<10} {r['tokens_per_s']:>8} tok/s  "
+              f"p99 {r['p99_s']:.2f}s  {ttft}{itk}  "
+              f"kv {r['kv_high_water_bytes']}")
+
     for tier, (bundle, params) in (("small", bundles[0]),
                                    ("large", bundles[1])):
         print(f"== {tier} ==")
         d = run_dense(bundle, params, stream, t_max, batch)
         c = run_continuous(bundle, params, stream, t_max, n_slots,
-                           np.random.default_rng(7))
+                           np.random.default_rng(7), args.prefill_chunk)
         results["tiers"][tier] = {"dense": d, "continuous": c}
-        print(f"  dense      {d['tokens_per_s']:>8} tok/s  "
-              f"p99 {d['p99_s']:.2f}s  kv {d['kv_high_water_bytes']}")
-        print(f"  continuous {c['tokens_per_s']:>8} tok/s  "
-              f"p99 {c['p99_s']:.2f}s  kv {c['kv_high_water_bytes']}")
+        report("dense", d)
+        report("continuous", c)
 
     print("== hybrid ==")
     d = run_hybrid_dense(bundles, stream, t_max, batch)
     c = run_hybrid_continuous(bundles, stream, t_max, n_slots,
-                              np.random.default_rng(7))
+                              np.random.default_rng(7), args.prefill_chunk)
     results["tiers"]["hybrid"] = {"dense": d, "continuous": c}
-    print(f"  dense      {d['tokens_per_s']:>8} tok/s  p99 {d['p99_s']:.2f}s  "
-          f"kv {d['kv_high_water_bytes']}")
-    print(f"  continuous {c['tokens_per_s']:>8} tok/s  p99 {c['p99_s']:.2f}s  "
-          f"kv {c['kv_high_water_bytes']}")
+    report("dense", d)
+    report("continuous", c)
 
     speedup = c["tokens_per_s"] / max(d["tokens_per_s"], 1e-9)
     kv_ratio = c["kv_high_water_bytes"] / max(d["kv_high_water_bytes"], 1)

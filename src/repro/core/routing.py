@@ -58,13 +58,19 @@ class CostMeter:
     small_tokens: int = 0
     large_tokens: int = 0
 
-    def record(self, routed_small: np.ndarray, gen_tokens: int):
-        n_small = int(routed_small.sum())
-        n = len(routed_small)
-        self.to_small += n_small
-        self.to_large += n - n_small
-        self.small_tokens += n_small * gen_tokens
-        self.large_tokens += (n - n_small) * gen_tokens
+    def record(self, routed_small: np.ndarray, gen_tokens):
+        """Record a batch of routed requests. ``gen_tokens`` is the number
+        of tokens each request actually generated: a per-request array
+        aligned with ``routed_small``, or a scalar applied to every request.
+        Charging a budget (e.g. max_new_tokens) instead of realised lengths
+        overstates the paper's §2.3 cost metric."""
+        routed = np.asarray(routed_small, bool)
+        lens = np.broadcast_to(np.asarray(gen_tokens, np.int64),
+                               routed.shape)
+        self.to_small += int(routed.sum())
+        self.to_large += int((~routed).sum())
+        self.small_tokens += int(lens[routed].sum())
+        self.large_tokens += int(lens[~routed].sum())
 
     @property
     def cost_advantage(self) -> float:

@@ -7,5 +7,5 @@ compiled kernels on TPU, interpreter on CPU (tests validate against the
 oracle there; an explicit bool still overrides).
 """
 from . import (flash_attention, decode_attention, paged_decode_attention,  # noqa: F401
-               ssd_scan)
+               paged_prefill_attention, ssd_scan)
 from .common import default_interpret  # noqa: F401

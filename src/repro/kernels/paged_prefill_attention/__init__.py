@@ -1,0 +1,2 @@
+from .kernel import paged_prefill_attention_gqa
+from .ref import paged_prefill_attention_ref

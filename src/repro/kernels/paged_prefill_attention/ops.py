@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for paged GQA prefill attention (chunked prefill).
+
+Model layout in: q (B, C, H, D) pre-scaled (one chunk of C query tokens per
+request), the shared page pool (P, ps, K, D), the request's page-table row(s)
+(B, MP), and the per-request start/total lengths. Regroups q to the kernel's
+(B, K, C, G, D) GQA layout (heads grouped per KV head).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_prefill_attention_gqa
+
+
+@jax.jit
+def paged_prefill_attention(q, k_pages, v_pages, page_table, start, total):
+    """q: (B, C, H, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
+    page_table: (B, MP); start/total: (B,). Returns (B, C, H, D)."""
+    B, C, H, D = q.shape
+    K = k_pages.shape[2]
+    G = H // K
+    qg = jnp.transpose(q.reshape(B, C, K, G, D), (0, 2, 1, 3, 4))
+    out = paged_prefill_attention_gqa(qg, k_pages, v_pages, page_table,
+                                      start, total)
+    return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, D)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the paged GQA prefill-attention kernel.
+
+Gathers each request's pages through its page-table row into a dense
+(B, MP*ps) key space and runs causally-masked attention for the chunk's
+query rows — semantically identical to the kernel, used both as the test
+oracle and as the non-Pallas model path. Like the kernel, it assumes the
+chunk's K/V are already resident in the pool (the model layer writes them
+before attending).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, page_table, start,
+                                total):
+    """q: (B, K, C, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
+    page_table: (B, MP) int32; start/total: (B,) int32.
+    Returns (B, K, C, G, D)."""
+    B, K, C, G, D = q.shape
+    ps = k_pages.shape[1]
+    MP = page_table.shape[1]
+    S = MP * ps
+    # (B, MP, ps, K, D) -> (B, K, MP*ps, D)
+    k = jnp.moveaxis(k_pages[page_table], 3, 1).reshape(B, K, S, D)
+    v = jnp.moveaxis(v_pages[page_table], 3, 1).reshape(B, K, S, D)
+    s = jnp.einsum("bkcgd,bksd->bkcgs", q, k).astype(jnp.float32)
+    kpos = jnp.arange(S)
+    qpos = start[:, None] + jnp.arange(C)                     # (B, C)
+    valid = (kpos[None, None, :] <= qpos[:, :, None]) \
+        & (kpos[None, None, :] < total[:, None, None])        # (B, C, S)
+    s = jnp.where(valid[:, None, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkcgs,bksd->bkcgd", w.astype(v.dtype), v)

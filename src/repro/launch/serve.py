@@ -58,6 +58,10 @@ def main():
     ap.add_argument("--samples", type=int, default=4)
     ap.add_argument("--continuous", action="store_true",
                     help="serve via continuous-batching paged-KV engines")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill width for --continuous (tokens "
+                         "admitted per chunk; 0 = one-shot prefill; "
+                         "default: the architecture's prefill_chunk knob)")
     args = ap.parse_args()
 
     cfg_s, cfg_l = reduced_pair(args.arch)
@@ -109,7 +113,8 @@ def main():
         bundle = build_model(dataclasses.replace(bundle.cfg,
                                                  cache_layout=layout))
         engines.append(make_engine(bundle, params, max_new_tokens=12,
-                                   n_slots=8, max_seq=64))
+                                   n_slots=8, max_seq=64,
+                                   prefill_chunk=args.prefill_chunk))
     small, large = engines
     if isinstance(small, ContinuousEngine):
         hy = ContinuousHybridEngine(router, small, large)

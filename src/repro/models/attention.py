@@ -281,6 +281,57 @@ def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
     return _out_proj(params, out, B, 1, H, Dh), k_pages, v_pages
 
 
+def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
+                            n_new, cfg):
+    """One chunked-prefill step against a paged KV cache.
+
+    x: (B, C, D) — a fixed-width chunk of prompt activations per serving
+    slot, of which the first ``n_new[b]`` rows are real tokens (the rest is
+    bucket padding). k_pages/v_pages: (P, ps, K, Dh) shared pool;
+    page_table: (B, MP) the slot's page-table row; start: (B,) tokens
+    already resident (the chunk occupies global positions
+    ``start .. start + n_new - 1``).
+
+    Writes the chunk's K/V projections directly into the pool pages covering
+    those positions (padding rows land on the reserved scratch page 0), then
+    attends each chunk query causally to the resident context plus the
+    in-chunk keys via the paged prefill kernel. Returns
+    (out (B, C, D), k_pages, v_pages). Requires uniform global attention
+    (cfg.supports_paged_kv).
+    """
+    B, C, D = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ps = k_pages.shape[1]
+    MP = page_table.shape[1]
+    cap = MP * ps
+    positions = start[:, None] + jnp.arange(C)[None, :]       # (B, C)
+    q, k_c, v_c = _project_qkv(params, x, cfg, positions)
+    # scatter the chunk's K/V into its pages: valid rows go to their page,
+    # padding rows (c >= n_new) to the scratch page 0
+    pos = jnp.minimum(positions, cap - 1)
+    valid = jnp.arange(C)[None, :] < n_new[:, None]
+    page = jnp.take_along_axis(page_table, pos // ps, axis=1)  # (B, C)
+    page = jnp.where(valid, page, 0)
+    k_pages = k_pages.at[page, pos % ps].set(k_c)
+    v_pages = v_pages.at[page, pos % ps].set(v_c)
+    total = start + n_new
+    scale = Dh ** -0.5
+    G = H // K
+    qg = jnp.transpose((q * scale).reshape(B, C, K, G, Dh), (0, 2, 1, 3, 4))
+    if cfg.use_pallas:
+        from repro.kernels.paged_prefill_attention.kernel import \
+            paged_prefill_attention_gqa
+        out = paged_prefill_attention_gqa(qg, k_pages, v_pages, page_table,
+                                          start, total)
+    else:
+        from repro.kernels.paged_prefill_attention.ref import \
+            paged_prefill_attention_ref
+        out = paged_prefill_attention_ref(qg, k_pages, v_pages, page_table,
+                                          start, total)
+    out = jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, Dh)
+    return _out_proj(params, out, B, C, H, Dh), k_pages, v_pages
+
+
 def _flash_decode_seq_sharded(q, layer_k, layer_v, k_t, v_t, pos, n_heads,
                               mesh, batch_axes=None):
     """Flash-decode over a sequence-sharded KV cache (shard_map over "model").

@@ -85,6 +85,9 @@ class ArchConfig:
     #                               paged: shared block pool + page table
     #                               (continuous-batching serving path)
     kv_page_size: int = 16        # tokens per KV page when cache_layout="paged"
+    prefill_chunk: int = 16       # chunked-prefill width for the continuous
+    #                               engine (query tokens admitted per chunk;
+    #                               0 = one-shot whole-prompt prefill)
 
     # ------------------------------------------------------------------ helpers
     @property

@@ -207,6 +207,47 @@ def init_paged_decode_cache(cfg, num_pages: int, page_size: int):
     return {"k_pages": kv["k_pages"], "v_pages": kv["v_pages"]}
 
 
+def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
+                                n_new, cfg):
+    """One chunked-prefill step over the paged pool (continuous batching).
+
+    tokens: (B, C) int32 — a fixed-width chunk of prompt tokens per serving
+    slot, PAD-filled past ``n_new[b]``; page_table (B, MP) rows already
+    cover positions ``start .. start + n_new - 1`` (the engine extends the
+    slot's pages before calling). Each layer writes the chunk's K/V directly
+    into the pool and attends causally to resident context + in-chunk keys
+    (models.attention.paged_prefill_attention). Returns
+    (x_last (B, 1, D), cache with updated pools) — the final-norm hidden
+    state of token ``start + n_new - 1``. The LM head is deliberately NOT
+    applied here: only the final chunk's logits are ever consumed (they
+    sample the first generated token), and the vocab projection is the
+    widest matmul in the step — the engine applies ``ModelBundle.lm_head``
+    host-side exactly once per prompt."""
+    B, C = tokens.shape
+    x = embed(params["embed"], tokens)
+
+    def body(x, xs):
+        layer_p, kp, vp = xs
+        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+        o, kp, vp = attn.paged_prefill_attention(layer_p["attn"], h, kp, vp,
+                                                 page_table, start, n_new,
+                                                 cfg)
+        x = x + o
+        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+        else:
+            y = mlp(layer_p["mlp"], h)
+        return constrain_batch(x + y), (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    last = jnp.clip(n_new - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last][:, None]                  # (B, 1, D)
+    return x_last, {"k_pages": kps, "v_pages": vps}
+
+
 def decoder_decode_step_paged(params, cache, token, page_table, seq_lens,
                               active, cfg):
     """One continuous-batching decode step over the serving slots.

@@ -33,6 +33,14 @@ class ModelBundle:
     # cfg.cache_layout="paged" / the ContinuousEngine.
     decode_step_paged: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
+    # Chunked paged prefill: prefill_paged_chunk(params, cache, tokens,
+    # page_table, start, n_new) -> (x_last (B, 1, D), cache). Admits a
+    # prompt chunk-by-chunk so decode slots never stall on a long prompt;
+    # the LM head is applied separately (lm_head) so non-final chunks skip
+    # the vocab projection entirely.
+    prefill_paged_chunk: Optional[Callable] = None
+    # lm_head(params, x (B, S, D)) -> logits (B, S, V)
+    lm_head: Optional[Callable] = None
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -66,6 +74,10 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
             init_paged_cache=lambda num_pages, page_size=None:
                 decoder.init_paged_decode_cache(
                     cfg, num_pages, page_size or cfg.kv_page_size),
+            prefill_paged_chunk=lambda p, c, t, page_table, start, n_new:
+                decoder.decoder_prefill_paged_chunk(p, c, t, page_table,
+                                                    start, n_new, cfg),
+            lm_head=lambda p, x: decoder._unembed(p, x, cfg),
         )
     return ModelBundle(
         cfg=cfg,

@@ -63,9 +63,16 @@ class PagedKVCache:
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
-    def can_admit(self, n_tokens: int) -> bool:
+    def can_admit(self, n_tokens: int, reserve: int = 0) -> bool:
+        """Can a fresh request of ``n_tokens`` be admitted now? ``reserve``
+        discounts pages promised to slots still mid-prefill (chunked
+        admission allocates incrementally, so their remaining prompt pages
+        are not yet in ``pages_in_use``)."""
         n = self.pages_for(max(n_tokens, 1))
-        return n <= len(self._free) and n <= self.max_pages_per_slot
+        return n <= len(self._free) - reserve and n <= self.max_pages_per_slot
+
+    def owned_pages(self, slot: int) -> int:
+        return len(self._owned[slot])
 
     def alloc_slot(self, slot: int, n_tokens: int):
         """Allocate pages covering ``n_tokens`` for an empty slot. Returns the
@@ -84,16 +91,43 @@ class PagedKVCache:
         self._mark_usage()
         return np.asarray(pages, np.int32)
 
-    def ensure_append(self, slot: int) -> bool:
+    def extend_slot(self, slot: int, n_new: int):
+        """Extend ``slot`` by ``n_new`` tokens (one chunked-prefill step):
+        allocate whatever pages are needed to cover ``seq_lens + n_new`` and
+        advance ``seq_lens``. Works on an empty slot too (first chunk).
+        Returns the newly allocated page ids (possibly empty) or None if the
+        pool / the slot's page cap can't satisfy the extension — in which
+        case nothing is allocated and ``seq_lens`` is unchanged."""
+        owned = self._owned[slot]
+        need = self.pages_for(int(self.seq_lens[slot]) + n_new)
+        fresh = need - len(owned)
+        if need > self.max_pages_per_slot or fresh > len(self._free):
+            self.stats.oom_denials += 1
+            return None
+        pages = [self._free.pop() for _ in range(fresh)]
+        self.page_table[slot, len(owned):need] = pages
+        if not owned:
+            self.stats.allocs += 1
+        else:
+            self.stats.appends += fresh
+        owned.extend(pages)
+        self.seq_lens[slot] += n_new
+        self._mark_usage()
+        return np.asarray(pages, np.int32)
+
+    def ensure_append(self, slot: int, reserve: int = 0) -> bool:
         """Guarantee room for one more token in ``slot`` (the next decode
         step's write). Allocates a fresh page at a page boundary. Returns
         False when the pool is exhausted or the slot hit its page cap — the
-        engine then skips the slot this step (admission-control stall)."""
+        engine then skips the slot this step (admission-control stall).
+        ``reserve`` discounts pages promised to mid-prefill slots, so decode
+        growth can't strand a half-admitted prompt."""
         used = int(self.seq_lens[slot])
         owned = self._owned[slot]
         if used < len(owned) * self.page_size:
             return True
-        if len(owned) >= self.max_pages_per_slot or not self._free:
+        if len(owned) >= self.max_pages_per_slot \
+                or len(self._free) - reserve < 1:
             self.stats.oom_denials += 1
             return False
         page = self._free.pop()

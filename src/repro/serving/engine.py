@@ -20,9 +20,43 @@ Serving architecture — two execution models:
   lengths; this is the substrate the hybrid router's small-model stream
   needs to realise its latency win (see serving.hybrid).
 
+Chunked-admission state machine (``prefill_chunk > 0``, the default):
+each slot moves QUEUED -> PREFILLING -> DECODING -> DONE. One ``step()``::
+
+  1. ADMIT    pending requests claim free slots (state PREFILLING) while the
+              pool can hold their full prompt *minus* pages already promised
+              to other mid-prefill slots (reserve accounting, so incremental
+              allocation can't strand a half-admitted prompt);
+  2. PREFILL  a per-step token budget (default: one chunk width per slot)
+              is spent on PREFILLING slots in admission order, at most one
+              chunk per slot per step — so a decode slot's inter-token gap
+              is bounded by single chunks, never a whole prompt. Each chunk
+              extends the
+              slot's pages (serving.cache.extend_slot), then runs the paged
+              prefill-attention kernel, which writes the chunk's K/V
+              straight into pool pages — no host-side scatter round-trip.
+              Chunk widths are bucketed (full chunks at ``prefill_chunk``,
+              the ragged tail padded to a power of two), so admission
+              compiles exactly one prefill shape per bucketed width, however
+              ragged the prompt lengths. When the last chunk lands, the
+              first token is sampled from its logits and the slot flips to
+              DECODING;
+  3. DECODE   every DECODING slot emits one token (paged decode kernel).
+              Decode-time page growth also honours the prefill reservation,
+              so a half-admitted prompt can never be stranded by decoders
+              racing it for pages;
+  4. RETIRE   EOS / per-request cap / context cap free the slot and record a
+              ``finish_reason``.
+
+  A long prompt therefore admits across several steps while live decode
+  slots keep emitting every step — prefill never stalls decode.
+  ``prefill_chunk=0`` selects the legacy one-shot path (whole prompt in one
+  trace per distinct length, dense prefill + host-side page scatter).
+
 ``Engine.stats`` exposes compile counts and padding waste so bucket
 recompiles show up in benchmarks; ``ContinuousEngine.stats`` + its cache
-stats expose occupancy, admission stalls, and the KV high-water mark.
+stats expose occupancy, admission stalls, prefill compiles/stalls, and the
+KV high-water mark.
 """
 from __future__ import annotations
 
@@ -38,7 +72,7 @@ from repro.data import tokenizer as tok
 from repro.models.model import ModelBundle
 from .cache import PagedKVCache
 from .generate import build_generate_fn, _sample
-from .scheduler import ContinuousScheduler, Request
+from .scheduler import (DECODING, PREFILLING, ContinuousScheduler, Request)
 
 
 def _bucket(n: int) -> int:
@@ -152,6 +186,9 @@ class ContinuousStats:
     retired: int = 0
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    prefill_chunks: int = 0      # chunked-prefill steps executed
+    prefill_compiles: int = 0    # distinct bucketed chunk widths traced
+    prefill_stalls: int = 0      # chunk extensions deferred for pool space
     occupancy_sum: int = 0       # steppable slots summed over steps
     admission_stalls: int = 0    # admissions deferred for page-pool space
     wall_s: float = 0.0
@@ -173,7 +210,9 @@ class ContinuousEngine:
     def __init__(self, bundle: ModelBundle, params, max_new_tokens: int = 16,
                  temperature: float = 0.0, *, n_slots: int = 8,
                  page_size: Optional[int] = None, max_seq: int = 256,
-                 num_pages: Optional[int] = None, seed: int = 0):
+                 num_pages: Optional[int] = None, seed: int = 0,
+                 rng_salt: int = 0, prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None):
         if bundle.decode_step_paged is None:
             raise ValueError(f"{bundle.cfg.name}: no paged decode path "
                              "(ArchConfig.supports_paged_kv is False)")
@@ -189,10 +228,39 @@ class ContinuousEngine:
         self.sched = ContinuousScheduler(n_slots)
         self.stats = ContinuousStats()
         self.n_slots = n_slots
+        # chunked admission: prefill_chunk tokens per chunk (None -> the
+        # config's knob; 0 -> legacy one-shot whole-prompt prefill);
+        # prefill_budget tokens of prefill per step. The default budget
+        # scales with the slot count — admission demand does too, and a
+        # single-chunk budget throttles occupancy under bursty arrivals;
+        # tighten it to bound per-step prefill time (inter-token latency)
+        if prefill_chunk is None:
+            prefill_chunk = bundle.cfg.prefill_chunk
+        if prefill_chunk < 0 or (prefill_budget or 0) < 0:
+            raise ValueError(f"prefill_chunk={prefill_chunk} / "
+                             f"prefill_budget={prefill_budget}: chunked "
+                             "admission needs non-negative sizes "
+                             "(0 disables chunking)")
+        if bundle.prefill_paged_chunk is None or bundle.lm_head is None:
+            prefill_chunk = 0
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget if prefill_budget is not None \
+            else n_slots * prefill_chunk
+        self._chunk_widths: set = set()   # bucketed widths already traced
         self._next_in = np.full((n_slots,), tok.PAD, np.int32)
-        self._key = jax.random.PRNGKey(seed)
+        self._seed = seed
+        self._rng_salt = rng_salt
+        self._serve_calls = 0
+        self._key = jax.random.fold_in(jax.random.PRNGKey(seed), rng_salt)
         self._prefill = jax.jit(bundle.prefill, static_argnums=(2,))
         self._decode = self._build_decode()
+        self._prefill_chunk_fn = self._build_prefill_chunk() \
+            if self.prefill_chunk else None
+        # LM head applied once per prompt, on the final chunk's (1, 1, D)
+        # hidden state — a single width-independent trace, so non-final
+        # chunks never pay the vocab projection
+        self._lm_head = jax.jit(bundle.lm_head) if self.prefill_chunk \
+            else None
         # donated pools: scatter updates in place rather than copying
         self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
 
@@ -214,6 +282,19 @@ class ContinuousEngine:
         # cache.pool from the outputs immediately)
         return jax.jit(fn, donate_argnums=(1, 2))
 
+    def _build_prefill_chunk(self):
+        bundle = self.bundle
+
+        def fn(params, k_pages, v_pages, tokens, page_table, start, n_new):
+            x_last, cache = bundle.prefill_paged_chunk(
+                params, {"k_pages": k_pages, "v_pages": v_pages}, tokens,
+                page_table, start, n_new)
+            return x_last, cache["k_pages"], cache["v_pages"]
+
+        # donated pools: the chunk's K/V are written into the pool pages in
+        # place — this is what retires the one-shot path's host _scatter
+        return jax.jit(fn, donate_argnums=(1, 2))
+
     @staticmethod
     def _scatter_impl(k_pool, v_pool, ks, vs, page_ids):
         """Scatter a prefilled dense cache (L, 1, Spad, K, D) into the pool
@@ -229,6 +310,21 @@ class ContinuousEngine:
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    def set_rng_salt(self, salt: int):
+        """Give this engine a distinct sampling stream. Sibling engines in a
+        hybrid are typically built with the same default seed; without a
+        salt their temperature>0 partitions would draw correlated samples."""
+        self._rng_salt = salt
+        self._key = jax.random.fold_in(jax.random.PRNGKey(self._seed), salt)
+
+    def reseed(self, seed: int):
+        """Start a fresh deterministic sampling stream for one serve call:
+        folds the caller's seed, this engine's salt, and a per-call counter,
+        so repeated calls (and sibling engines) never reuse a stream."""
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), self._rng_salt)
+        self._key = jax.random.fold_in(key, self._serve_calls)
+        self._serve_calls += 1
 
     # -------------------------------------------------------------- requests
     def submit(self, tokens: np.ndarray, max_new_tokens: Optional[int] = None
@@ -260,27 +356,55 @@ class ContinuousEngine:
         req = Request(tokens=tokens, max_new_tokens=max_new)
         return self.sched.submit(req)
 
-    def _retire(self, slot: int) -> Request:
+    def _retire(self, slot: int, reason: str) -> Request:
         self.cache.free_slot(slot)
         self._next_in[slot] = tok.PAD
         self.stats.retired += 1
-        return self.sched.retire(slot)
+        req = self.sched.retire(slot)
+        req.finish_reason = reason
+        return req
 
     def _push_token(self, req: Request, token: int) -> Optional[Request]:
         """Record an emitted token; retire on EOS / request cap."""
         req.out.append(int(token))
-        if token == tok.EOS or req.n_generated >= req.max_new_tokens:
-            return self._retire(req.slot)
+        req.token_t.append(time.time())
+        if token == tok.EOS:
+            return self._retire(req.slot, "eos")
+        if req.n_generated >= req.max_new_tokens:
+            return self._retire(req.slot, "length")
         self._next_in[req.slot] = token
         return None
 
-    def _admit(self, retired: List[Request]):
+    def _reserved_prefill_pages(self) -> int:
+        """Pages the mid-prefill slots still need for the rest of their
+        prompts. Chunked admission allocates incrementally, so these pages
+        are not in the pool's in-use count yet; admission control must not
+        hand them to a new request."""
+        r = 0
+        for slot in self.sched.prefilling_slots():
+            req = self.sched.running[slot]
+            r += self.cache.pages_for(len(req.tokens)) \
+                - self.cache.owned_pages(slot)
+        return r
+
+    def _admit(self, retired: List[Request]) -> int:
+        """Claim free slots for pending requests. Chunked mode just assigns
+        the slot (chunks run in ``_prefill_step``); one-shot mode prefills
+        the whole prompt and scatters it into freshly allocated pages.
+        Returns the number of requests admitted."""
+        admitted = 0
         while self.sched.pending and self.sched.has_free_slot:
             nxt = self.sched.peek_pending()
-            if not self.cache.can_admit(len(nxt.tokens)):
+            reserve = self._reserved_prefill_pages() if self.prefill_chunk \
+                else 0
+            if not self.cache.can_admit(len(nxt.tokens), reserve=reserve):
                 self.stats.admission_stalls += 1
                 break
             req = self.sched.admit()
+            admitted += 1
+            self.stats.admitted += 1
+            if self.prefill_chunk:
+                continue   # state PREFILLING; chunks run this same step
             n_tok = len(req.tokens)
             spad = _round_up(n_tok, self.cache.page_size)
             logits, kv = self._prefill(
@@ -290,27 +414,115 @@ class ContinuousEngine:
                                    self.cache.pool["v_pages"],
                                    kv["k"], kv["v"], jnp.asarray(pages))
             self.cache.pool = {"k_pages": kp, "v_pages": vp}
-            self.stats.admitted += 1
             self.stats.prefill_tokens += n_tok
+            req.prefill_pos = n_tok
+            req.state = DECODING
             first = int(_sample(self._next_key(), logits,
                                 self.temperature)[0])
             done = self._push_token(req, first)
             if done is not None:
                 retired.append(done)
+        return admitted
+
+    def _chunk_width(self, remaining: int) -> int:
+        """Bucketed width of the next chunk: full chunks at prefill_chunk,
+        ragged tails at a power of two capped by the chunk width (a
+        non-power-of-two prefill_chunk must not widen the tail shape past
+        the per-chunk latency bound the knob sets)."""
+        return self.prefill_chunk if remaining >= self.prefill_chunk \
+            else min(_bucket(remaining), self.prefill_chunk)
+
+    def chunk_widths(self, prompt_len: int) -> List[int]:
+        """The bucketed chunk widths a prompt of ``prompt_len`` tokens will
+        trace, in admission order — warm one prompt per distinct width to
+        keep every prefill compile out of a timed window."""
+        widths, r = [], prompt_len
+        while r > 0 and self.prefill_chunk:
+            w = self._chunk_width(r)
+            widths.append(w)
+            r -= min(r, w)
+        return widths
+
+    def _run_prefill_chunk(self, req: Request,
+                           retired: List[Request]) -> int:
+        """Advance one bucketed chunk of ``req``'s prompt into the pool.
+        Returns the number of prompt tokens consumed (0 on a page stall)."""
+        slot = req.slot
+        remaining = len(req.tokens) - req.prefill_pos
+        width = self._chunk_width(remaining)
+        n_new = min(remaining, width)
+        if self.cache.extend_slot(slot, n_new) is None:
+            self.stats.prefill_stalls += 1
+            return 0
+        chunk = np.full((1, width), tok.PAD, np.int32)
+        chunk[0, :n_new] = req.tokens[req.prefill_pos:req.prefill_pos + n_new]
+        if width not in self._chunk_widths:
+            self._chunk_widths.add(width)
+            self.stats.prefill_compiles += 1
+        # jnp.array (copy): the allocator mutates the page table while the
+        # dispatched chunk may still be reading it (CPU zero-copy alias)
+        pt = jnp.array(self.cache.page_table[slot][None])
+        x_last, kp, vp = self._prefill_chunk_fn(
+            self.params, self.cache.pool["k_pages"],
+            self.cache.pool["v_pages"], jnp.asarray(chunk), pt,
+            jnp.asarray([req.prefill_pos], jnp.int32),
+            jnp.asarray([n_new], jnp.int32))
+        self.cache.pool = {"k_pages": kp, "v_pages": vp}
+        req.prefill_pos += n_new
+        self.stats.prefill_tokens += n_new
+        self.stats.prefill_chunks += 1
+        if req.prefill_pos == len(req.tokens):
+            # only the final chunk pays the vocab projection: its logits
+            # sample the request's first generated token
+            logits = self._lm_head(self.params, x_last)[:, 0]
+            req.state = DECODING
+            first = int(_sample(self._next_key(), logits,
+                                self.temperature)[0])
+            done = self._push_token(req, first)
+            if done is not None:
+                retired.append(done)
+        return n_new
+
+    def _prefill_step(self, retired: List[Request]) -> int:
+        """Advance each PREFILLING slot by AT MOST one chunk, in admission
+        order, until the step's token budget is spent (the first chunk
+        always runs, so a budget smaller than a chunk still progresses).
+        One chunk per slot per step is what bounds a decode slot's
+        inter-token gap to a single chunk's prefill — a greedy drain of one
+        prompt's chunks would recreate the one-shot stall the chunked path
+        exists to remove. Returns the chunks executed."""
+        budget = self.prefill_budget
+        chunks = 0
+        for slot in self.sched.prefilling_slots():
+            req = self.sched.running[slot]
+            n_next = min(len(req.tokens) - req.prefill_pos,
+                         self.prefill_chunk)
+            if chunks and budget < n_next:
+                break       # budget spent: rest waits for next step
+            n = self._run_prefill_chunk(req, retired)
+            if n:           # 0 = page stall: try later slots, retry later
+                budget -= n
+                chunks += 1
+        return chunks
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[Request]:
-        """Admit, decode one token per occupied slot, retire. Returns the
-        requests completed during this step."""
+        """Admit, advance prefill chunks under the step budget, decode one
+        token per DECODING slot, retire. Returns the requests completed
+        during this step."""
         t0 = time.time()
         retired: List[Request] = []
-        self._admit(retired)
+        progressed = self._admit(retired)
+        if self.prefill_chunk:
+            progressed += self._prefill_step(retired)
         cap = self.cache.max_pages_per_slot * self.cache.page_size
+        # decode growth must not eat pages promised to mid-prefill slots
+        reserve = self._reserved_prefill_pages() if self.prefill_chunk else 0
         steppable = []
-        for slot in self.sched.active_slots():
+        for slot in self.sched.decoding_slots():
             if int(self.cache.seq_lens[slot]) + 1 > cap:
-                retired.append(self._retire(slot))   # context-length cap
-            elif self.cache.ensure_append(slot):
+                retired.append(self._retire(slot, "context_cap"))
+            elif self.cache.ensure_append(slot, reserve=reserve):
                 steppable.append(slot)
         if steppable:
             active = np.zeros((self.n_slots,), bool)
@@ -334,10 +546,12 @@ class ContinuousEngine:
                     retired.append(done)
             self.stats.steps += 1
             self.stats.occupancy_sum += len(steppable)
-        elif (self.sched.running or self.sched.pending) and not retired:
-            # nothing stepped, nothing retired, yet work remains: occupied
-            # slots all stalled on pages, or a pending request can't admit
-            # into an otherwise idle pool — neither can ever resolve
+        elif not progressed and not retired \
+                and (self.sched.running or self.sched.pending):
+            # nothing decoded, no prefill advanced, nothing admitted or
+            # retired, yet work remains: occupied slots all stalled on
+            # pages, or a pending request can't admit into an otherwise
+            # idle pool — neither can ever resolve
             raise RuntimeError(
                 "page pool deadlock: no slot could step and no request "
                 "could admit or retire; provision more pages")
@@ -356,7 +570,7 @@ class ContinuousEngine:
               ) -> tuple[np.ndarray, np.ndarray]:
         """Batch-API wrapper: submit every row, drain, return
         (responses (N, T), lengths (N,)) like ``Engine.serve``."""
-        del seed  # per-engine RNG stream; kept for API parity
+        self.reseed(seed)
         reqs = [self.submit(row) for row in query_tokens]
         self.run()
         T = self.max_new_tokens

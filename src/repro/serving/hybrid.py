@@ -59,23 +59,35 @@ class HybridEngine:
         self.small = small
         self.large = large
         self.meter = CostMeter()
+        self._serve_calls = 0
 
     def serve(self, query_tokens: np.ndarray, query_mask: np.ndarray,
               seed: int = 0) -> HybridResult:
         scores = np.asarray(self.router.scores(jnp.asarray(query_tokens),
                                                jnp.asarray(query_mask)))
         to_small = scores >= self.router.threshold
-        T = self.small.max_new_tokens
+        # the partitions may run different output budgets
+        T = max(self.small.max_new_tokens, self.large.max_new_tokens)
         N = len(query_tokens)
         responses = np.zeros((N, T), np.int32)
         lengths = np.zeros((N,), np.int32)
+        # distinct per-partition, per-call sampling seeds: reusing ``seed``
+        # verbatim would draw the same sample stream on both partitions and
+        # on every call
+        # mask to 32 bits: SeedSequence rejects the negative seeds PRNGKey
+        # accepts, and engine.serve must keep taking any int seed
+        ss = np.random.SeedSequence([seed & 0xFFFFFFFF, self._serve_calls])
+        seed_small, seed_large = (int(s) for s in ss.generate_state(2))
+        self._serve_calls += 1
         if to_small.any():
-            r, l = self.small.serve(query_tokens[to_small], seed)
-            responses[to_small], lengths[to_small] = r, l
+            r, l = self.small.serve(query_tokens[to_small], seed_small)
+            responses[to_small, :r.shape[1]], lengths[to_small] = r, l
         if (~to_small).any():
-            r, l = self.large.serve(query_tokens[~to_small], seed)
-            responses[~to_small], lengths[~to_small] = r, l
-        self.meter.record(to_small, T)
+            r, l = self.large.serve(query_tokens[~to_small], seed_large)
+            responses[~to_small, :r.shape[1]], lengths[~to_small] = r, l
+        # §2.3 cost accounting charges the tokens actually generated, not
+        # the max_new_tokens budget
+        self.meter.record(to_small, lengths)
         return HybridResult(responses, lengths, to_small, scores)
 
 
@@ -88,6 +100,10 @@ class ContinuousHybridEngine:
         self.router = router
         self.small = small
         self.large = large
+        # engines are typically built with the same default seed; distinct
+        # salts keep their temperature>0 sample streams uncorrelated
+        if small is not large and small._rng_salt == large._rng_salt:
+            large.set_rng_salt(large._rng_salt + 1)
         self.meter = CostMeter()
         self._routed: Dict[int, bool] = {}   # rid -> routed_small
 
@@ -108,7 +124,11 @@ class ContinuousHybridEngine:
         for i, (row, small_bound) in enumerate(zip(query_tokens, to_small)):
             eng = self.small if small_bound else self.large
             if trim_padding:
-                row = row[:max(1, int(np.asarray(query_mask[i]).sum()))]
+                # trim to one past the last true mask position — a mask with
+                # interior holes has sum() < that, and trimming to sum()
+                # would drop real prompt tokens
+                nz = np.flatnonzero(np.asarray(query_mask[i]))
+                row = row[:int(nz[-1]) + 1] if len(nz) else row[:1]
             cap = int(max_new_tokens[i]) if max_new_tokens is not None else None
             req = eng.submit(row, max_new_tokens=cap)
             self._routed[req.rid] = bool(small_bound)
@@ -141,7 +161,8 @@ class ContinuousHybridEngine:
     def serve(self, query_tokens: np.ndarray, query_mask: np.ndarray,
               seed: int = 0) -> HybridResult:
         """Batch-API wrapper matching ``HybridEngine.serve``."""
-        del seed
+        self.small.reseed(seed)
+        self.large.reseed(seed)
         reqs, to_small, scores = self.submit(query_tokens, query_mask)
         self.run()
         T = max(self.small.max_new_tokens, self.large.max_new_tokens)

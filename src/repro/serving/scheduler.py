@@ -6,18 +6,30 @@ length-cap retirement) the scheduler admits the next pending request into it
 — no batch barrier, so short requests never wait for stragglers that merely
 shared their admission batch. Page-pool admission control lives with the
 engine (a request is only admitted when ``PagedKVCache.can_admit`` holds).
+
+Slot states: an occupied slot is either PREFILLING (its prompt is still
+streaming into the pool chunk-by-chunk — see ContinuousEngine's chunked
+admission) or DECODING (prompt resident, one token emitted per step). The
+one-shot prefill path moves a slot straight to DECODING at admission.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
 from collections import deque
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
 _RID = itertools.count()
+
+# Request / slot lifecycle states.
+QUEUED = "queued"            # submitted, waiting for a slot
+PREFILLING = "prefilling"    # slot assigned, prompt streaming in chunks
+DECODING = "decoding"        # prompt resident, emitting one token per step
+DONE = "done"                # retired
 
 
 @dataclasses.dataclass
@@ -31,7 +43,11 @@ class Request:
     finish_t: float = 0.0                  # wall time retired
     slot: Optional[int] = None
     out: list = dataclasses.field(default_factory=list)  # emitted token ids
+    token_t: list = dataclasses.field(default_factory=list)  # emit wall times
     done: bool = False
+    state: str = QUEUED
+    prefill_pos: int = 0                   # prompt tokens already prefilled
+    finish_reason: str = ""                # eos | length | context_cap
 
     @property
     def n_generated(self) -> int:
@@ -39,7 +55,13 @@ class Request:
 
     @property
     def latency(self) -> float:
-        return self.finish_t - self.submit_t
+        """Submission-to-retirement wall time; NaN while still in flight."""
+        return self.finish_t - self.submit_t if self.done else math.nan
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token from submission; NaN before the first token."""
+        return self.token_t[0] - self.submit_t if self.token_t else math.nan
 
 
 class ContinuousScheduler:
@@ -73,16 +95,23 @@ class ContinuousScheduler:
         req = self.pending.popleft()
         req.slot = self._free_slots.pop()
         req.start_t = time.time()
+        req.state = PREFILLING
         self.running[req.slot] = req
         return req
 
     def retire(self, slot: int) -> Request:
         req = self.running.pop(slot)
         req.done = True
+        req.state = DONE
         req.finish_t = time.time()
         req.slot = None
         self._free_slots.append(slot)
         return req
 
-    def active_slots(self) -> list[int]:
-        return sorted(self.running)
+    def prefilling_slots(self) -> List[int]:
+        """Slots mid-prompt, in admission order (dict insertion order)."""
+        return [s for s, r in self.running.items() if r.state == PREFILLING]
+
+    def decoding_slots(self) -> List[int]:
+        return sorted(s for s, r in self.running.items()
+                      if r.state == DECODING)
