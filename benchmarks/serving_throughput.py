@@ -2,7 +2,9 @@
 
 Replays one ragged request stream (ragged prompt lengths AND ragged
 per-request output caps) through both serving architectures at three tiers
-— small model, large model, and router-split hybrid — and reports:
+— small model, large model, and router-split hybrid — plus a 3-tier
+cascade-routed ``ContinuousPoolEngine`` (small/medium/large, per-tier
+tokens/s, TTFT, and KV high-water columns) — and reports:
 
   * tokens/s        — *useful* generated tokens per wall second. A token is
                       useful if it falls within the request's own output cap;
@@ -46,27 +48,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.routing import HybridRouter
+from repro.core.routing import CascadePolicy, HybridRouter
 from repro.data import tokenizer as tok
 from repro.models import (RouterConfig, build_model, init_router_encoder)
 from repro.models.config import ArchConfig
-from repro.serving import (ContinuousEngine, ContinuousHybridEngine, Engine,
-                           HybridEngine)
+from repro.serving import (ContinuousEngine, ContinuousHybridEngine,
+                           ContinuousPoolEngine, Engine, HybridEngine)
 
 
 def tier_configs(smoke: bool):
+    """(small, medium, large) — the hybrid rows use the (small, large)
+    pair, the 3-tier pool row all three."""
     base = dict(family="dense", vocab_size=tok.VOCAB_SIZE,
                 vocab_pad_multiple=16, head_dim=16, attn_chunk=32,
                 cache_layout="paged", kv_page_size=16)
     small = ArchConfig(name="serve-small", n_layers=2, d_model=64, n_heads=4,
                        n_kv_heads=2, d_ff=128, **base)
     if smoke:
+        medium = ArchConfig(name="serve-medium", n_layers=2, d_model=64,
+                            n_heads=4, n_kv_heads=2, d_ff=192, **base)
         large = ArchConfig(name="serve-large", n_layers=3, d_model=64,
                            n_heads=4, n_kv_heads=2, d_ff=128, **base)
     else:
+        medium = ArchConfig(name="serve-medium", n_layers=4, d_model=128,
+                            n_heads=8, n_kv_heads=4, d_ff=192, **base)
         large = ArchConfig(name="serve-large", n_layers=6, d_model=128,
                            n_heads=8, n_kv_heads=4, d_ff=256, **base)
-    return small, large
+    return small, medium, large
 
 
 def make_stream(rng, n: int, t_max: int):
@@ -211,12 +219,20 @@ def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
     }
 
 
-def _median_router(q, mask):
+def _toy_router(q, mask):
+    """One toy router scores every routed row — the hybrid rows' median
+    split and the pool row's tercile cascade must bucket the SAME scores
+    for their cost columns to be comparable."""
     rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
                       n_heads=2, d_ff=64)
     params = init_router_encoder(jax.random.PRNGKey(0), rc)
     r = HybridRouter(params, rc, 0.5)
     scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    return r, scores
+
+
+def _median_router(q, mask):
+    r, scores = _toy_router(q, mask)
     return r.with_threshold(float(np.median(scores)))
 
 
@@ -251,6 +267,7 @@ def run_hybrid_dense(bundles, stream, t_max, batch):
         "kv_high_water_bytes": int(small.stats.kv_high_water_bytes
                                    + large.stats.kv_high_water_bytes),
         "cost_advantage": round(hy.meter.cost_advantage, 4),
+        "token_cost_advantage": round(hy.meter.token_cost_advantage, 4),
         **_percentiles(latencies),
         **_join_ttft(latencies),
     }
@@ -288,9 +305,74 @@ def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng,
             small.cache.stats.high_water_pages * bpp
             + large.cache.stats.high_water_pages * bpl),
         "cost_advantage": round(hy.meter.cost_advantage, 4),
+        "token_cost_advantage": round(hy.meter.token_cost_advantage, 4),
         "routed_small": int(to_small.sum()),
         "prefill_compiles": small.stats.prefill_compiles
         + large.stats.prefill_compiles,
+        "finish_reasons": _finish_reasons(reqs),
+        **_percentiles(latencies),
+        **_streaming_metrics(reqs),
+    }
+
+
+def _tercile_cascade(q, mask):
+    """3-tier cascade policy splitting the stream into rough thirds by
+    router-score terciles (the ThresholdPolicy-cascade analogue of the
+    hybrid rows' median split, same toy router)."""
+    r, scores = _toy_router(q, mask)
+    return CascadePolicy(r, (float(np.quantile(scores, 2 / 3)),
+                             float(np.quantile(scores, 1 / 3))))
+
+
+def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
+                        prefill_chunk=None):
+    """3-tier cascade-routed pool: per-tier traffic, tokens/s, TTFT, and KV
+    high-water, plus the calls-/token-weighted cost advantage vs routing
+    everything to the priciest tier."""
+    toks, lens, caps = stream
+    mask = (toks != tok.PAD).astype(np.float32)
+    policy = _tercile_cascade(toks, mask)
+    names = ("small", "medium", "large")
+    slot_counts = (n_slots, max(2, 3 * n_slots // 4), max(2, n_slots // 2))
+    engines = []
+    for (b, p), ns in zip(bundles, slot_counts):
+        eng = _continuous(b, p, t_max, ns, prefill_chunk)
+        _warm_continuous(eng, rng, lens)
+        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
+        engines.append(eng)
+    pool = ContinuousPoolEngine(policy, list(zip(names, engines)))
+    t0 = time.time()
+    reqs, tier_idx, _ = pool.submit(toks, mask, max_new_tokens=caps)
+    pool.run()
+    wall = time.time() - t0
+    useful = sum(r.n_generated for r in reqs)
+    latencies = [r.finish_t - t0 for r in reqs]
+    per_tier = {}
+    for t, (name, eng) in enumerate(zip(names, engines)):
+        treqs = [r for r, ti in zip(reqs, tier_idx) if ti == t]
+        row = pool.meter.summary()[name]
+        row.update({
+            "tokens_per_s": round(row["gen_tokens"] / wall, 2),
+            "kv_high_water_bytes": int(eng.cache.stats.high_water_pages
+                                       * eng.cache.bytes_per_page),
+            "prefill_compiles": eng.stats.prefill_compiles,
+        })
+        if treqs:
+            row.update({k: v for k, v in _streaming_metrics(treqs).items()
+                        if k.startswith("ttft")})
+        per_tier[name] = row
+    return {
+        "engine": "continuous_paged_pool",
+        "n_tiers": len(names),
+        "requests": len(toks),
+        "useful_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "kv_high_water_bytes": sum(t["kv_high_water_bytes"]
+                                   for t in per_tier.values()),
+        "cost_advantage": round(pool.meter.cost_advantage, 4),
+        "token_cost_advantage": round(pool.meter.token_cost_advantage, 4),
+        "per_tier": per_tier,
         "finish_reasons": _finish_reasons(reqs),
         **_percentiles(latencies),
         **_streaming_metrics(reqs),
@@ -317,16 +399,18 @@ def main():
     rng = np.random.default_rng(0)
     stream = make_stream(rng, n, t_max)
 
-    cfg_s, cfg_l = tier_configs(args.smoke)
-    bundles = []
-    for cfg, seed in ((cfg_s, 1), (cfg_l, 2)):
+    cfg_s, cfg_m, cfg_l = tier_configs(args.smoke)
+    pool_bundles = []
+    for cfg, seed in ((cfg_s, 1), (cfg_m, 3), (cfg_l, 2)):
         b = build_model(cfg)
-        bundles.append((b, b.init(jax.random.PRNGKey(seed))))
+        pool_bundles.append((b, b.init(jax.random.PRNGKey(seed))))
+    bundles = [pool_bundles[0], pool_bundles[2]]   # the hybrid (S, L) pair
 
     results = {"config": {"requests": n, "t_max": t_max, "batch": batch,
                           "n_slots": n_slots, "smoke": args.smoke,
                           "prefill_chunk": args.prefill_chunk,
-                          "small": cfg_s.name, "large": cfg_l.name},
+                          "small": cfg_s.name, "medium": cfg_m.name,
+                          "large": cfg_l.name},
                "tiers": {}}
 
     def report(name, r):
@@ -360,6 +444,18 @@ def main():
     results["hybrid_speedup"] = round(speedup, 3)
     results["hybrid_kv_ratio"] = round(kv_ratio, 3)
     print(f"hybrid: {speedup:.2f}x tokens/s, {kv_ratio:.2f}x KV high-water")
+
+    print("== pool (3-tier cascade) ==")
+    p = run_pool_continuous(pool_bundles, stream, t_max, n_slots,
+                            np.random.default_rng(7), args.prefill_chunk)
+    results["pool"] = p
+    report("pool", p)
+    for name, row in p["per_tier"].items():
+        print(f"    {name:<8} {row['calls']:>4} calls  "
+              f"{row['tokens_per_s']:>8} tok/s  kv "
+              f"{row['kv_high_water_bytes']}")
+    print(f"pool: {p['cost_advantage']:.0%} of calls / "
+          f"{p['token_cost_advantage']:.0%} of tokens off {cfg_l.name}")
 
     out = args.out
     if out is None and not args.smoke:

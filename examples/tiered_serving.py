@@ -1,0 +1,77 @@
+"""Three-tier pool serving with a runtime quality dial — the deployment
+story generalized past the paper's small/large pair.
+
+Trains a tiny/small/large LM zoo, one router on the (tiny, large) quality
+gap, and serves the same request stream through a ``ContinuousPoolEngine``
+twice over:
+
+  1. a ``CascadePolicy`` whose two gates come from ONE calibration-frontier
+     sweep at a drop budget, and
+  2. a ``QualityTargetPolicy`` swept across targets at serve time — the
+     paper's "desired quality level" dial with no retraining and no
+     recalibration: each query goes to the cheapest tier whose calibrated
+     score->quality map clears the target.
+
+Run: PYTHONPATH=src python examples/tiered_serving.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core.experiment import (build_experiment, pool_policy,
+                                   train_pool_router)
+from repro.models import build_model
+from repro.serving import ContinuousEngine, ContinuousPoolEngine
+
+TIERS3 = ("tiny", "small", "large")
+
+
+def main():
+    exp = build_experiment(seed=1, n_train_queries=300, n_test_queries=150,
+                           n_samples=3, steps_scale=0.2, tiers=TIERS3)
+    router_out = train_pool_router(exp, TIERS3, epochs=2)
+    ds = exp.datasets["test"]
+
+    # one engine per tier, cheapest -> priciest; the paged layout selects
+    # the continuous-batching path (params are unchanged)
+    engines = []
+    for t in TIERS3:
+        lm = exp.lms[t]
+        bundle = build_model(dataclasses.replace(lm.cfg,
+                                                 cache_layout="paged"))
+        engines.append((t, ContinuousEngine(bundle, lm.params,
+                                            max_new_tokens=12, n_slots=8,
+                                            max_seq=64)))
+
+    def serve(policy):
+        pool = ContinuousPoolEngine(policy, engines)
+        pool.serve(ds.query[:64], ds.query_mask[:64])
+        return pool.meter
+
+    print("== cascade (one frontier sweep, 2% drop budget) ==")
+    cascade = pool_policy(exp, router_out, TIERS3, kind="cascade",
+                          max_drop_pct=2.0)
+    print("  gates: " + ", ".join(f"{t:.3f}" for t in cascade.thresholds))
+    meter = serve(cascade)
+    for name, row in meter.summary().items():
+        print(f"  {name:<6} {row['calls']:>4} calls {row['gen_tokens']:>5} tok")
+    print(f"  cost advantage vs all-large: {meter.cost_advantage:.0%} calls, "
+          f"{meter.token_cost_advantage:.0%} tokens")
+
+    print("\n== quality-target dial (same pool, tuned at serve time) ==")
+    qt = pool_policy(exp, router_out, TIERS3, kind="quality_target")
+    q_lo = float(exp.qualities["tiny"]["val"].mean())
+    q_hi = float(exp.qualities["large"]["val"].mean())
+    hdr = " ".join(f"{t:>6}" for t in TIERS3)
+    print(f"{'target':>8} {hdr} {'calls-adv':>10} {'tokens-adv':>11}")
+    for target in np.linspace(q_lo, q_hi, 4):
+        qt.set_target(float(target))
+        meter = serve(qt)
+        frac = " ".join(f"{c / meter.total_calls:>6.0%}"
+                        for c in meter.calls)
+        print(f"{target:8.3f} {frac} {meter.cost_advantage:>10.0%} "
+              f"{meter.token_cost_advantage:>11.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,5 +8,9 @@ from .metrics import (error_cost_curve, drop_at_cost_advantages,
                       perf_drop_pct, quality_gap_difference, pearson, spearman,
                       random_routing_curve, CurvePoint)
 from .router import RouterTrainConfig, train_router, score_dataset, bce_loss
-from .thresholds import calibrate_threshold, evaluate_threshold, CalibrationResult
-from .routing import HybridRouter, CostMeter, route_scores_jit
+from .thresholds import (calibrate_threshold, calibration_frontier,
+                         cascade_thresholds, best_feasible, evaluate_threshold,
+                         CalibrationResult, FrontierPoint)
+from .routing import (HybridRouter, CostMeter, TierMeter, route_scores_jit,
+                      RoutingPolicy, ThresholdPolicy, CascadePolicy,
+                      QualityTargetPolicy, TierQualityMap, fit_quality_map)

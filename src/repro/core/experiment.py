@@ -14,6 +14,7 @@ Model capacity pairs mirror the paper's three performance-gap regimes.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict
 
 import jax
@@ -131,9 +132,12 @@ def build_experiment(seed: int = 0, n_train_queries: int = 1200,
     resp_lengths = {t: {} for t in tiers}
     for t in tiers:
         for split, ds in datasets.items():
-            q, r, l = response_qualities(lms[t], ds, n_samples,
-                                         temperature=temperature,
-                                         seed=seed + hash((t, split)) % 1000)
+            # crc32, not hash(): PYTHONHASHSEED randomizes hash() per
+            # process, which made sampled qualities (and the tests bounding
+            # them) nondeterministic across CI runs
+            q, r, l = response_qualities(
+                lms[t], ds, n_samples, temperature=temperature,
+                seed=seed + zlib.crc32(f"{t}/{split}".encode()) % 1000)
             qualities[t][split] = q
             responses[t][split] = r
             resp_lengths[t][split] = l
@@ -141,6 +145,9 @@ def build_experiment(seed: int = 0, n_train_queries: int = 1200,
 
 
 ROUTER_KINDS = ("det", "prob", "trans")
+
+# capacity order of the tier vocabulary, cheapest -> priciest
+TIER_ORDER = tuple(TIERS)
 
 
 def make_labels(kind: str, q_small: np.ndarray, q_large: np.ndarray):
@@ -178,5 +185,62 @@ def train_pair_routers(exp: ExperimentData, small_tier: str, large_tier: str,
         scores = {split: score_dataset(params, rcfg, ds.query, ds.query_mask)
                   for split, ds in exp.datasets.items()}
         out[kind] = {"params": params, "rcfg": rcfg, "scores": scores,
-                     "t_star": t_star, "history": hist}
+                     "t_star": t_star, "history": hist, "label_kind": kind}
     return out
+
+
+# ---------------------------------------------------------------- K-tier pool
+def _check_tier_order(exp: ExperimentData, tiers):
+    if len(tiers) < 2:
+        raise ValueError(f"a pool needs at least two tiers, got {tiers}")
+    order = [TIER_ORDER.index(t) for t in tiers]
+    if order != sorted(order):
+        raise ValueError(f"tiers must be cheapest -> priciest "
+                         f"(TIER_ORDER {TIER_ORDER}): {tiers}")
+    missing = [t for t in tiers if t not in exp.qualities]
+    if missing:
+        raise ValueError(f"experiment has no qualities for tiers {missing}")
+
+
+def train_pool_router(exp: ExperimentData, tiers, kind: str = "trans",
+                      epochs: int = 5, seed: int = 0,
+                      rcfg: RouterConfig | None = None) -> dict:
+    """One router for a K-tier pool over ``tiers`` (cheapest -> priciest in
+    the TIERS vocabulary): trained on the (cheapest, priciest) pair's
+    quality gap — middle tiers share the same easiness score and are gated
+    by a policy's thresholds/quality maps."""
+    _check_tier_order(exp, tiers)
+    return train_pair_routers(exp, tiers[0], tiers[-1], kinds=(kind,),
+                              epochs=epochs, seed=seed, rcfg=rcfg)[kind]
+
+
+def pool_policy(exp: ExperimentData, router_out: dict, tiers,
+                kind: str = "cascade", split: str = "val",
+                max_drop_pct: float = 1.0, quality_target: float = 0.0,
+                n_bins: int = 8):
+    """A ``RoutingPolicy`` over ``tiers`` from one experiment.
+
+    ``kind="cascade"``: K-1 thresholds from a single
+    ``calibration_frontier`` sweep of the (cheapest, priciest) qualities on
+    ``split`` at ``max_drop_pct``. ``kind="quality_target"``: per-tier
+    score->quality maps calibrated on ``split`` for the runtime quality
+    dial, starting at ``quality_target``."""
+    from .routing import CascadePolicy, HybridRouter, QualityTargetPolicy
+    from .thresholds import calibration_frontier, cascade_thresholds
+    _check_tier_order(exp, tiers)
+    scores = router_out["scores"][split]
+    if kind == "cascade":
+        frontier = calibration_frontier(scores,
+                                        exp.qualities[tiers[0]][split],
+                                        exp.qualities[tiers[-1]][split])
+        ts = cascade_thresholds(frontier, len(tiers), max_drop_pct)
+        router = HybridRouter(router_out["params"], router_out["rcfg"],
+                              ts[0], router_out.get("label_kind", "trans"))
+        return CascadePolicy(router, tuple(ts))
+    if kind == "quality_target":
+        router = HybridRouter(router_out["params"], router_out["rcfg"], 0.5,
+                              router_out.get("label_kind", "trans"))
+        return QualityTargetPolicy.fit(
+            router, scores, [exp.qualities[t][split] for t in tiers],
+            quality_target, n_bins)
+    raise ValueError(f"unknown pool policy kind {kind!r}")

@@ -1,14 +1,34 @@
-"""The routing policy — the paper's r: X -> {0, 1} as a deployable object.
+"""Routing policies — the paper's r: X -> {0, 1} generalized to K tiers.
 
-``HybridRouter`` packages a trained router encoder + threshold; ``route``
-returns the dispatch decision per query (True = small model). The serving
-engine (repro.serving.hybrid) consumes this to drive two-model inference.
+The paper's router is binary: a score threshold splits queries between one
+small and one large model. This module keeps that object (``HybridRouter``)
+and layers the N-tier abstraction the serving pool needs on top of it:
+
+* ``RoutingPolicy`` — the protocol every policy implements:
+  ``decide(tokens, mask) -> (tier_idx, scores)`` where ``tier_idx`` is an
+  (N,) int array indexing an ordered pool of engines, cheapest (0) to
+  priciest (K-1), and ``scores`` are the raw router scores (higher =
+  easier = cheaper-tier-safe).
+* ``ThresholdPolicy`` — paper-exact binary routing; wraps ``HybridRouter``
+  (tier 0 iff score >= threshold).
+* ``CascadePolicy`` — K-1 descending score thresholds bucketing queries
+  across K tiers; thresholds come from a single
+  ``core.thresholds.calibration_frontier`` sweep (see ``from_frontier``).
+* ``QualityTargetPolicy`` — the paper's "desired quality level" dial
+  generalized to K tiers: per-tier calibrated score->quality maps, each
+  query goes to the cheapest tier whose predicted quality clears a
+  runtime-tunable target.
+
+``TierMeter`` is the K-tier cost accountant (§2.3 against the all-priciest
+baseline); ``CostMeter`` is its two-tier facade, keeping the original
+small/large field names. The serving layer (repro.serving.pool / .hybrid)
+consumes policies and meters to drive multi-model inference.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Dict, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -50,29 +70,264 @@ def route_scores_jit(rcfg: RouterConfig):
     return fn
 
 
-@dataclasses.dataclass
-class CostMeter:
-    """Accounting for the cost advantage of a serving session (§2.3)."""
-    to_small: int = 0
-    to_large: int = 0
-    small_tokens: int = 0
-    large_tokens: int = 0
+# ------------------------------------------------------------------ policies
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    """Admission-time dispatch over an ordered pool of K model tiers."""
 
-    def record(self, routed_small: np.ndarray, gen_tokens):
-        """Record a batch of routed requests. ``gen_tokens`` is the number
+    @property
+    def n_tiers(self) -> int: ...
+
+    def decide(self, tokens, mask) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (tier_idx (N,) int — 0 = cheapest tier, scores (N,))."""
+        ...
+
+
+@dataclasses.dataclass
+class ThresholdPolicy:
+    """The paper's binary router as a two-tier policy: tier 0 (cheap) iff
+    score >= the wrapped router's threshold."""
+    router: HybridRouter
+
+    @property
+    def n_tiers(self) -> int:
+        return 2
+
+    def decide(self, tokens, mask) -> Tuple[np.ndarray, np.ndarray]:
+        scores = np.asarray(self.router.scores(jnp.asarray(tokens),
+                                               jnp.asarray(mask)))
+        return np.where(scores >= self.router.threshold, 0, 1), scores
+
+
+@dataclasses.dataclass
+class CascadePolicy:
+    """K-1 descending thresholds bucket queries across K tiers: tier k takes
+    scores in [t_k, t_{k-1}), tier 0 everything >= t_0, tier K-1 everything
+    below t_{K-2}. With one threshold this is exactly ``ThresholdPolicy``.
+
+    ``router`` supplies the scores; its own threshold is ignored.
+    """
+    router: HybridRouter
+    thresholds: Tuple[float, ...]
+
+    def __post_init__(self):
+        self.thresholds = tuple(float(t) for t in self.thresholds)
+        if not self.thresholds:
+            raise ValueError("CascadePolicy needs at least one threshold "
+                             "(two tiers)")
+        if any(a < b for a, b in zip(self.thresholds, self.thresholds[1:])):
+            raise ValueError(f"cascade thresholds must be non-increasing "
+                             f"(cheapest tier takes the highest scores): "
+                             f"{self.thresholds}")
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.thresholds) + 1
+
+    def decide(self, tokens, mask) -> Tuple[np.ndarray, np.ndarray]:
+        scores = np.asarray(self.router.scores(jnp.asarray(tokens),
+                                               jnp.asarray(mask)))
+        tier = np.zeros(scores.shape, np.int64)
+        for t in self.thresholds:
+            tier += scores < t
+        return tier, scores
+
+    @classmethod
+    def from_frontier(cls, router: HybridRouter, frontier, n_tiers: int,
+                      max_drop_pct: float = 1.0) -> "CascadePolicy":
+        """Pick K-1 thresholds from one ``calibration_frontier`` sweep (see
+        core.thresholds.cascade_thresholds for the selection rule)."""
+        from .thresholds import cascade_thresholds
+        return cls(router, tuple(cascade_thresholds(frontier, n_tiers,
+                                                    max_drop_pct)))
+
+
+@dataclasses.dataclass
+class TierQualityMap:
+    """Piecewise-constant calibrated score -> expected-quality map for one
+    tier: quantile score bins over a calibration set, mean quality per bin."""
+    bin_edges: np.ndarray   # (n_bins + 1,) ascending score edges
+    quality: np.ndarray     # (n_bins,) mean quality inside each bin
+
+    def __call__(self, scores: np.ndarray) -> np.ndarray:
+        idx = np.searchsorted(self.bin_edges, scores, side="right") - 1
+        return self.quality[np.clip(idx, 0, len(self.quality) - 1)]
+
+
+def fit_quality_map(scores: np.ndarray, q_samples: np.ndarray,
+                    n_bins: int = 8) -> TierQualityMap:
+    """Calibrate one tier's score->quality map on (scores, quality samples).
+    Quantile bin edges keep every bin populated on the calibration set;
+    ``q_samples`` is (N,) or (N, n_samples) (sample mean used)."""
+    q = np.asarray(q_samples, np.float64)
+    if q.ndim == 2:
+        q = q.mean(axis=1)
+    edges = np.unique(np.quantile(scores, np.linspace(0.0, 1.0, n_bins + 1)))
+    if len(edges) < 2:   # constant scores: one bin
+        edges = np.array([edges[0] - 1e-6, edges[0] + 1e-6])
+    idx = np.clip(np.searchsorted(edges, scores, side="right") - 1,
+                  0, len(edges) - 2)
+    quality = np.full(len(edges) - 1, float(q.mean()))
+    for b in range(len(quality)):
+        sel = idx == b
+        if sel.any():
+            quality[b] = float(q[sel].mean())
+    return TierQualityMap(edges, quality)
+
+
+@dataclasses.dataclass
+class QualityTargetPolicy:
+    """Cheapest tier whose calibrated score->quality map clears ``target`` —
+    the paper's "desired quality level" dial, generalized to K tiers and
+    tunable at serve time (``set_target``; no retraining, no recalibration).
+    Queries no tier clears fall through to the priciest tier."""
+    router: HybridRouter
+    maps: Sequence[TierQualityMap]   # cheapest -> priciest
+    target: float
+
+    def __post_init__(self):
+        if len(self.maps) < 2:
+            raise ValueError("QualityTargetPolicy needs a map per tier for "
+                             "at least two tiers")
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.maps)
+
+    def set_target(self, target: float):
+        self.target = float(target)
+
+    def predicted_quality(self, scores: np.ndarray) -> np.ndarray:
+        """(K, N) calibrated quality prediction per tier."""
+        return np.stack([m(scores) for m in self.maps])
+
+    def decide(self, tokens, mask) -> Tuple[np.ndarray, np.ndarray]:
+        scores = np.asarray(self.router.scores(jnp.asarray(tokens),
+                                               jnp.asarray(mask)))
+        ok = self.predicted_quality(scores) >= self.target
+        tier = np.where(ok.any(axis=0), ok.argmax(axis=0), self.n_tiers - 1)
+        return tier.astype(np.int64), scores
+
+    @classmethod
+    def fit(cls, router: HybridRouter, scores: np.ndarray,
+            tier_qualities: Sequence[np.ndarray], target: float,
+            n_bins: int = 8) -> "QualityTargetPolicy":
+        """Calibrate per-tier maps from one calibration set: ``scores`` (N,)
+        and ``tier_qualities`` [(N,) or (N, S)] cheapest -> priciest."""
+        return cls(router, [fit_quality_map(scores, q, n_bins)
+                            for q in tier_qualities], float(target))
+
+
+# -------------------------------------------------------------------- meters
+class TierMeter:
+    """Per-tier serving cost accounting against the all-priciest baseline.
+
+    Tiers are named cheapest -> priciest. §2.3's cost advantage generalizes
+    as the traffic the priciest tier did NOT serve: calls-weighted
+    (fraction of requests) and token-weighted (fraction of generated
+    tokens — §2.3 charges generated tokens). For K=2 both reduce to the
+    paper's "fraction routed to the small model".
+    """
+
+    def __init__(self, names: Sequence[str]):
+        if len(names) < 2:
+            raise ValueError("a tier meter needs at least two tiers")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {tuple(names)}")
+        self.names: Tuple[str, ...] = tuple(names)
+        self.calls = np.zeros(len(self.names), np.int64)
+        self.tokens = np.zeros(len(self.names), np.int64)
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.names)
+
+    def record(self, tier_idx: np.ndarray, gen_tokens):
+        """Record a batch of served requests. ``gen_tokens`` is the number
         of tokens each request actually generated: a per-request array
-        aligned with ``routed_small``, or a scalar applied to every request.
+        aligned with ``tier_idx``, or a scalar applied to every request.
         Charging a budget (e.g. max_new_tokens) instead of realised lengths
         overstates the paper's §2.3 cost metric."""
-        routed = np.asarray(routed_small, bool)
-        lens = np.broadcast_to(np.asarray(gen_tokens, np.int64),
-                               routed.shape)
-        self.to_small += int(routed.sum())
-        self.to_large += int((~routed).sum())
-        self.small_tokens += int(lens[routed].sum())
-        self.large_tokens += int(lens[~routed].sum())
+        tier = np.asarray(tier_idx, np.int64).reshape(-1)
+        if tier.size and (tier.min() < 0 or tier.max() >= self.n_tiers):
+            raise ValueError(f"tier index out of range for {self.names}: "
+                             f"{tier}")
+        lens = np.broadcast_to(np.asarray(gen_tokens, np.int64), tier.shape)
+        self.calls += np.bincount(tier, minlength=self.n_tiers)
+        self.tokens += np.bincount(tier, weights=lens,
+                                   minlength=self.n_tiers).astype(np.int64)
+
+    @property
+    def total_calls(self) -> int:
+        return int(self.calls.sum())
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.tokens.sum())
 
     @property
     def cost_advantage(self) -> float:
-        total = self.to_small + self.to_large
-        return self.to_small / total if total else 0.0
+        """Calls-weighted: fraction of requests the priciest tier never saw."""
+        total = self.total_calls
+        return 1.0 - int(self.calls[-1]) / total if total else 0.0
+
+    @property
+    def token_cost_advantage(self) -> float:
+        """Token-weighted: fraction of generated tokens produced off the
+        priciest tier (§2.3 charges generated tokens, so this is the cost
+        metric when tiers bill per token)."""
+        total = self.total_tokens
+        return 1.0 - int(self.tokens[-1]) / total if total else 0.0
+
+    def summary(self) -> Dict[str, dict]:
+        """Per-tier calls/tokens, keyed by tier name (cheapest first)."""
+        return {name: {"calls": int(c), "gen_tokens": int(t)}
+                for name, c, t in zip(self.names, self.calls, self.tokens)}
+
+
+class CostMeter:
+    """Two-tier facade over ``TierMeter`` keeping the paper's small/large
+    vocabulary (§2.3). Pass an existing meter to expose a live view of it
+    (the continuous hybrid facade shares its pool's meter this way)."""
+
+    def __init__(self, tier_meter: Optional[TierMeter] = None):
+        self._m = tier_meter if tier_meter is not None \
+            else TierMeter(("small", "large"))
+        if self._m.n_tiers != 2:
+            raise ValueError(f"CostMeter is the two-tier view; got "
+                             f"{self._m.n_tiers} tiers {self._m.names}")
+
+    @property
+    def tiers(self) -> TierMeter:
+        """The underlying two-tier meter (cheapest first)."""
+        return self._m
+
+    def record(self, routed_small: np.ndarray, gen_tokens):
+        """Record a batch of routed requests (see ``TierMeter.record`` for
+        the ``gen_tokens`` contract)."""
+        routed = np.asarray(routed_small, bool)
+        self._m.record(np.where(routed, 0, 1), gen_tokens)
+
+    @property
+    def to_small(self) -> int:
+        return int(self._m.calls[0])
+
+    @property
+    def to_large(self) -> int:
+        return int(self._m.calls[1])
+
+    @property
+    def small_tokens(self) -> int:
+        return int(self._m.tokens[0])
+
+    @property
+    def large_tokens(self) -> int:
+        return int(self._m.tokens[1])
+
+    @property
+    def cost_advantage(self) -> float:
+        return self._m.cost_advantage
+
+    @property
+    def token_cost_advantage(self) -> float:
+        return self._m.token_cost_advantage

@@ -1,18 +1,33 @@
-"""Serving launcher: hybrid two-model serving on an assigned architecture
+"""Serving launcher: K-tier model-pool serving on an assigned architecture
 family (reduced configs, CPU-runnable; full configs exercised via dry-run).
 
-Builds the (small-sibling, full-reduced) pair for --arch, trains both briefly
-on the synthetic suite, trains the r_trans router, and serves a request
-stream, reporting the realised cost advantage at the requested quality drop
-budget.
+``--tiers`` names the pool, cheapest -> priciest, K >= 2 entries. Each name
+is either a sibling scale of ``--arch`` (``eighth`` / ``quarter`` / ``half``
+/ ``full`` — the reduced config with layers/width divided by that factor) or
+any architecture id from ``--list``-style ARCH_IDS (that architecture's
+reduced config), so a pool can mix scales of one family or whole families.
+The default ``half full`` preserves the original two-tier halved-layer
+sibling pair.
+
+Every tier LM trains briefly on the synthetic suite (cheaper tiers fewer
+steps), the r_trans router trains on the (cheapest, priciest) quality gap,
+and ONE ``calibration_frontier`` sweep at the requested drop budget yields
+the routing policy: the paper-exact threshold for K=2, a ``CascadePolicy``
+bucketing queries across the K tiers otherwise. The request stream then
+reports per-tier traffic plus the calls- and token-weighted cost advantage
+vs the all-priciest baseline.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3.5-moe-42b-a6.6b \
       --requests 256 --drop-budget 2.0
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-32b \
+      --tiers quarter half full --continuous
 
 ``--continuous`` serves the stream through the continuous-batching paged-KV
-engines (serving.ContinuousHybridEngine) instead of the dense-batch pair —
+engines (serving.ContinuousPoolEngine) instead of the dense-batch pair —
 the production path for ragged online traffic (attention families only).
+K > 2 tiers require ``--continuous`` (the dense barrier-join path is the
+two-tier offline evaluation artifact).
 """
 from __future__ import annotations
 
@@ -22,36 +37,94 @@ import dataclasses
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import HybridRouter, calibrate_threshold
+from repro.core import (CascadePolicy, CostMeter, HybridRouter,
+                        ThresholdPolicy, TierMeter, best_feasible,
+                        calibration_frontier, cascade_thresholds)
 from repro.core.experiment import make_labels
 from repro.core.quality import edit_similarity
 from repro.core.router import RouterTrainConfig, score_dataset, train_router
 from repro.data import tokenizer as tok
 from repro.data.tasks import generate_dataset, lm_training_arrays
 from repro.models import RouterConfig, build_model
-from repro.serving import ContinuousEngine, ContinuousHybridEngine, \
-    HybridEngine, make_engine
+from repro.serving import (ContinuousEngine, ContinuousPoolEngine,
+                           HybridEngine, make_engine)
 from repro.serving.generate import sample_responses
 from repro.training.trainer import TrainConfig, train_lm
 
+# sibling scales: divide layers/width of --arch's reduced config. "half" is
+# the original hard-coded small sibling; "full" the unscaled config.
+SIBLING_SCALES = {"eighth": 8, "quarter": 4, "half": 2, "full": 1}
+_SCALE_SUFFIX = {8: "-e", 4: "-q", 2: "-s", 1: ""}
+
+
+def scaled_sibling(full, factor: int):
+    """A capacity-scaled sibling of ``full`` (factor 1 = the config itself),
+    shrinking layers, width, heads, and FFN together."""
+    if factor == 1:
+        return full
+    return dataclasses.replace(
+        full, n_layers=max(1, full.n_layers // factor),
+        d_model=max(8, full.d_model // factor),
+        n_heads=max(1, full.n_heads // factor),
+        n_kv_heads=max(1, min(full.n_kv_heads, full.n_heads // factor))
+        if full.n_kv_heads else 0,
+        d_ff=max(8, full.d_ff // factor) if full.d_ff else 0,
+        name=full.name + _SCALE_SUFFIX[factor])
+
+
+def _reduced(arch: str):
+    return dataclasses.replace(get_config(arch).reduced(),
+                               vocab_size=tok.VOCAB_SIZE,
+                               vocab_pad_multiple=16)
+
+
+def resolve_tiers(arch: str, tier_names):
+    """Tier configs for ``--tiers``, cheapest -> priciest: sibling-scale
+    names resolve against ``--arch``, architecture ids stand alone."""
+    full = _reduced(arch)
+    cfgs = []
+    for name in tier_names:
+        if name in SIBLING_SCALES:
+            cfgs.append(scaled_sibling(full, SIBLING_SCALES[name]))
+        elif name in ARCH_IDS:
+            cfgs.append(_reduced(name))
+        else:
+            raise SystemExit(
+                f"--tiers entry {name!r} is neither a sibling scale "
+                f"{tuple(SIBLING_SCALES)} nor an architecture id")
+    seen = set()
+    for cfg in cfgs:
+        if cfg.name in seen:
+            raise SystemExit(f"--tiers resolves to duplicate config "
+                             f"{cfg.name!r}; each tier needs its own model")
+        seen.add(cfg.name)
+    # routing correctness hangs on the cheapest -> priciest ordering: an
+    # inverted pool would send easy queries to the big model and report a
+    # confidently wrong cost advantage
+    counts = [c.param_count() for c in cfgs]
+    if any(a > b for a, b in zip(counts, counts[1:])):
+        raise SystemExit(
+            "--tiers must be ordered cheapest -> priciest; resolved "
+            "param counts are "
+            + ", ".join(f"{c.name}={n:,}" for c, n in zip(cfgs, counts)))
+    return cfgs
+
 
 def reduced_pair(arch: str):
-    full = dataclasses.replace(get_config(arch).reduced(),
-                               vocab_size=tok.VOCAB_SIZE, vocab_pad_multiple=16)
-    small = dataclasses.replace(full, n_layers=max(1, full.n_layers // 2),
-                                d_model=full.d_model // 2,
-                                n_heads=max(1, full.n_heads // 2),
-                                n_kv_heads=max(1, min(full.n_kv_heads,
-                                                      full.n_heads // 2))
-                                if full.n_kv_heads else 0,
-                                d_ff=full.d_ff // 2 if full.d_ff else 0,
-                                name=full.name + "-s")
-    return small, full
+    """The original two-tier (halved sibling, full) pair — now just the
+    default ``--tiers half full`` resolution."""
+    return tuple(resolve_tiers(arch, ("half", "full")))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-4b")
+    ap.add_argument("--tiers", nargs="+", default=["half", "full"],
+                    metavar="TIER",
+                    help="K >= 2 tier configs, cheapest -> priciest: sibling "
+                         f"scales {tuple(SIBLING_SCALES)} of --arch and/or "
+                         "architecture ids (default: half full — the "
+                         "original pair)")
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--drop-budget", type=float, default=2.0)
     ap.add_argument("--steps", type=int, default=250)
@@ -64,25 +137,40 @@ def main():
                          "default: the architecture's prefill_chunk knob)")
     args = ap.parse_args()
 
-    cfg_s, cfg_l = reduced_pair(args.arch)
+    cfgs = resolve_tiers(args.arch, args.tiers)
+    K = len(cfgs)
+    if K < 2:
+        raise SystemExit("--tiers needs at least two tiers")
+    if K > 2 and not args.continuous:
+        raise SystemExit("K > 2 tiers serve through the continuous pool "
+                         "engine; pass --continuous")
+    if K > 2:
+        # fail before minutes of tier training, not after
+        no_paged = [c.name for c in cfgs if not c.supports_paged_kv]
+        if no_paged:
+            raise SystemExit(f"{', '.join(no_paged)}: no paged-KV path, and "
+                             "K > 2 tiers have no dense fallback")
     rng = np.random.default_rng(0)
     train_ds = generate_dataset(rng, 1500)
     arrays = lm_training_arrays(train_ds)
 
-    print(f"== training {cfg_s.name} and {cfg_l.name} ==")
-    pair = {}
-    for cfg, steps in ((cfg_s, args.steps // 2), (cfg_l, args.steps)):
+    print(f"== training {', '.join(c.name for c in cfgs)} ==")
+    pool = {}
+    for i, cfg in enumerate(cfgs):
+        # cheaper tiers train less: capacity AND compute gaps, like the
+        # paper's FLAN-t5(800m) vs Llama-2(13b)
+        steps = max(1, args.steps * (i + 1) // K)
         bundle = build_model(cfg)
         params, hist = train_lm(bundle, arrays,
                                 TrainConfig(steps=steps, batch_size=32,
                                             lr=2e-3))
-        pair[cfg.name] = (bundle, params)
+        pool[cfg.name] = (bundle, params)
         print(f"  {cfg.name}: loss {hist[-1]['loss']:.3f}")
 
     print("== labelling + router training ==")
     cal_ds = generate_dataset(rng, 300)
     qualities = {}
-    for name, (bundle, params) in pair.items():
+    for name, (bundle, params) in pool.items():
         resp, lens = sample_responses(bundle, params, cal_ds.query,
                                       args.samples, 12, 0.8)
         q = np.zeros(resp.shape[:2], np.float32)
@@ -90,45 +178,66 @@ def main():
             q[:, s] = edit_similarity(resp[:, s], lens[:, s], cal_ds.ref,
                                       cal_ds.ref_len)
         qualities[name] = q
-    y, t_star = make_labels("trans", qualities[cfg_s.name],
-                            qualities[cfg_l.name])
+    # the router learns the (cheapest, priciest) quality gap; middle tiers
+    # share the same easiness score and are gated by cascade thresholds
+    y, t_star = make_labels("trans", qualities[cfgs[0].name],
+                            qualities[cfgs[-1].name])
     rcfg = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=2, d_model=64,
                         n_heads=4, d_ff=256)
     rparams, _ = train_router(rcfg, cal_ds.query, cal_ds.query_mask, y,
                               RouterTrainConfig(epochs=3))
     scores = score_dataset(rparams, rcfg, cal_ds.query, cal_ds.query_mask)
-    cal = calibrate_threshold(scores, qualities[cfg_s.name],
-                              qualities[cfg_l.name],
-                              max_drop_pct=args.drop_budget)
+    frontier = calibration_frontier(scores, qualities[cfgs[0].name],
+                                    qualities[cfgs[-1].name])
+    cal = best_feasible(frontier, args.drop_budget)
     print(f"  t*={t_star:.3f} threshold={cal.threshold:.3f} "
           f"(expect {cal.expected_cost_advantage:.0%} cost adv)")
+    router = HybridRouter(rparams, rcfg, cal.threshold)
+    if K > 2:
+        thresholds = cascade_thresholds(frontier, K, args.drop_budget)
+        print(f"  cascade thresholds: "
+              f"{', '.join(f'{t:.3f}' for t in thresholds)}")
 
     print("== serving ==")
-    router = HybridRouter(rparams, rcfg, cal.threshold)
     layout = "paged" if args.continuous else "dense"
     engines = []
-    for name in (cfg_s.name, cfg_l.name):
-        bundle, params = pair[name]
+    for cfg in cfgs:
+        bundle, params = pool[cfg.name]
         # cache_layout only selects the serving engine; params are unchanged
         bundle = build_model(dataclasses.replace(bundle.cfg,
                                                  cache_layout=layout))
         engines.append(make_engine(bundle, params, max_new_tokens=12,
                                    n_slots=8, max_seq=64,
                                    prefill_chunk=args.prefill_chunk))
-    small, large = engines
-    if isinstance(small, ContinuousEngine):
-        hy = ContinuousHybridEngine(router, small, large)
+    # K > 2 already guaranteed paged support before training
+    continuous = all(isinstance(e, ContinuousEngine) for e in engines)
+    if continuous:
+        policy = ThresholdPolicy(router) if K == 2 \
+            else CascadePolicy(router, thresholds)
+        hy = ContinuousPoolEngine(policy,
+                                  list(zip((c.name for c in cfgs), engines)))
     else:
         if args.continuous:
-            print(f"  ({cfg_s.name}: no paged-KV path; falling back to "
-                  "dense-batch engines)")
-        hy = HybridEngine(router, small, large)
+            no_paged = [c.name for c, e in zip(cfgs, engines)
+                        if not isinstance(e, ContinuousEngine)]
+            print(f"  ({', '.join(no_paged)}: no paged-KV path; falling "
+                  "back to dense-batch engines)")
+        hy = HybridEngine(router, engines[0], engines[1])
+        # name the meter's tiers after the real configs, not small/large
+        hy.meter = CostMeter(TierMeter((cfgs[0].name, cfgs[1].name)))
     req = generate_dataset(rng, args.requests)
     for i in range(0, args.requests, 64):
         hy.serve(req.query[i:i + 64], req.query_mask[i:i + 64])
-    print(f"  cost advantage: {hy.meter.cost_advantage:.0%} "
-          f"({hy.meter.to_small}/{hy.meter.to_small + hy.meter.to_large} "
-          f"to {cfg_s.name})")
+
+    meter = hy.meter if isinstance(hy, ContinuousPoolEngine) \
+        else hy.meter.tiers
+    for name, row in meter.summary().items():
+        print(f"  {name:<16} {row['calls']:>5} calls  "
+              f"{row['gen_tokens']:>6} tokens")
+    # §2.3 against the all-priciest baseline: per-request and per-token
+    print(f"  cost advantage: {meter.cost_advantage:.0%} of calls, "
+          f"{meter.token_cost_advantage:.0%} of generated tokens "
+          f"off {cfgs[-1].name}")
 
 
 if __name__ == "__main__":

@@ -3,5 +3,6 @@ from .engine import (ContinuousEngine, ContinuousStats, Engine, ServeStats,
                      make_engine)
 from .cache import CacheStats, PagedKVCache
 from .scheduler import ContinuousScheduler, Request
+from .pool import ContinuousPoolEngine, PoolResult, build_fused_pool_step
 from .hybrid import (ContinuousHybridEngine, HybridEngine, HybridResult,
                      build_fused_hybrid_step)

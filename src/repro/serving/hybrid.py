@@ -1,4 +1,5 @@
-"""Hybrid two-model serving — the paper's deployment artifact.
+"""Hybrid two-model serving — the paper's deployment artifact, as thin
+two-tier facades over the K-tier pool (serving.pool).
 
 Two orchestration models, mirroring serving.engine's two execution models:
 
@@ -9,37 +10,35 @@ Two orchestration models, mirroring serving.engine's two execution models:
   away at the systems level. Kept for offline evaluation parity with the
   paper's tables.
 
-* ``ContinuousHybridEngine`` (continuous paged): the router is an
-  *admission-time classifier*. Each submitted query is scored once and
+* ``ContinuousHybridEngine`` (continuous paged): a facade over
+  ``ContinuousPoolEngine`` with a two-tier ``ThresholdPolicy`` — the router
+  is an *admission-time classifier*. Each submitted query is scored once and
   enqueued on the small or large ``ContinuousEngine``; both engines step
   independently, so small-model requests admit, decode, and retire while
   large-model requests are still in flight — no cross-engine barrier. This
-  is the paper's edge/cloud split (Fig. 2) as a serving system: in a real
-  deployment each engine is a separate device and ``step`` is its event
-  loop.
+  is the paper's edge/cloud split (Fig. 2) as a serving system. The facade
+  preserves the paper-era API (router/small/large, ``CostMeter``,
+  ``HybridResult`` with a boolean ``routed_small``) over the pool path.
 
-``build_fused_hybrid_step`` is the TPU-side artifact for the dry-run: ONE
-XLA program lowering router + small-model decode + large-model decode with a
-routing mask selecting per-query outputs. XLA needs static shapes, so both
-models run over the full batch and the mask selects — the dry-run uses this
-to prove the whole hybrid stack (router included) shards on the production
-mesh. Cost accounting on real hardware comes from the host-side engines,
-where the partition is physical, not masked.
+``build_fused_hybrid_step`` is the two-tier wrapper over
+``serving.pool.build_fused_pool_step`` — ONE XLA program lowering router +
+small-model decode + large-model decode with a routing mask selecting
+per-query outputs; the dry-run uses it to prove the whole hybrid stack
+(router included) shards on the production mesh.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.routing import CostMeter, HybridRouter
-from repro.models.encoder import RouterConfig, router_encode
+from repro.core.routing import CostMeter, HybridRouter, ThresholdPolicy
+from repro.models.encoder import RouterConfig
 from repro.models.model import ModelBundle
 from .engine import ContinuousEngine, Engine
+from .pool import ContinuousPoolEngine, build_fused_pool_step
 from .scheduler import Request
 
 
@@ -92,108 +91,64 @@ class HybridEngine:
 
 
 class ContinuousHybridEngine:
-    """Admission-time routed serving over two independently-stepping
-    continuous engines. The small stream never barriers on the large one."""
+    """Two-tier facade over ``ContinuousPoolEngine``: admission-time routed
+    serving over two independently-stepping continuous engines. The small
+    stream never barriers on the large one."""
 
     def __init__(self, router: HybridRouter, small: ContinuousEngine,
                  large: ContinuousEngine):
         self.router = router
         self.small = small
         self.large = large
-        # engines are typically built with the same default seed; distinct
-        # salts keep their temperature>0 sample streams uncorrelated
-        if small is not large and small._rng_salt == large._rng_salt:
-            large.set_rng_salt(large._rng_salt + 1)
-        self.meter = CostMeter()
-        self._routed: Dict[int, bool] = {}   # rid -> routed_small
+        self.pool = ContinuousPoolEngine(ThresholdPolicy(router),
+                                         [("small", small), ("large", large)])
+        # the paper-era meter is a live two-tier view of the pool's TierMeter
+        self.meter = CostMeter(self.pool.meter)
 
     def submit(self, query_tokens: np.ndarray, query_mask: np.ndarray,
                max_new_tokens: Optional[np.ndarray] = None,
                trim_padding: bool = True
                ) -> Tuple[List[Request], np.ndarray, np.ndarray]:
         """Score and enqueue a batch of queries. Returns (requests,
-        routed_small, scores); requests retire later via step()/run().
-
-        ``max_new_tokens``: optional per-request output caps (N,).
-        ``trim_padding``: drop each row's PAD tail (from ``query_mask``)
-        before enqueueing — paged prefill only pays for real tokens."""
-        scores = np.asarray(self.router.scores(jnp.asarray(query_tokens),
-                                               jnp.asarray(query_mask)))
-        to_small = scores >= self.router.threshold
-        reqs = []
-        for i, (row, small_bound) in enumerate(zip(query_tokens, to_small)):
-            eng = self.small if small_bound else self.large
-            if trim_padding:
-                # trim to one past the last true mask position — a mask with
-                # interior holes has sum() < that, and trimming to sum()
-                # would drop real prompt tokens
-                nz = np.flatnonzero(np.asarray(query_mask[i]))
-                row = row[:int(nz[-1]) + 1] if len(nz) else row[:1]
-            cap = int(max_new_tokens[i]) if max_new_tokens is not None else None
-            req = eng.submit(row, max_new_tokens=cap)
-            self._routed[req.rid] = bool(small_bound)
-            reqs.append(req)
-        return reqs, to_small, scores
-
-    def _account(self, retired: List[Request]):
-        for req in retired:
-            # pop: the registry must not grow for the life of the process
-            self.meter.record(np.array([self._routed.pop(req.rid)]),
-                              req.n_generated)
+        routed_small, scores); requests retire later via step()/run()."""
+        reqs, tier_idx, scores = self.pool.submit(query_tokens, query_mask,
+                                                  max_new_tokens,
+                                                  trim_padding)
+        return reqs, tier_idx == 0, scores
 
     def step(self) -> List[Request]:
         """Advance both engines by one decode step each (no cross-engine
         join). Returns the requests retired this step."""
-        retired = []
-        if self.small.sched.has_work:
-            retired.extend(self.small.step())
-        if self.large.sched.has_work:
-            retired.extend(self.large.step())
-        self._account(retired)
-        return retired
+        return self.pool.step()
 
     def run(self) -> List[Request]:
-        done = []
-        while self.small.sched.has_work or self.large.sched.has_work:
-            done.extend(self.step())
-        return done
+        return self.pool.run()
 
     def serve(self, query_tokens: np.ndarray, query_mask: np.ndarray,
               seed: int = 0) -> HybridResult:
         """Batch-API wrapper matching ``HybridEngine.serve``."""
-        self.small.reseed(seed)
-        self.large.reseed(seed)
-        reqs, to_small, scores = self.submit(query_tokens, query_mask)
-        self.run()
-        T = max(self.small.max_new_tokens, self.large.max_new_tokens)
-        N = len(reqs)
-        responses = np.zeros((N, T), np.int32)
-        lengths = np.zeros((N,), np.int32)
-        for i, req in enumerate(reqs):
-            lengths[i] = req.n_generated
-            responses[i, :req.n_generated] = req.out[:T]
-        return HybridResult(responses, lengths, to_small, scores)
+        res = self.pool.serve(query_tokens, query_mask, seed)
+        return HybridResult(res.responses, res.lengths, res.tier_idx == 0,
+                            res.scores)
 
 
 def build_fused_hybrid_step(router_cfg: RouterConfig, small: ModelBundle,
                             large: ModelBundle, threshold: float = 0.5):
-    """One-token hybrid decode step as a single lowerable program.
+    """One-token hybrid decode step as a single lowerable program — the
+    two-tier wrapper over ``build_fused_pool_step``.
 
     fn(router_params, small_params, large_params, router_tokens, router_mask,
        small_cache, large_cache, token) -> (logits, small_cache, large_cache,
        route_mask)
     """
+    pool_step = build_fused_pool_step(router_cfg, (small, large),
+                                      (threshold,))
 
     def step(router_params, small_params, large_params, router_tokens,
              router_mask, small_cache, large_cache, token):
-        score = jax.nn.sigmoid(router_encode(router_params, router_tokens,
-                                             router_mask, router_cfg))
-        to_small = score >= threshold                       # (B,)
-        ls, sc = small.decode_step(small_params, small_cache, token)
-        ll, lc = large.decode_step(large_params, large_cache, token)
-        # vocabs may differ in padding; align on the smaller padded width
-        V = min(ls.shape[-1], ll.shape[-1])
-        logits = jnp.where(to_small[:, None], ls[:, :V], ll[:, :V])
-        return logits, sc, lc, to_small
+        logits, (sc, lc), tier = pool_step(
+            router_params, (small_params, large_params), router_tokens,
+            router_mask, (small_cache, large_cache), token)
+        return logits, sc, lc, tier == 0
 
     return step

@@ -1,0 +1,217 @@
+"""Continuous model-pool serving: K tiers, one admission-time policy.
+
+``ContinuousPoolEngine`` orchestrates an ordered pool of named
+``ContinuousEngine``s (cheapest -> priciest) under a ``RoutingPolicy``
+(core.routing): each submitted query is scored once at admission and
+enqueued on the engine of its assigned tier; every engine steps
+independently, so a cheap tier's requests admit, decode, and retire while
+pricier tiers are still in flight — the paper's edge/cloud split (Fig. 2)
+generalized from one small/large pair to K tiers. In a real deployment each
+engine is a separate device (or device group) and ``step`` is its event
+loop.
+
+Cost accounting is a ``TierMeter`` (core.routing): per-tier calls and
+generated tokens, with calls- and token-weighted cost advantage against the
+all-priciest baseline. Engines built with the same default seed get
+decorrelated RNG salts at pool construction so temperature>0 tiers never
+draw the same sample stream.
+
+``build_fused_pool_step`` is the TPU-side artifact for the dry-run: ONE XLA
+program lowering router + all K tiers' decode steps with a tier-select mask
+choosing per-query logits. XLA needs static shapes, so every tier runs over
+the full batch and the mask selects — the dry-run uses this to prove the
+whole pool stack (router included) shards on the production mesh. Cost
+accounting on real hardware comes from the host-side engines, where the
+partition is physical, not masked.
+
+The two-tier special case keeps its paper-era API as thin facades in
+serving.hybrid (``ContinuousHybridEngine`` / ``build_fused_hybrid_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing import RoutingPolicy, TierMeter
+from repro.models.encoder import RouterConfig, router_encode
+from repro.models.model import ModelBundle
+from .engine import ContinuousEngine
+from .scheduler import Request
+
+Engines = Union[Mapping[str, ContinuousEngine],
+                Sequence[Tuple[str, ContinuousEngine]]]
+
+
+@dataclasses.dataclass
+class PoolResult:
+    """Batch-API result: responses/lengths row-aligned with the submitted
+    queries, ``tier_idx`` the policy's dispatch (0 = cheapest tier)."""
+    responses: np.ndarray   # (N, T)
+    lengths: np.ndarray     # (N,)
+    tier_idx: np.ndarray    # (N,) int
+    scores: np.ndarray      # (N,)
+
+
+class ContinuousPoolEngine:
+    """Admission-time policy-routed serving over K independently-stepping
+    continuous engines. No tier's stream ever barriers on another."""
+
+    def __init__(self, policy: RoutingPolicy, engines: Engines):
+        items = list(engines.items()) if isinstance(engines, Mapping) \
+            else list(engines)
+        if len(items) != policy.n_tiers:
+            raise ValueError(f"policy routes over {policy.n_tiers} tiers but "
+                             f"the pool has {len(items)} engines: "
+                             f"{[n for n, _ in items]}")
+        self.policy = policy
+        self.names: Tuple[str, ...] = tuple(n for n, _ in items)
+        self.engines: List[ContinuousEngine] = [e for _, e in items]
+        # engines are typically built with the same default seed; distinct
+        # salts keep their temperature>0 sample streams uncorrelated. Only
+        # distinct engine objects are bumped (a tier may legitimately alias
+        # another's engine in tests/toys).
+        seen_salts: set = set()
+        for eng in self._distinct_engines():
+            if eng._rng_salt in seen_salts:
+                eng.set_rng_salt(max(seen_salts) + 1)
+            seen_salts.add(eng._rng_salt)
+        self.meter = TierMeter(self.names)
+        self._tier_of: Dict[int, int] = {}   # rid -> tier idx
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.engines)
+
+    def engine(self, name: str) -> ContinuousEngine:
+        return self.engines[self.names.index(name)]
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.sched.has_work for e in self.engines)
+
+    # -------------------------------------------------------------- requests
+    def submit(self, query_tokens: np.ndarray, query_mask: np.ndarray,
+               max_new_tokens: Optional[np.ndarray] = None,
+               trim_padding: bool = True
+               ) -> Tuple[List[Request], np.ndarray, np.ndarray]:
+        """Score and enqueue a batch of queries. Returns (requests,
+        tier_idx, scores); requests retire later via step()/run().
+
+        ``max_new_tokens``: optional per-request output caps (N,).
+        ``trim_padding``: drop each row's PAD tail (from ``query_mask``)
+        before enqueueing — paged prefill only pays for real tokens."""
+        tier_idx, scores = self.policy.decide(query_tokens, query_mask)
+        tier_idx = np.asarray(tier_idx, np.int64)
+        if tier_idx.size and (tier_idx.min() < 0
+                              or tier_idx.max() >= self.n_tiers):
+            # fail at the call site: a negative index would silently wrap
+            # to the priciest engine and only crash at retire time
+            raise ValueError(f"policy returned tier indices outside "
+                             f"[0, {self.n_tiers}): {np.unique(tier_idx)}")
+        reqs = []
+        for i, (row, tier) in enumerate(zip(query_tokens, tier_idx)):
+            eng = self.engines[int(tier)]
+            if trim_padding:
+                # trim to one past the last true mask position — a mask with
+                # interior holes has sum() < that, and trimming to sum()
+                # would drop real prompt tokens
+                nz = np.flatnonzero(np.asarray(query_mask[i]))
+                row = row[:int(nz[-1]) + 1] if len(nz) else row[:1]
+            cap = int(max_new_tokens[i]) if max_new_tokens is not None else None
+            req = eng.submit(row, max_new_tokens=cap)
+            self._tier_of[req.rid] = int(tier)
+            reqs.append(req)
+        return reqs, tier_idx, scores
+
+    def _account(self, retired: List[Request]):
+        for req in retired:
+            # pop: the registry must not grow for the life of the process
+            self.meter.record(np.array([self._tier_of.pop(req.rid)]),
+                              req.n_generated)
+
+    def _distinct_engines(self) -> List[ContinuousEngine]:
+        """Engines deduped by identity, cheapest-tier-first: a tier may
+        alias another's engine, which must still step (and reseed) once."""
+        out: List[ContinuousEngine] = []
+        for eng in self.engines:
+            if not any(eng is e for e in out):
+                out.append(eng)
+        return out
+
+    def step(self) -> List[Request]:
+        """Advance every engine by one decode step each, cheapest first (no
+        cross-engine join). Returns the requests retired this step."""
+        retired: List[Request] = []
+        for eng in self._distinct_engines():
+            if eng.sched.has_work:
+                retired.extend(eng.step())
+        self._account(retired)
+        return retired
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        while self.has_work:
+            done.extend(self.step())
+        return done
+
+    # ----------------------------------------------------------- compat API
+    def serve(self, query_tokens: np.ndarray, query_mask: np.ndarray,
+              seed: int = 0) -> PoolResult:
+        """Batch-API wrapper: submit every row, drain, join the results."""
+        for eng in self._distinct_engines():
+            eng.reseed(seed)
+        reqs, tier_idx, scores = self.submit(query_tokens, query_mask)
+        self.run()
+        T = max(e.max_new_tokens for e in self.engines)
+        N = len(reqs)
+        responses = np.zeros((N, T), np.int32)
+        lengths = np.zeros((N,), np.int32)
+        for i, req in enumerate(reqs):
+            lengths[i] = req.n_generated
+            responses[i, :req.n_generated] = req.out[:T]
+        return PoolResult(responses, lengths, tier_idx, scores)
+
+
+def build_fused_pool_step(router_cfg: RouterConfig,
+                          bundles: Sequence[ModelBundle],
+                          thresholds: Sequence[float]):
+    """One-token K-tier decode step as a single lowerable program.
+
+    ``bundles`` are ordered cheapest -> priciest; ``thresholds`` are the K-1
+    non-increasing cascade gates (core.thresholds.cascade_thresholds).
+
+    fn(router_params, params_tuple, router_tokens, router_mask, caches_tuple,
+       token) -> (logits, caches_tuple, tier_idx)
+
+    Every tier decodes the full batch (XLA needs static shapes); the
+    tier-select mask picks each query's logits. Vocabs may differ in
+    padding, so logits align on the smallest padded width.
+    """
+    thresholds = tuple(float(t) for t in thresholds)
+    if len(thresholds) != len(bundles) - 1:
+        raise ValueError(f"{len(bundles)} tiers need {len(bundles) - 1} "
+                         f"cascade thresholds, got {len(thresholds)}")
+    if any(a < b for a, b in zip(thresholds, thresholds[1:])):
+        raise ValueError(f"cascade thresholds must be non-increasing: "
+                         f"{thresholds}")
+
+    def step(router_params, params, router_tokens, router_mask, caches,
+             token):
+        score = jax.nn.sigmoid(router_encode(router_params, router_tokens,
+                                             router_mask, router_cfg))
+        tier = jnp.zeros(score.shape, jnp.int32)                   # (B,)
+        for t in thresholds:
+            tier += (score < t).astype(jnp.int32)
+        outs = [b.decode_step(p, c, token)
+                for b, p, c in zip(bundles, params, caches)]
+        V = min(l.shape[-1] for l, _ in outs)
+        stacked = jnp.stack([l[:, :V] for l, _ in outs])           # (K, B, V)
+        logits = jnp.take_along_axis(stacked, tier[None, :, None],
+                                     axis=0)[0]
+        return logits, tuple(c for _, c in outs), tier
+
+    return step

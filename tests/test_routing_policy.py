@@ -1,0 +1,392 @@
+"""N-tier routing policies, tier metering, calibration frontier, and the
+two-tier facade contract: CascadePolicy + ContinuousPoolEngine must
+reproduce HybridRouter.route decisions, ContinuousHybridEngine greedy
+outputs, and CostMeter totals exactly."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CascadePolicy, CostMeter, HybridRouter,
+                        QualityTargetPolicy, RoutingPolicy, ThresholdPolicy,
+                        TierMeter, best_feasible, calibrate_threshold,
+                        calibration_frontier, cascade_thresholds,
+                        fit_quality_map)
+from repro.core.metrics import mixture_quality, perf_drop_pct
+from repro.data import tokenizer as tok
+from repro.models import RouterConfig, build_model, init_router_encoder
+from repro.serving import (ContinuousEngine, ContinuousHybridEngine,
+                           ContinuousPoolEngine, build_fused_hybrid_step,
+                           build_fused_pool_step)
+from conftest import tiny_cfg
+
+
+def _router(threshold):
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    params = init_router_encoder(jax.random.PRNGKey(0), rc)
+    return HybridRouter(params, rc, threshold)
+
+
+def _queries(n=12, l=10, seed=0):
+    q = np.random.default_rng(seed).integers(4, tok.VOCAB_SIZE,
+                                             (n, l)).astype(np.int32)
+    return q, np.ones_like(q, np.float32)
+
+
+# ----------------------------------------------------------------- policies
+def test_threshold_policy_matches_router_route():
+    q, mask = _queries()
+    r = _router(0.5)
+    scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    pol = ThresholdPolicy(r.with_threshold(float(np.median(scores))))
+    assert isinstance(pol, RoutingPolicy) and pol.n_tiers == 2
+    tier, s = pol.decide(q, mask)
+    np.testing.assert_allclose(s, scores, rtol=1e-6)
+    routed_small = np.asarray(pol.router.route(jnp.asarray(q),
+                                               jnp.asarray(mask)))
+    np.testing.assert_array_equal(tier == 0, routed_small)
+
+
+def test_cascade_two_tier_reduces_to_threshold_policy():
+    q, mask = _queries(seed=1)
+    r = _router(0.5)
+    scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    t = float(np.median(scores))
+    t2, _ = ThresholdPolicy(r.with_threshold(t)).decide(q, mask)
+    tc, _ = CascadePolicy(r, (t,)).decide(q, mask)
+    np.testing.assert_array_equal(t2, tc)
+
+
+def test_cascade_buckets_are_score_monotone():
+    q, mask = _queries(n=16, seed=2)
+    r = _router(0.5)
+    scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    lo, hi = float(np.quantile(scores, 1 / 3)), float(np.quantile(scores, 2 / 3))
+    pol = CascadePolicy(r, (hi, lo))
+    assert pol.n_tiers == 3
+    tier, s = pol.decide(q, mask)
+    assert set(np.unique(tier)) <= {0, 1, 2}
+    # a harder (lower-score) query never lands on a cheaper tier
+    order = np.argsort(-s)
+    assert (np.diff(tier[order]) >= 0).all()
+    with pytest.raises(ValueError):
+        CascadePolicy(r, (lo, hi))   # ascending thresholds
+    with pytest.raises(ValueError):
+        CascadePolicy(r, ())
+
+
+def test_quality_target_policy_dial():
+    q, mask = _queries(n=32, seed=3)
+    r = _router(0.5)
+    scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    rng = np.random.default_rng(0)
+    # tier quality grows with tier and with score
+    quals = [np.clip(scores[:, None] * 0.5 + k * 0.2
+                     + rng.normal(0, 0.01, (len(scores), 3)), 0, 2)
+             for k in range(3)]
+    pol = QualityTargetPolicy.fit(r, scores, quals, target=0.0)
+    assert pol.n_tiers == 3
+    tier_lo, _ = pol.decide(q, mask)
+    assert (tier_lo == 0).all()                  # everything clears tier 0
+    pol.set_target(10.0)
+    tier_hi, _ = pol.decide(q, mask)
+    assert (tier_hi == 2).all()                  # nothing clears: priciest
+    # tightening the target never sends a query cheaper
+    prev = np.zeros(len(q), np.int64)
+    for target in (0.1, 0.3, 0.5, 0.7):
+        pol.set_target(target)
+        tier, _ = pol.decide(q, mask)
+        assert (tier >= prev).all()
+        prev = tier
+
+
+def test_fit_quality_map_bins():
+    rng = np.random.default_rng(4)
+    scores = rng.uniform(size=500)
+    q = (scores[:, None] + rng.normal(0, 0.05, (500, 4))).astype(np.float32)
+    m = fit_quality_map(scores, q, n_bins=8)
+    assert (np.diff(m.bin_edges) > 0).all()
+    # calibrated map tracks the underlying monotone quality
+    assert (np.diff(m.quality) > -0.05).all()
+    preds = m(np.array([0.05, 0.95]))
+    assert preds[1] > preds[0]
+
+
+# ------------------------------------------------------------------- meters
+def test_tier_meter_accounting_and_advantages():
+    m = TierMeter(("tiny", "small", "large"))
+    m.record(np.array([0, 0, 1, 2, 2]), np.array([4, 6, 10, 3, 7]))
+    m.record(np.array([1]), gen_tokens=5)
+    assert list(m.calls) == [2, 2, 2] and m.total_calls == 6
+    assert list(m.tokens) == [10, 15, 10] and m.total_tokens == 35
+    assert abs(m.cost_advantage - 4 / 6) < 1e-9
+    assert abs(m.token_cost_advantage - 25 / 35) < 1e-9
+    assert m.summary()["small"] == {"calls": 2, "gen_tokens": 15}
+    with pytest.raises(ValueError):
+        m.record(np.array([3]), 1)
+    with pytest.raises(ValueError):
+        TierMeter(("only",))
+    with pytest.raises(ValueError):
+        TierMeter(("a", "a"))
+
+
+def test_cost_meter_is_two_tier_facade():
+    shared = TierMeter(("small", "large"))
+    c = CostMeter(shared)
+    c.record(np.array([True, False, False]), np.array([2, 3, 5]))
+    assert (c.to_small, c.to_large) == (1, 2)
+    assert (c.small_tokens, c.large_tokens) == (2, 8)
+    assert abs(c.cost_advantage - 1 / 3) < 1e-9
+    assert abs(c.token_cost_advantage - 0.2) < 1e-9
+    # live view: the wrapped meter sees the same totals
+    assert shared.total_calls == 3 and shared.cost_advantage == c.cost_advantage
+    with pytest.raises(ValueError):
+        CostMeter(TierMeter(("a", "b", "c")))
+
+
+# ------------------------------------------------------------- calibration
+def _cal_problem(rng, n=400):
+    gap = rng.normal(-0.3, 0.4, n)
+    scores = 1 / (1 + np.exp(-gap * 4))
+    q_large = rng.normal(0, 0.05, (n, 4)).astype(np.float32) - 1.0
+    q_small = (q_large + gap[:, None]).astype(np.float32)
+    return scores, q_small, q_large
+
+
+def test_calibrate_threshold_is_best_feasible_frontier_point(rng):
+    scores, qs, ql = _cal_problem(rng)
+    frontier = calibration_frontier(scores, qs, ql)
+    res = calibrate_threshold(scores, qs, ql, max_drop_pct=1.0)
+    assert res == best_feasible(frontier, 1.0)
+    # the frontier point really is that threshold's operating point
+    p = next(p for p in frontier if p.threshold == res.threshold)
+    assert p.cost_advantage == res.expected_cost_advantage
+    qm, ca = mixture_quality(scores, res.threshold, qs, ql)
+    assert abs(ca - res.expected_cost_advantage) < 1e-9
+    assert abs(perf_drop_pct(qm, float(ql.mean())) - res.expected_drop_pct) \
+        < 1e-9
+    # cost advantage is non-increasing along the ascending-threshold sweep
+    cas = [p.cost_advantage for p in frontier]
+    assert all(a >= b for a, b in zip(cas, cas[1:]))
+
+
+def test_cascade_infeasible_budget_closes_every_gate(rng):
+    """When no threshold is feasible, middle tiers must not absorb the
+    mass: all gates close and everything routes to the priciest tier."""
+    n = 100
+    scores = rng.uniform(size=n)
+    q_large = np.zeros((n, 2), np.float32)
+    q_small = np.full((n, 2), -10.0, np.float32)   # small model is terrible
+    frontier = calibration_frontier(scores, q_small, q_large)
+    ts = cascade_thresholds(frontier, 3, max_drop_pct=0.0)
+    assert ts[0] == ts[1] > scores.max()
+    tier = np.zeros(n, np.int64)
+    for t in ts:
+        tier += scores < t
+    assert (tier == 2).all()
+
+
+def test_cascade_thresholds_from_one_sweep(rng):
+    scores, qs, ql = _cal_problem(rng)
+    frontier = calibration_frontier(scores, qs, ql)
+    scalar = calibrate_threshold(scores, qs, ql, max_drop_pct=1.0)
+    ts2 = cascade_thresholds(frontier, 2, max_drop_pct=1.0)
+    assert ts2 == [scalar.threshold]             # K=2 reduces to the scalar
+    ts4 = cascade_thresholds(frontier, 4, max_drop_pct=1.0)
+    assert len(ts4) == 3 and ts4[0] == scalar.threshold
+    assert all(a >= b for a, b in zip(ts4, ts4[1:]))
+    pol = CascadePolicy.from_frontier(_router(0.5), frontier, 4,
+                                      max_drop_pct=1.0)
+    assert pol.thresholds == tuple(ts4)
+    with pytest.raises(ValueError):
+        cascade_thresholds(frontier, 1)
+
+
+# ------------------------------------------------------- pool serving + parity
+def _cont_engine(m, params, seed, **kw):
+    return ContinuousEngine(m, params, page_size=8, max_seq=32, **kw)
+
+
+def test_two_tier_facade_contract():
+    """CascadePolicy + ContinuousPoolEngine reproduce HybridRouter.route
+    decisions and ContinuousHybridEngine greedy outputs + meter totals
+    exactly on a fixed seed."""
+    cfg = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE)
+    m = build_model(cfg)
+    ps, pl_ = m.init(jax.random.PRNGKey(1)), m.init(jax.random.PRNGKey(2))
+    q, mask = _queries(n=10, l=8, seed=5)
+    base = _router(0.5)
+    scores = np.asarray(base.scores(jnp.asarray(q), jnp.asarray(mask)))
+    thr = float(np.median(scores))
+    router = base.with_threshold(thr)
+
+    def engines():
+        return (_cont_engine(m, ps, 1, max_new_tokens=6, n_slots=3),
+                _cont_engine(m, pl_, 2, max_new_tokens=6, n_slots=2))
+
+    hy = ContinuousHybridEngine(router, *engines())
+    res = hy.serve(q, mask, seed=0)
+    pool = ContinuousPoolEngine(CascadePolicy(router, (thr,)),
+                                list(zip(("small", "large"), engines())))
+    pres = pool.serve(q, mask, seed=0)
+
+    routed = np.asarray(router.route(jnp.asarray(q), jnp.asarray(mask)))
+    np.testing.assert_array_equal(res.routed_small, routed)
+    np.testing.assert_array_equal(pres.tier_idx == 0, routed)
+    # greedy outputs byte-identical across facade and cascade pool
+    np.testing.assert_array_equal(res.responses, pres.responses)
+    np.testing.assert_array_equal(res.lengths, pres.lengths)
+    # meter totals identical (facade CostMeter is a live TierMeter view)
+    assert hy.meter.to_small == pool.meter.summary()["small"]["calls"]
+    assert hy.meter.to_large == pool.meter.summary()["large"]["calls"]
+    assert hy.meter.small_tokens == pool.meter.summary()["small"]["gen_tokens"]
+    assert hy.meter.large_tokens == pool.meter.summary()["large"]["gen_tokens"]
+    assert hy.meter.cost_advantage == pool.meter.cost_advantage
+    assert hy.meter.token_cost_advantage == pool.meter.token_cost_advantage
+    assert hy.meter.to_small + hy.meter.to_large == len(q)
+    # the facade exposes the pool path underneath
+    assert hy.pool.names == ("small", "large")
+
+
+def test_pool_three_tiers_routes_and_meters():
+    cfg = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE)
+    m = build_model(cfg)
+    params = [m.init(jax.random.PRNGKey(s)) for s in (1, 2, 3)]
+    q, mask = _queries(n=12, l=8, seed=6)
+    r = _router(0.5)
+    scores = np.asarray(r.scores(jnp.asarray(q), jnp.asarray(mask)))
+    pol = CascadePolicy(r, (float(np.quantile(scores, 2 / 3)),
+                            float(np.quantile(scores, 1 / 3))))
+    engines = [(n, _cont_engine(m, p, i, max_new_tokens=4, n_slots=2))
+               for i, (n, p) in enumerate(zip(("tiny", "mid", "big"), params))]
+    pool = ContinuousPoolEngine(pol, engines)
+    res = pool.serve(q, mask, seed=0)
+    assert pool.meter.total_calls == len(q)
+    assert int(pool.meter.calls.sum()) == len(q)
+    np.testing.assert_array_equal(
+        pool.meter.calls, np.bincount(res.tier_idx, minlength=3))
+    assert (res.lengths >= 1).all()
+    assert pool.engine("mid") is engines[1][1]
+    # distinct RNG salts after pool construction (default seeds collide)
+    salts = [e._rng_salt for _, e in engines]
+    assert len(set(salts)) == 3
+    with pytest.raises(ValueError):   # policy/engine arity mismatch
+        ContinuousPoolEngine(pol, engines[:2])
+
+
+class _BadPolicy:
+    n_tiers = 2
+
+    def decide(self, tokens, mask):
+        n = len(tokens)
+        return np.full(n, -1, np.int64), np.zeros(n)
+
+
+def test_pool_rejects_out_of_range_tiers_and_dedups_aliased_engine():
+    cfg = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(1))
+    eng = _cont_engine(m, p, 1, max_new_tokens=3, n_slots=2)
+    q, mask = _queries(n=3, l=6, seed=7)
+    # a buggy policy's negative tier must fail at submit, not at retire
+    pool = ContinuousPoolEngine(_BadPolicy(),
+                                [("a", eng), ("b", eng)])
+    with pytest.raises(ValueError):
+        pool.submit(q, mask)
+    # a tier aliasing another's engine steps it once per pool step
+    r = _router(-1.0)                       # everything to tier 0
+    pool = ContinuousPoolEngine(ThresholdPolicy(r),
+                                [("a", eng), ("b", eng)])
+    reqs, _, _ = pool.submit(q, mask)
+    pool.step()
+    assert eng.stats.steps == 1             # stepped once, not per alias
+    pool.run()
+    assert pool.meter.total_calls == 3
+
+
+# ------------------------------------------------------- experiment wiring
+def test_pool_policy_from_experiment_vocabulary(rng):
+    """experiment.pool_policy speaks the TIERS vocabulary: cascade and
+    quality-target policies come out of one experiment's qualities."""
+    from repro.core.experiment import ExperimentData, TIER_ORDER, pool_policy
+    scores, qs, ql = _cal_problem(rng)
+    qm_ = ((qs + ql) / 2).astype(np.float32)
+    exp = ExperimentData(
+        datasets={}, lms={},
+        qualities={"tiny": {"val": qs}, "small": {"val": qm_},
+                   "large": {"val": ql}},
+        responses={}, resp_lengths={})
+    r = _router(0.5)
+    router_out = {"params": r.params, "rcfg": r.rcfg,
+                  "scores": {"val": scores}}
+    tiers = ("tiny", "small", "large")
+    assert all(t in TIER_ORDER for t in tiers)
+    cas = pool_policy(exp, router_out, tiers, kind="cascade",
+                      max_drop_pct=1.0)
+    assert isinstance(cas, CascadePolicy) and cas.n_tiers == 3
+    assert cas.router.threshold == cas.thresholds[0]
+    frontier = calibration_frontier(scores, qs, ql)
+    assert list(cas.thresholds) == cascade_thresholds(frontier, 3, 1.0)
+    qt = pool_policy(exp, router_out, tiers, kind="quality_target",
+                     quality_target=0.25)
+    assert isinstance(qt, QualityTargetPolicy) and qt.n_tiers == 3
+    assert qt.target == 0.25
+    with pytest.raises(ValueError):   # priciest -> cheapest is rejected
+        pool_policy(exp, router_out, ("large", "tiny"))
+    with pytest.raises(ValueError):
+        pool_policy(exp, router_out, tiers, kind="nope")
+
+
+# ------------------------------------------------------------ fused pool step
+def test_fused_pool_step_k3_lowers_and_runs():
+    cfgs = [tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE),
+            tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE, n_layers=3),
+            tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE, n_layers=4)]
+    ms = [build_model(c) for c in cfgs]
+    params = tuple(mm.init(jax.random.PRNGKey(i + 1)) for i, mm in enumerate(ms))
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    pr = init_router_encoder(jax.random.PRNGKey(0), rc)
+    step = build_fused_pool_step(rc, ms, thresholds=(0.6, 0.4))
+    B = 4
+    toks = jnp.zeros((B, 12), jnp.int32)
+    mask = jnp.ones((B, 12))
+    caches = tuple(mm.init_cache(B, 16) for mm in ms)
+    token = jnp.ones((B, 1), jnp.int32)
+    logits, caches2, tier = jax.jit(step)(pr, params, toks, mask, caches,
+                                          token)
+    assert logits.shape[0] == B and len(caches2) == 3
+    assert tier.shape == (B,) and bool((tier >= 0).all())
+    assert bool(jnp.isfinite(logits).all())
+    with pytest.raises(ValueError):
+        build_fused_pool_step(rc, ms, thresholds=(0.5,))
+    with pytest.raises(ValueError):
+        build_fused_pool_step(rc, ms, thresholds=(0.4, 0.6))
+
+
+def test_fused_hybrid_step_matches_pool_step():
+    """The two-tier wrapper selects exactly what the K-pool step selects."""
+    cfg_s = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE)
+    cfg_l = tiny_cfg("dense", vocab_size=tok.VOCAB_SIZE, n_layers=3)
+    ms, ml = build_model(cfg_s), build_model(cfg_l)
+    ps = ms.init(jax.random.PRNGKey(1))
+    pl_ = ml.init(jax.random.PRNGKey(2))
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    pr = init_router_encoder(jax.random.PRNGKey(0), rc)
+    B = 4
+    toks = jnp.zeros((B, 12), jnp.int32)
+    mask = jnp.ones((B, 12))
+    token = jnp.ones((B, 1), jnp.int32)
+
+    hstep = build_fused_hybrid_step(rc, ms, ml, threshold=0.5)
+    hl, _, _, routed = jax.jit(hstep)(pr, ps, pl_, toks, mask,
+                                      ms.init_cache(B, 16),
+                                      ml.init_cache(B, 16), token)
+    pstep = build_fused_pool_step(rc, (ms, ml), (0.5,))
+    plg, _, tier = jax.jit(pstep)(pr, (ps, pl_), toks, mask,
+                                  (ms.init_cache(B, 16),
+                                   ml.init_cache(B, 16)), token)
+    np.testing.assert_array_equal(np.asarray(hl), np.asarray(plg))
+    np.testing.assert_array_equal(np.asarray(routed), np.asarray(tier) == 0)
