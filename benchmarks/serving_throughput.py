@@ -31,15 +31,30 @@ tokens/s, TTFT, and KV high-water columns) — and reports:
                       slab (bucket x (prompt + max_new)) vs the paged pool's
                       high-water page count.
 
-Both engines are warmed up (jit compiles excluded from the timed stream).
+Two serving-hot-path rows ride along: ``long_context`` serves a stream of
+short live contexts on an engine provisioned for much longer prompts, with
+live-bounded vs full-static page walks — decode step time must track the
+live max context, not ``max_pages_per_slot``; ``heavy_admission`` floods the
+engine with multi-chunk prompts — packed prefill must launch ~one kernel
+per width bucket per step instead of one per PREFILLING slot. A
+``padding_parity`` flag asserts the dense, continuous, and pool serve paths
+agree on responses including tok.PAD tails.
+
+Both engines are warmed up (jit compiles excluded from the timed stream):
+the dense engine precompiles its buckets, and every continuous row replays
+its identical request stream once un-timed before the measured pass —
+packed prefill keys compiles on bucketed (batch, width, page-bound)
+triples, so replaying the deterministic schedule is the reliable warmup.
 
 Usage:
   PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
-      [--prefill-chunk W] [--out BENCH_serving.json]
+      [--prefill-chunk W] [--prefill-pack N] [--walk-bound live|static]
+      [--out BENCH_serving.json]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -48,7 +63,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.routing import CascadePolicy, HybridRouter
+from repro.core.routing import (CascadePolicy, HybridRouter,
+                                ThresholdPolicy)
 from repro.data import tokenizer as tok
 from repro.models import (RouterConfig, build_model, init_router_encoder)
 from repro.models.config import ArchConfig
@@ -158,45 +174,50 @@ def run_dense(bundle, params, stream, t_max: int, batch: int):
     }
 
 
-def _continuous(bundle, params, t_max, n_slots, prefill_chunk=None):
+def _continuous(bundle, params, t_max, n_slots, prefill_chunk=None,
+                prefill_pack=None, walk_bound="live"):
     # max_seq covers the longest prompt (48) + full output budget (32), so
     # no request context-caps and the dense comparison stays apples-to-apples
     return ContinuousEngine(bundle, params, max_new_tokens=t_max,
                             n_slots=n_slots, max_seq=96,
-                            prefill_chunk=prefill_chunk)
+                            prefill_chunk=prefill_chunk,
+                            prefill_pack=prefill_pack,
+                            walk_bound=walk_bound)
 
 
-def _warm_continuous(eng, rng, lens):
-    """Compile prefill/decode shapes outside the timed window. One-shot
-    prefill traces per distinct prompt length, so warm every length in the
-    stream; chunked prefill traces only per bucketed chunk width, so one
-    prompt per width suffices. max_new_tokens=2 so at least one decode step
-    runs (cap-1 requests retire at admission and would leave the decode jit
-    cold)."""
-    if eng.prefill_chunk:
-        warm_lens = {w for l in set(int(x) for x in lens)
-                     for w in eng.chunk_widths(l)}
-    else:
-        warm_lens = set(int(x) for x in lens)
-    for l in sorted(warm_lens):
-        eng.submit(rng.integers(4, tok.VOCAB_SIZE, (l,)).astype(np.int32),
-                   max_new_tokens=2)
-        eng.run()
+def _warm_then_timed(eng, prompts, caps):
+    """Run the identical stream twice through one engine: the first pass
+    traces every (batch, width, page-bound) shape the deterministic greedy
+    schedule will need — exhaustive shape prediction is impractical now
+    that packed prefill keys compiles on pack-batch and live-bound buckets
+    too — and the second pass is timed. Resets the cache high-water mark
+    between passes so the KV column reflects the timed stream. Returns
+    (reqs, per-pass stat deltas, wall, t0)."""
+    caps = [int(c) for c in caps]
+    for p_, c in zip(prompts, caps):
+        eng.submit(p_, max_new_tokens=c)
+    eng.run()
+    eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
+    pre = dataclasses.replace(eng.stats)
+    t0 = time.time()
+    reqs = [eng.submit(p_, max_new_tokens=c)
+            for p_, c in zip(prompts, caps)]
+    eng.run()
+    wall = time.time() - t0
+    delta = {f.name: getattr(eng.stats, f.name) - getattr(pre, f.name)
+             for f in dataclasses.fields(eng.stats)
+             if isinstance(getattr(eng.stats, f.name), int)}
+    return reqs, delta, wall, t0
 
 
 def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
-                   rng, prefill_chunk=None):
+                   rng, prefill_chunk=None, prefill_pack=None,
+                   walk_bound="live"):
     toks, lens, caps = stream
-    eng = _continuous(bundle, params, t_max, n_slots, prefill_chunk)
-    _warm_continuous(eng, rng, lens)
-    # drop the warmup's high-water mark so the metric reflects the timed
-    # stream only (the allocator's mark is monotone and never resets)
-    eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
-    t0 = time.time()
-    reqs = [eng.submit(toks[i, :lens[i]], max_new_tokens=int(caps[i]))
-            for i in range(len(toks))]
-    eng.run()
-    wall = time.time() - t0
+    eng = _continuous(bundle, params, t_max, n_slots, prefill_chunk,
+                      prefill_pack, walk_bound)
+    prompts = [toks[i, :lens[i]] for i in range(len(toks))]
+    reqs, delta, wall, t0 = _warm_then_timed(eng, prompts, caps)
     useful = sum(r.n_generated for r in reqs)
     latencies = [r.finish_t - t0 for r in reqs]
     return {
@@ -208,11 +229,27 @@ def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
         "tokens_per_s": round(useful / wall, 2),
         "kv_high_water_bytes": int(eng.cache.stats.high_water_pages
                                    * eng.cache.bytes_per_page),
-        "mean_slot_occupancy": round(eng.stats.mean_occupancy, 2),
-        "admission_stalls": eng.stats.admission_stalls,
+        # mean occupancy over ALL steps that did work — prefill-only steps
+        # included, so heavy admission no longer overstates the column.
+        # Step/chunk/dispatch counters are timed-pass deltas; the two
+        # *_compiles counters are engine-lifetime totals (warm pass
+        # included — compiles_timed is the in-window count, normally 0)
+        "mean_slot_occupancy": round(
+            delta["occupancy_sum"] / max(delta["steps"], 1), 2),
+        "steps": delta["steps"],
+        "decode_steps": delta["decode_steps"],
+        "prefill_only_steps": delta["prefill_only_steps"],
+        "admission_stalls": delta["admission_stalls"],
         "prefill_chunk": eng.prefill_chunk,
+        "prefill_pack": eng.prefill_pack,
+        "walk_bound": eng.walk_bound,
+        "prefill_chunks": delta["prefill_chunks"],
+        "prefill_dispatches": delta["prefill_dispatches"],
         "prefill_compiles": eng.stats.prefill_compiles,
-        "prefill_stalls": eng.stats.prefill_stalls,
+        "decode_compiles": eng.stats.decode_compiles,
+        "compiles_timed": delta["prefill_compiles"]
+        + delta["decode_compiles"],
+        "prefill_stalls": delta["prefill_stalls"],
         "finish_reasons": _finish_reasons(reqs),
         **_percentiles(latencies),
         **_streaming_metrics(reqs),
@@ -274,19 +311,26 @@ def run_hybrid_dense(bundles, stream, t_max, batch):
 
 
 def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng,
-                          prefill_chunk=None):
+                          prefill_chunk=None, prefill_pack=None,
+                          walk_bound="live"):
     (bs, ps_), (bl, pl_) = bundles
     toks, lens, caps = stream
     mask = (toks != tok.PAD).astype(np.float32)
     router = _median_router(toks, mask)
-    small = _continuous(bs, ps_, t_max, n_slots, prefill_chunk)
-    large = _continuous(bl, pl_, t_max, max(2, n_slots // 2), prefill_chunk)
-    _warm_continuous(small, rng, lens)
-    _warm_continuous(large, rng, lens)
+    small = _continuous(bs, ps_, t_max, n_slots, prefill_chunk,
+                        prefill_pack, walk_bound)
+    large = _continuous(bl, pl_, t_max, max(2, n_slots // 2), prefill_chunk,
+                        prefill_pack, walk_bound)
     router.scores(jnp.asarray(toks), jnp.asarray(mask))
-    for eng in (small, large):   # timed-stream high-water only (see above)
-        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
     hy = ContinuousHybridEngine(router, small, large)
+    # warm pass: the identical stream traces every shape the timed pass
+    # needs; the meter and high-water marks then reset so only the timed
+    # stream counts
+    hy.submit(toks, mask, max_new_tokens=caps)
+    hy.run()
+    for eng in (small, large):
+        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
+    hy.pool.meter.reset()
     t0 = time.time()
     reqs, to_small, _ = hy.submit(toks, mask, max_new_tokens=caps)
     hy.run()
@@ -325,7 +369,8 @@ def _tercile_cascade(q, mask):
 
 
 def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
-                        prefill_chunk=None):
+                        prefill_chunk=None, prefill_pack=None,
+                        walk_bound="live"):
     """3-tier cascade-routed pool: per-tier traffic, tokens/s, TTFT, and KV
     high-water, plus the calls-/token-weighted cost advantage vs routing
     everything to the priciest tier."""
@@ -334,13 +379,17 @@ def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
     policy = _tercile_cascade(toks, mask)
     names = ("small", "medium", "large")
     slot_counts = (n_slots, max(2, 3 * n_slots // 4), max(2, n_slots // 2))
-    engines = []
-    for (b, p), ns in zip(bundles, slot_counts):
-        eng = _continuous(b, p, t_max, ns, prefill_chunk)
-        _warm_continuous(eng, rng, lens)
-        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
-        engines.append(eng)
+    engines = [_continuous(b, p, t_max, ns, prefill_chunk, prefill_pack,
+                           walk_bound)
+               for (b, p), ns in zip(bundles, slot_counts)]
     pool = ContinuousPoolEngine(policy, list(zip(names, engines)))
+    # warm pass, then reset the meter and high-water marks so only the
+    # timed stream counts (see _warm_then_timed)
+    pool.submit(toks, mask, max_new_tokens=caps)
+    pool.run()
+    for eng in engines:
+        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
+    pool.meter.reset()
     t0 = time.time()
     reqs, tier_idx, _ = pool.submit(toks, mask, max_new_tokens=caps)
     pool.run()
@@ -379,6 +428,134 @@ def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
     }
 
 
+def run_long_context(bundle, params, rng, n, t_max, n_slots, smoke):
+    """Long-context row: the engine is provisioned for prompts far beyond
+    the stream's resident lengths (a wide static page table), while live
+    contexts stay within a couple of pages. The same greedy stream runs
+    with live-bounded and full-static page walks; the live decode step
+    should track the resident context, not ``max_pages_per_slot``."""
+    max_seq = 256 if smoke else 512
+    lens = rng.integers(6, 17, (n,))
+    prompts = [rng.integers(4, tok.VOCAB_SIZE, (l,)).astype(np.int32)
+               for l in lens]
+
+    def serve(walk_bound):
+        eng = ContinuousEngine(bundle, params, max_new_tokens=t_max,
+                               n_slots=n_slots, max_seq=max_seq,
+                               walk_bound=walk_bound)
+        reqs, delta, wall, t0 = _warm_then_timed(eng, prompts,
+                                                 [t_max] * len(prompts))
+        return reqs, eng, delta, wall, t0
+
+    reqs_l, live, d_live, wall_live, t0 = serve("live")
+    reqs_s, _, d_static, wall_static, _ = serve("static")
+    useful = sum(r.n_generated for r in reqs_l)
+    latencies = [r.finish_t - t0 for r in reqs_l]
+    return {
+        "engine": "continuous_paged",
+        "requests": n,
+        "max_seq": max_seq,
+        "max_pages_per_slot": live.cache.max_pages_per_slot,
+        # the widest live walk any decode dispatch actually took — the
+        # compute analogue of the KV high-water column
+        "decode_bound_pages": max(live._decode_bounds),
+        "kv_high_water_bytes": int(live.cache.stats.high_water_pages
+                                   * live.cache.bytes_per_page),
+        "useful_tokens": useful,
+        "wall_s": round(wall_live, 4),
+        "tokens_per_s": round(useful / wall_live, 2),
+        "step_ms_live": round(1e3 * wall_live
+                              / max(d_live["steps"], 1), 3),
+        "step_ms_static": round(1e3 * wall_static
+                                / max(d_static["steps"], 1), 3),
+        "live_step_speedup": round(wall_static / max(wall_live, 1e-9), 3),
+        "compiles_timed": d_live["decode_compiles"]
+        + d_live["prefill_compiles"],
+        "greedy_exact_vs_static": [r.out for r in reqs_l]
+        == [r.out for r in reqs_s],
+        **_percentiles(latencies),
+        **_streaming_metrics(reqs_l),
+    }
+
+
+def run_heavy_admission(bundle, params, rng, n, n_slots, smoke):
+    """Heavy-admission row: every request arrives at once with a multi-chunk
+    prompt and a tiny output budget, so the engine spends most steps with
+    many slots PREFILLING concurrently. Packed dispatch should launch ~one
+    prefill kernel per width bucket per step (O(width buckets)) instead of
+    one per PREFILLING slot (O(slots), the ``prefill_pack=0`` baseline)."""
+    chunk = 8 if smoke else 16
+    max_seq = 48 if smoke else 96
+    lens = rng.integers(3 * chunk, 5 * chunk + 1, (n,))
+    prompts = [rng.integers(4, tok.VOCAB_SIZE, (l,)).astype(np.int32)
+               for l in lens]
+
+    def serve(pack):
+        eng = ContinuousEngine(bundle, params, max_new_tokens=2,
+                               n_slots=n_slots, max_seq=max_seq,
+                               prefill_chunk=chunk, prefill_pack=pack)
+        reqs, delta, wall, t0 = _warm_then_timed(eng, prompts,
+                                                 [2] * len(prompts))
+        return reqs, eng, delta, wall, t0
+
+    reqs_p, packed, dp, wall_packed, t0 = serve(None)
+    reqs_u, _, du, wall_unpacked, _ = serve(0)
+    useful = sum(r.n_generated for r in reqs_p)
+    latencies = [r.finish_t - t0 for r in reqs_p]
+    widths = {w for l in set(int(x) for x in lens)
+              for w in packed.chunk_widths(l)}
+    return {
+        "engine": "continuous_paged",
+        "requests": n,
+        "prefill_chunk": chunk,
+        "prefill_pack": packed.prefill_pack,
+        "kv_high_water_bytes": int(packed.cache.stats.high_water_pages
+                                   * packed.cache.bytes_per_page),
+        "useful_tokens": useful,
+        "wall_s": round(wall_packed, 4),
+        "wall_s_unpacked": round(wall_unpacked, 4),
+        "tokens_per_s": round(useful / wall_packed, 2),
+        "prefill_chunks": dp["prefill_chunks"],
+        "prefill_dispatches": dp["prefill_dispatches"],
+        "prefill_dispatches_unpacked": du["prefill_dispatches"],
+        "prefill_steps": dp["prefill_steps"],
+        "prefill_width_buckets": len(widths),
+        "prefill_only_steps": dp["prefill_only_steps"],
+        "mean_slot_occupancy": round(
+            dp["occupancy_sum"] / max(dp["steps"], 1), 2),
+        "compiles_timed": dp["prefill_compiles"] + dp["decode_compiles"],
+        "greedy_exact_vs_per_slot": [r.out for r in reqs_p]
+        == [r.out for r in reqs_u],
+        **_percentiles(latencies),
+        **_streaming_metrics(reqs_p),
+    }
+
+
+def check_padding_parity(bundle, params, rng):
+    """Dense Engine.serve, ContinuousEngine.serve, and
+    ContinuousPoolEngine.serve must agree elementwise on greedy responses —
+    including the tok.PAD padding of every row's tail. Emitted into the
+    JSON so the CI smoke job asserts it without a separate harness."""
+    q = rng.integers(4, tok.VOCAB_SIZE, (4, 8)).astype(np.int32)
+    mask = np.ones_like(q, np.float32)
+    dense = Engine(bundle, params, max_new_tokens=4)
+    rd, ld = dense.serve(q)
+    ce = ContinuousEngine(bundle, params, max_new_tokens=4, n_slots=2,
+                          max_seq=32)
+    rc, _ = ce.serve(q)
+    c2 = ContinuousEngine(bundle, params, max_new_tokens=4, n_slots=2,
+                          max_seq=32)
+    router, _ = _toy_router(q, mask)
+    pool = ContinuousPoolEngine(ThresholdPolicy(router.with_threshold(-1.0)),
+                                [("a", c2), ("b", c2)])
+    res = pool.serve(q, mask)
+    return bool(np.array_equal(rd, rc)
+                and np.array_equal(rc, res.responses)
+                and np.array_equal(ld, res.lengths)
+                and all((res.responses[i, l:] == tok.PAD).all()
+                        for i, l in enumerate(res.lengths)))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -387,6 +564,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill width for the continuous engines "
                          "(0 = one-shot; default: the config's knob)")
+    ap.add_argument("--prefill-pack", type=int, default=None,
+                    help="max PREFILLING slots stacked per prefill kernel "
+                         "launch (0 = per-slot dispatch; default: n_slots)")
+    ap.add_argument("--walk-bound", choices=("live", "static"),
+                    default="live",
+                    help="bound paged kernels' page walks by the live max "
+                         "context (live) or the static table width (static)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: repo-root "
                          "BENCH_serving.json; --smoke defaults to no file)")
@@ -409,6 +593,8 @@ def main():
     results = {"config": {"requests": n, "t_max": t_max, "batch": batch,
                           "n_slots": n_slots, "smoke": args.smoke,
                           "prefill_chunk": args.prefill_chunk,
+                          "prefill_pack": args.prefill_pack,
+                          "walk_bound": args.walk_bound,
                           "small": cfg_s.name, "medium": cfg_m.name,
                           "large": cfg_l.name},
                "tiers": {}}
@@ -426,7 +612,8 @@ def main():
         print(f"== {tier} ==")
         d = run_dense(bundle, params, stream, t_max, batch)
         c = run_continuous(bundle, params, stream, t_max, n_slots,
-                           np.random.default_rng(7), args.prefill_chunk)
+                           np.random.default_rng(7), args.prefill_chunk,
+                           args.prefill_pack, args.walk_bound)
         results["tiers"][tier] = {"dense": d, "continuous": c}
         report("dense", d)
         report("continuous", c)
@@ -434,7 +621,8 @@ def main():
     print("== hybrid ==")
     d = run_hybrid_dense(bundles, stream, t_max, batch)
     c = run_hybrid_continuous(bundles, stream, t_max, n_slots,
-                              np.random.default_rng(7), args.prefill_chunk)
+                              np.random.default_rng(7), args.prefill_chunk,
+                              args.prefill_pack, args.walk_bound)
     results["tiers"]["hybrid"] = {"dense": d, "continuous": c}
     report("dense", d)
     report("continuous", c)
@@ -447,7 +635,8 @@ def main():
 
     print("== pool (3-tier cascade) ==")
     p = run_pool_continuous(pool_bundles, stream, t_max, n_slots,
-                            np.random.default_rng(7), args.prefill_chunk)
+                            np.random.default_rng(7), args.prefill_chunk,
+                            args.prefill_pack, args.walk_bound)
     results["pool"] = p
     report("pool", p)
     for name, row in p["per_tier"].items():
@@ -456,6 +645,33 @@ def main():
               f"{row['kv_high_water_bytes']}")
     print(f"pool: {p['cost_advantage']:.0%} of calls / "
           f"{p['token_cost_advantage']:.0%} of tokens off {cfg_l.name}")
+
+    print("== long context (live-bounded walks) ==")
+    lc = run_long_context(bundles[0][0], bundles[0][1],
+                          np.random.default_rng(11), n, t_max, n_slots,
+                          args.smoke)
+    results["long_context"] = lc
+    report("long-ctx", lc)
+    print(f"    step {lc['step_ms_live']}ms live vs "
+          f"{lc['step_ms_static']}ms static "
+          f"({lc['live_step_speedup']:.2f}x; widest live walk "
+          f"{lc['decode_bound_pages']} of {lc['max_pages_per_slot']} "
+          f"pages)")
+
+    print("== heavy admission (packed prefill) ==")
+    ha = run_heavy_admission(bundles[0][0], bundles[0][1],
+                             np.random.default_rng(13), n, n_slots,
+                             args.smoke)
+    results["heavy_admission"] = ha
+    report("heavy-adm", ha)
+    print(f"    {ha['prefill_dispatches']} packed dispatches for "
+          f"{ha['prefill_chunks']} slot-chunks over "
+          f"{ha['prefill_steps']} prefill steps "
+          f"(per-slot baseline: {ha['prefill_dispatches_unpacked']})")
+
+    results["padding_parity"] = check_padding_parity(
+        bundles[0][0], bundles[0][1], np.random.default_rng(19))
+    print(f"padding parity across serve paths: {results['padding_parity']}")
 
     out = args.out
     if out is None and not args.smoke:

@@ -257,6 +257,12 @@ class TierMeter:
         self.tokens += np.bincount(tier, weights=lens,
                                    minlength=self.n_tiers).astype(np.int64)
 
+    def reset(self):
+        """Zero the counters — e.g. after a warmup pass whose traffic must
+        not count toward a measured stream."""
+        self.calls[:] = 0
+        self.tokens[:] = 0
+
     @property
     def total_calls(self) -> int:
         return int(self.calls.sum())

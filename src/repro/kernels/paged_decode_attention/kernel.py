@@ -3,11 +3,13 @@
 Continuous-batching serving stores the KV cache as fixed-size *pages* drawn
 from a shared pool instead of one dense (B, max_seq) slab per request. Each
 request owns a page list (its row of the page table), so KV *memory* tracks
-the tokens actually resident, not the engine-wide ``max_seq``. Compute-wise
-this kernel still walks the full static page-table width per slot (pages
-past a request's length resolve to the reserved scratch page and are fully
-masked); bounding the sequential page dim by the live maximum is an open
-item (see ROADMAP).
+the tokens actually resident, not the engine-wide ``max_seq``. Compute
+tracks it too: ``pages_bound`` bounds the sequential page dim by the live
+maximum (ceil(max(seq_lens) / page_size), bucketed by the caller so compiles
+stay bounded) instead of gridding over the static page-table width; per-slot
+masking still handles ragged lengths within the bound, and pages past a
+request's length resolve to the reserved scratch page and are fully masked.
+``pages_bound=None`` keeps the full static walk (the parity baseline).
 
 This kernel extends the dense GQA decode kernel (kernels/decode_attention)
 with that gather: the page table and per-request sequence lengths arrive as
@@ -24,8 +26,9 @@ Layouts:
   k_pages  (P, ps, K, D)  shared page pool (P pages of ps tokens)
   v_pages  (P, ps, K, D)
   page_table (B, MP) int32; seq_lens (B,) int32
-Grid = (B, K, MP); (m, l, acc) accumulate in VMEM scratch across the
-sequential trailing page dim, exactly like the dense decode kernel.
+Grid = (B, K, pages_bound or MP); (m, l, acc) accumulate in VMEM scratch
+across the sequential trailing page dim, exactly like the dense decode
+kernel.
 """
 from __future__ import annotations
 
@@ -80,9 +83,14 @@ def _paged_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_decode_attention_gqa(q, k_pages, v_pages, page_table, seq_lens, *,
+                               pages_bound: int | None = None,
                                interpret: bool | None = None):
     """q: (B, K, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
     page_table: (B, MP) int32; seq_lens: (B,) int32.
+
+    ``pages_bound``: static bound on the sequential page walk — the caller
+    guarantees every seq_len fits in ``pages_bound`` pages (live-bounded
+    dispatch); None walks the full static page-table width.
 
     Returns (B, K, G, D). ``interpret=None`` auto-detects the backend.
     """
@@ -92,9 +100,11 @@ def paged_decode_attention_gqa(q, k_pages, v_pages, page_table, seq_lens, *,
     _, ps, Kk, Dk = k_pages.shape
     assert (Kk, Dk) == (K, D), (k_pages.shape, q.shape)
     MP = page_table.shape[1]
+    NP = MP if pages_bound is None else pages_bound
+    assert 1 <= NP <= MP, (pages_bound, MP)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, K, MP),
+        grid=(B, K, NP),
         in_specs=[
             pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, sl: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, D),

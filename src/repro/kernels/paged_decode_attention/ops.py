@@ -6,20 +6,24 @@ sequence lengths (B,). Regroups q to the kernel's (B, K, G, D) GQA layout.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from .kernel import paged_decode_attention_gqa
 
 
-@jax.jit
-def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens):
+@functools.partial(jax.jit, static_argnames=("pages_bound",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
+                           pages_bound=None):
     """q: (B, H, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
-    page_table: (B, MP); seq_lens: (B,). Returns (B, H, D)."""
+    page_table: (B, MP); seq_lens: (B,). ``pages_bound``: static live bound
+    on the page walk (None = full static width). Returns (B, H, D)."""
     B, H, D = q.shape
     K = k_pages.shape[2]
     G = H // K
     qg = q.reshape(B, K, G, D)  # heads are grouped per KV head (GQA order)
     out = paged_decode_attention_gqa(qg, k_pages, v_pages, page_table,
-                                     seq_lens)
+                                     seq_lens, pages_bound=pages_bound)
     return out.reshape(B, H, D)

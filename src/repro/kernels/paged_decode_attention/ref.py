@@ -12,11 +12,16 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
+                               pages_bound=None):
     """q: (B, K, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
-    page_table: (B, MP) int32; seq_lens: (B,) int32. Returns (B, K, G, D)."""
+    page_table: (B, MP) int32; seq_lens: (B,) int32. ``pages_bound``: static
+    live bound on the page walk (every seq_len must fit in that many pages);
+    None gathers the full table width. Returns (B, K, G, D)."""
     B, K, G, D = q.shape
     ps = k_pages.shape[1]
+    if pages_bound is not None:
+        page_table = page_table[:, :pages_bound]
     MP = page_table.shape[1]
     # (B, MP, ps, K, D) -> (B, K, MP*ps, D)
     k = jnp.moveaxis(k_pages[page_table], 3, 1).reshape(B, K, MP * ps, D)

@@ -27,8 +27,12 @@ Layouts:
   k_pages  (P, ps, K, D)    shared page pool (P pages of ps tokens)
   v_pages  (P, ps, K, D)
   page_table (B, MP) int32; start (B,) int32; total (B,) int32
-Grid = (B, K, MP); q is flattened to (B, K, C*G, D) rows (c-major) so each
-grid step is one (C*G, ps) score tile.
+Grid = (B, K, pages_bound or MP); q is flattened to (B, K, C*G, D) rows
+(c-major) so each grid step is one (C*G, ps) score tile. ``pages_bound``
+bounds the sequential page walk by the live maximum (ceil(max(total) /
+page_size), bucketed by the caller) so compute tracks the tokens actually
+resident, not the engine-wide static page-table width; ``pages_bound=None``
+keeps the full static walk (the parity baseline).
 """
 from __future__ import annotations
 
@@ -88,10 +92,15 @@ def _paged_prefill_kernel(pt_ref, st_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
-                                total, *, interpret: bool | None = None):
+                                total, *, pages_bound: int | None = None,
+                                interpret: bool | None = None):
     """q: (B, K, C, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
     page_table: (B, MP) int32; start/total: (B,) int32 (tokens resident
     before the chunk / after it: ``total = start + n_new``).
+
+    ``pages_bound``: static bound on the sequential page walk — the caller
+    guarantees every ``total`` fits in ``pages_bound`` pages (live-bounded
+    dispatch); None walks the full static page-table width.
 
     Returns (B, K, C, G, D). ``interpret=None`` auto-detects the backend.
     """
@@ -101,10 +110,12 @@ def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
     _, ps, Kk, Dk = k_pages.shape
     assert (Kk, Dk) == (K, D), (k_pages.shape, q.shape)
     MP = page_table.shape[1]
+    NP = MP if pages_bound is None else pages_bound
+    assert 1 <= NP <= MP, (pages_bound, MP)
     CG = C * G
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(B, K, MP),
+        grid=(B, K, NP),
         in_specs=[
             pl.BlockSpec((1, 1, CG, D),
                          lambda b, h, p, pt, st, tl: (b, h, 0, 0)),

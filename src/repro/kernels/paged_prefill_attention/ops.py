@@ -7,20 +7,24 @@ request), the shared page pool (P, ps, K, D), the request's page-table row(s)
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from .kernel import paged_prefill_attention_gqa
 
 
-@jax.jit
-def paged_prefill_attention(q, k_pages, v_pages, page_table, start, total):
+@functools.partial(jax.jit, static_argnames=("pages_bound",))
+def paged_prefill_attention(q, k_pages, v_pages, page_table, start, total,
+                            pages_bound=None):
     """q: (B, C, H, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
-    page_table: (B, MP); start/total: (B,). Returns (B, C, H, D)."""
+    page_table: (B, MP); start/total: (B,). ``pages_bound``: static live
+    bound on the page walk (None = full static width). Returns (B, C, H, D)."""
     B, C, H, D = q.shape
     K = k_pages.shape[2]
     G = H // K
     qg = jnp.transpose(q.reshape(B, C, K, G, D), (0, 2, 1, 3, 4))
     out = paged_prefill_attention_gqa(qg, k_pages, v_pages, page_table,
-                                      start, total)
+                                      start, total, pages_bound=pages_bound)
     return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, D)

@@ -16,12 +16,16 @@ NEG_INF = -1e30
 
 
 def paged_prefill_attention_ref(q, k_pages, v_pages, page_table, start,
-                                total):
+                                total, pages_bound=None):
     """q: (B, K, C, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
-    page_table: (B, MP) int32; start/total: (B,) int32.
+    page_table: (B, MP) int32; start/total: (B,) int32. ``pages_bound``:
+    static live bound on the page walk (every ``total`` must fit in that
+    many pages); None gathers the full table width.
     Returns (B, K, C, G, D)."""
     B, K, C, G, D = q.shape
     ps = k_pages.shape[1]
+    if pages_bound is not None:
+        page_table = page_table[:, :pages_bound]
     MP = page_table.shape[1]
     S = MP * ps
     # (B, MP, ps, K, D) -> (B, K, MP*ps, D)

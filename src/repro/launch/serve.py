@@ -135,6 +135,15 @@ def main():
                     help="chunked-prefill width for --continuous (tokens "
                          "admitted per chunk; 0 = one-shot prefill; "
                          "default: the architecture's prefill_chunk knob)")
+    ap.add_argument("--prefill-pack", type=int, default=None,
+                    help="max PREFILLING slots stacked into one prefill "
+                         "kernel launch for --continuous (0 = per-slot "
+                         "dispatch; default: n_slots)")
+    ap.add_argument("--walk-bound", choices=("live", "static"),
+                    default="live",
+                    help="bound the paged kernels' sequential page walk by "
+                         "the bucketed live max context (live, default) or "
+                         "walk the full static page-table width (static)")
     args = ap.parse_args()
 
     cfgs = resolve_tiers(args.arch, args.tiers)
@@ -208,7 +217,9 @@ def main():
                                                  cache_layout=layout))
         engines.append(make_engine(bundle, params, max_new_tokens=12,
                                    n_slots=8, max_seq=64,
-                                   prefill_chunk=args.prefill_chunk))
+                                   prefill_chunk=args.prefill_chunk,
+                                   prefill_pack=args.prefill_pack,
+                                   walk_bound=args.walk_bound))
     # K > 2 already guaranteed paged support before training
     continuous = all(isinstance(e, ContinuousEngine) for e in engines)
     if continuous:

@@ -241,14 +241,17 @@ def decode_attention(params, x_t, layer_k, layer_v, pos, cfg, *,
 
 
 def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
-                           seq_lens, active, cfg):
+                           seq_lens, active, cfg, pages_bound=None):
     """One decode step against a paged KV cache (continuous batching).
 
     x_t: (B, 1, D) — one new token per serving slot. k_pages/v_pages:
     (P, ps, K, Dh) shared pool; page_table: (B, MP); seq_lens: (B,) tokens
     already in each slot's cache (the new token lands at index seq_lens);
     active: (B,) bool — inactive slots write to the reserved scratch page 0
-    and their output is garbage the engine masks.
+    and their output is garbage the engine masks. ``pages_bound``: static
+    live bound on the kernel's page walk (the engine computes it from its
+    seq_lens snapshot; every active slot's context must fit); None = the
+    full static page-table width.
 
     Returns (out (B, 1, D), k_pages, v_pages). Requires uniform global
     attention (cfg.supports_paged_kv).
@@ -271,18 +274,18 @@ def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
         from repro.kernels.paged_decode_attention.kernel import \
             paged_decode_attention_gqa
         out = paged_decode_attention_gqa(qg, k_pages, v_pages, page_table,
-                                         lens)
+                                         lens, pages_bound=pages_bound)
     else:
         from repro.kernels.paged_decode_attention.ref import \
             paged_decode_attention_ref
         out = paged_decode_attention_ref(qg, k_pages, v_pages, page_table,
-                                         lens)
+                                         lens, pages_bound=pages_bound)
     out = out.reshape(B, 1, H, Dh)
     return _out_proj(params, out, B, 1, H, Dh), k_pages, v_pages
 
 
 def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
-                            n_new, cfg):
+                            n_new, cfg, pages_bound=None):
     """One chunked-prefill step against a paged KV cache.
 
     x: (B, C, D) — a fixed-width chunk of prompt activations per serving
@@ -295,7 +298,9 @@ def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
     Writes the chunk's K/V projections directly into the pool pages covering
     those positions (padding rows land on the reserved scratch page 0), then
     attends each chunk query causally to the resident context plus the
-    in-chunk keys via the paged prefill kernel. Returns
+    in-chunk keys via the paged prefill kernel. ``pages_bound``: static live
+    bound on the kernel's page walk (every ``start + n_new`` must fit); None
+    = the full static page-table width. Returns
     (out (B, C, D), k_pages, v_pages). Requires uniform global attention
     (cfg.supports_paged_kv).
     """
@@ -322,12 +327,14 @@ def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
         from repro.kernels.paged_prefill_attention.kernel import \
             paged_prefill_attention_gqa
         out = paged_prefill_attention_gqa(qg, k_pages, v_pages, page_table,
-                                          start, total)
+                                          start, total,
+                                          pages_bound=pages_bound)
     else:
         from repro.kernels.paged_prefill_attention.ref import \
             paged_prefill_attention_ref
         out = paged_prefill_attention_ref(qg, k_pages, v_pages, page_table,
-                                          start, total)
+                                          start, total,
+                                          pages_bound=pages_bound)
     out = jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, Dh)
     return _out_proj(params, out, B, C, H, Dh), k_pages, v_pages
 

@@ -208,7 +208,7 @@ def init_paged_decode_cache(cfg, num_pages: int, page_size: int):
 
 
 def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
-                                n_new, cfg):
+                                n_new, cfg, pages_bound=None):
     """One chunked-prefill step over the paged pool (continuous batching).
 
     tokens: (B, C) int32 — a fixed-width chunk of prompt tokens per serving
@@ -222,7 +222,8 @@ def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
     applied here: only the final chunk's logits are ever consumed (they
     sample the first generated token), and the vocab projection is the
     widest matmul in the step — the engine applies ``ModelBundle.lm_head``
-    host-side exactly once per prompt."""
+    host-side exactly once per prompt. ``pages_bound``: static live bound on
+    the attention page walk (None = full static width)."""
     B, C = tokens.shape
     x = embed(params["embed"], tokens)
 
@@ -231,7 +232,7 @@ def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
         h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
         o, kp, vp = attn.paged_prefill_attention(layer_p["attn"], h, kp, vp,
                                                  page_table, start, n_new,
-                                                 cfg)
+                                                 cfg, pages_bound)
         x = x + o
         h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
         if cfg.n_experts > 0:
@@ -249,12 +250,14 @@ def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
 
 
 def decoder_decode_step_paged(params, cache, token, page_table, seq_lens,
-                              active, cfg):
+                              active, cfg, pages_bound=None):
     """One continuous-batching decode step over the serving slots.
 
     token: (B, 1) int32 — per-slot next token; page_table (B, MP),
     seq_lens (B,) int32, active (B,) bool come from the engine's page
-    allocator. Returns (logits (B, V), cache with updated pools)."""
+    allocator; ``pages_bound`` is the engine's static live page bound (None
+    = full static width). Returns (logits (B, V), cache with updated
+    pools)."""
     x = embed(params["embed"], token)
 
     def body(x, xs):
@@ -262,7 +265,7 @@ def decoder_decode_step_paged(params, cache, token, page_table, seq_lens,
         h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
         o, kp, vp = attn.paged_decode_attention(layer_p["attn"], h, kp, vp,
                                                 page_table, seq_lens, active,
-                                                cfg)
+                                                cfg, pages_bound)
         x = x + o
         h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
         if cfg.n_experts > 0:

@@ -34,10 +34,12 @@ class ModelBundle:
     decode_step_paged: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
     # Chunked paged prefill: prefill_paged_chunk(params, cache, tokens,
-    # page_table, start, n_new) -> (x_last (B, 1, D), cache). Admits a
-    # prompt chunk-by-chunk so decode slots never stall on a long prompt;
-    # the LM head is applied separately (lm_head) so non-final chunks skip
-    # the vocab projection entirely.
+    # page_table, start, n_new, pages_bound=None) -> (x_last (B, 1, D),
+    # cache). Admits prompts chunk-by-chunk (possibly several slots stacked
+    # per call) so decode slots never stall on a long prompt; the LM head is
+    # applied separately (lm_head) so non-final chunks skip the vocab
+    # projection entirely. ``pages_bound`` (also on decode_step_paged) is
+    # the engine's static live bound on the attention page walk.
     prefill_paged_chunk: Optional[Callable] = None
     # lm_head(params, x (B, S, D)) -> logits (B, S, V)
     lm_head: Optional[Callable] = None
@@ -68,15 +70,19 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
     paged = {}
     if cfg.supports_paged_kv:
         paged = dict(
-            decode_step_paged=lambda p, c, t, page_table, seq_lens, active:
+            decode_step_paged=lambda p, c, t, page_table, seq_lens, active,
+                pages_bound=None:
                 decoder.decoder_decode_step_paged(p, c, t, page_table,
-                                                  seq_lens, active, cfg),
+                                                  seq_lens, active, cfg,
+                                                  pages_bound),
             init_paged_cache=lambda num_pages, page_size=None:
                 decoder.init_paged_decode_cache(
                     cfg, num_pages, page_size or cfg.kv_page_size),
-            prefill_paged_chunk=lambda p, c, t, page_table, start, n_new:
+            prefill_paged_chunk=lambda p, c, t, page_table, start, n_new,
+                pages_bound=None:
                 decoder.decoder_prefill_paged_chunk(p, c, t, page_table,
-                                                    start, n_new, cfg),
+                                                    start, n_new, cfg,
+                                                    pages_bound),
             lm_head=lambda p, x: decoder._unembed(p, x, cfg),
         )
     return ModelBundle(

@@ -115,6 +115,15 @@ class PagedKVCache:
         self._mark_usage()
         return np.asarray(pages, np.int32)
 
+    def extend_slots(self, slots, n_news):
+        """Batched ``extend_slot`` for packed multi-slot prefill: attempt
+        each (slot, n_new) extension independently, in order, with per-row
+        stall fallback — a row the pool can't satisfy gets None while the
+        rest proceed, so one slot's page stall never blocks its bucket.
+        Returns a list aligned with ``slots`` of fresh page-id arrays
+        (possibly empty) or None per stalled row."""
+        return [self.extend_slot(s, n) for s, n in zip(slots, n_news)]
+
     def ensure_append(self, slot: int, reserve: int = 0) -> bool:
         """Guarantee room for one more token in ``slot`` (the next decode
         step's write). Allocates a fresh page at a page boundary. Returns

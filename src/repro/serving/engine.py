@@ -30,17 +30,28 @@ each slot moves QUEUED -> PREFILLING -> DECODING -> DONE. One ``step()``::
   2. PREFILL  a per-step token budget (default: one chunk width per slot)
               is spent on PREFILLING slots in admission order, at most one
               chunk per slot per step — so a decode slot's inter-token gap
-              is bounded by single chunks, never a whole prompt. Each chunk
-              extends the
-              slot's pages (serving.cache.extend_slot), then runs the paged
-              prefill-attention kernel, which writes the chunk's K/V
-              straight into pool pages — no host-side scatter round-trip.
-              Chunk widths are bucketed (full chunks at ``prefill_chunk``,
-              the ragged tail padded to a power of two), so admission
-              compiles exactly one prefill shape per bucketed width, however
-              ragged the prompt lengths. When the last chunk lands, the
+              is bounded by single chunks, never a whole prompt. The budget
+              is charged at each chunk's *bucketed dispatch width* (the
+              shape actually launched — what per-step prefill latency
+              scales with), and a slot whose width exceeds the leftover
+              budget is skipped, not break-ed, so a ragged tail chunk later
+              in admission order that fits the leftover budget still runs
+              this step. The due chunks are page-extended in one batched
+              call (serving.cache.extend_slots, per-row stall fallback),
+              then *packed*: slots sharing a bucketed chunk width stack
+              into one (B_chunk, width) batch and launch ONE paged
+              prefill-attention kernel per (width, live-bound) bucket —
+              O(width buckets) dispatches per step instead of O(PREFILLING
+              slots) — which writes every chunk's K/V straight into pool
+              pages, no host-side scatter round-trip. Chunk widths are
+              bucketed (full chunks at ``prefill_chunk``, the ragged tail
+              padded to a power of two) and the packed batch is padded to a
+              power of two, so admission compiles one prefill shape per
+              bucketed (batch, width, page-bound) triple, however ragged
+              the prompt lengths. When a prompt's last chunk lands, the
               first token is sampled from its logits and the slot flips to
-              DECODING;
+              DECODING. ``prefill_pack=0`` restores the per-slot B=1
+              dispatch loop (the packed path's parity baseline);
   3. DECODE   every DECODING slot emits one token (paged decode kernel).
               Decode-time page growth also honours the prefill reservation,
               so a half-admitted prompt can never be stranded by decoders
@@ -53,10 +64,20 @@ each slot moves QUEUED -> PREFILLING -> DECODING -> DONE. One ``step()``::
   ``prefill_chunk=0`` selects the legacy one-shot path (whole prompt in one
   trace per distinct length, dense prefill + host-side page scatter).
 
+Live-bounded page walks (``walk_bound="live"``, the default): both the
+decode and prefill kernels take a static ``pages_bound`` on their sequential
+page dimension, computed each dispatch from the engine's ``cache.seq_lens``
+snapshot (ceil(live max / page_size), bucketed to powers of two so compiles
+stay O(log max_pages)) — attention compute tracks the tokens actually
+resident the same way paged memory already does, instead of walking the
+engine-wide static ``max_pages_per_slot`` width with masked scratch-page
+reads. ``walk_bound="static"`` restores the full-width walk (the parity
+baseline).
+
 ``Engine.stats`` exposes compile counts and padding waste so bucket
 recompiles show up in benchmarks; ``ContinuousEngine.stats`` + its cache
-stats expose occupancy, admission stalls, prefill compiles/stalls, and the
-KV high-water mark.
+stats expose occupancy, admission stalls, prefill chunk/dispatch/compile
+counts, decode bound compiles, and the KV high-water mark.
 """
 from __future__ import annotations
 
@@ -181,15 +202,26 @@ def make_engine(bundle: ModelBundle, params, **kw):
 # --------------------------------------------------------------- continuous
 @dataclasses.dataclass
 class ContinuousStats:
-    steps: int = 0
+    steps: int = 0               # steps that did any work (decode, prefill,
+                                 # admission, or retirement) — prefill-only
+                                 # steps count too, so occupancy and wall_s
+                                 # agree on the denominator
+    decode_steps: int = 0        # steps that dispatched a decode kernel
+    prefill_steps: int = 0       # steps that advanced at least one chunk
+    prefill_only_steps: int = 0  # steps that prefilled but decoded nothing
     admitted: int = 0
     retired: int = 0
     prefill_tokens: int = 0
     decode_tokens: int = 0
-    prefill_chunks: int = 0      # chunked-prefill steps executed
-    prefill_compiles: int = 0    # distinct bucketed chunk widths traced
+    prefill_chunks: int = 0      # slot-chunks advanced (one slot, one chunk)
+    prefill_dispatches: int = 0  # prefill kernel launches (packed: one per
+                                 # (batch, width, bound) bucket, <= chunks)
+    prefill_compiles: int = 0    # distinct (batch, width, bound) prefill
+                                 # shapes traced
+    decode_compiles: int = 0     # distinct live decode page bounds traced
     prefill_stalls: int = 0      # chunk extensions deferred for pool space
-    occupancy_sum: int = 0       # steppable slots summed over steps
+    occupancy_sum: int = 0       # busy slots (decoded + prefill-advanced)
+                                 # summed over steps
     admission_stalls: int = 0    # admissions deferred for page-pool space
     wall_s: float = 0.0
 
@@ -212,7 +244,9 @@ class ContinuousEngine:
                  page_size: Optional[int] = None, max_seq: int = 256,
                  num_pages: Optional[int] = None, seed: int = 0,
                  rng_salt: int = 0, prefill_chunk: Optional[int] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 prefill_pack: Optional[int] = None,
+                 walk_bound: str = "live"):
         if bundle.decode_step_paged is None:
             raise ValueError(f"{bundle.cfg.name}: no paged decode path "
                              "(ArchConfig.supports_paged_kv is False)")
@@ -246,7 +280,25 @@ class ContinuousEngine:
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget if prefill_budget is not None \
             else n_slots * prefill_chunk
-        self._chunk_widths: set = set()   # bucketed widths already traced
+        # packed prefill: up to prefill_pack PREFILLING slots stack into one
+        # kernel launch per bucketed chunk width (0 = legacy per-slot B=1
+        # dispatch, the packed path's parity baseline)
+        if prefill_pack is None:
+            prefill_pack = n_slots
+        if prefill_pack < 0:
+            raise ValueError(f"prefill_pack={prefill_pack}: packed prefill "
+                             "needs a non-negative pack size (0 disables "
+                             "packing)")
+        self.prefill_pack = prefill_pack
+        # live-bounded page walks: bound both kernels' sequential page dim
+        # by the bucketed live max context ("static" = full-width walk, the
+        # parity baseline)
+        if walk_bound not in ("live", "static"):
+            raise ValueError(f"walk_bound={walk_bound!r}: expected 'live' "
+                             "or 'static'")
+        self.walk_bound = walk_bound
+        self._chunk_shapes: set = set()   # (batch, width, bound) traced
+        self._decode_bounds: set = set()  # live decode page bounds traced
         self._next_in = np.full((n_slots,), tok.PAD, np.int32)
         self._seed = seed
         self._rng_salt = rng_salt
@@ -256,8 +308,9 @@ class ContinuousEngine:
         self._decode = self._build_decode()
         self._prefill_chunk_fn = self._build_prefill_chunk() \
             if self.prefill_chunk else None
-        # LM head applied once per prompt, on the final chunk's (1, 1, D)
-        # hidden state — a single width-independent trace, so non-final
+        # LM head applied once per dispatch whose pack finished a prompt,
+        # on the (B_pack, 1, D) final-chunk hidden states — one
+        # width-independent trace per pack-batch bucket, so non-final
         # chunks never pay the vocab projection
         self._lm_head = jax.jit(bundle.lm_head) if self.prefill_chunk \
             else None
@@ -269,31 +322,45 @@ class ContinuousEngine:
         bundle, temperature = self.bundle, self.temperature
 
         def fn(params, k_pages, v_pages, token, page_table, seq_lens, active,
-               key):
+               key, pages_bound):
             logits, cache = bundle.decode_step_paged(
                 params, {"k_pages": k_pages, "v_pages": v_pages}, token,
-                page_table, seq_lens, active)
+                page_table, seq_lens, active, pages_bound=pages_bound)
             nxt = _sample(key, logits, temperature)
             nxt = jnp.where(active, nxt, jnp.int32(tok.PAD))
             return nxt, cache["k_pages"], cache["v_pages"]
 
         # donate the pools: the step updates them in place instead of
         # copying the whole pool per decoded token (engine reassigns
-        # cache.pool from the outputs immediately)
-        return jax.jit(fn, donate_argnums=(1, 2))
+        # cache.pool from the outputs immediately). pages_bound is static:
+        # one trace per bucketed live bound
+        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(8,))
 
     def _build_prefill_chunk(self):
         bundle = self.bundle
 
-        def fn(params, k_pages, v_pages, tokens, page_table, start, n_new):
+        def fn(params, k_pages, v_pages, tokens, page_table, start, n_new,
+               pages_bound):
             x_last, cache = bundle.prefill_paged_chunk(
                 params, {"k_pages": k_pages, "v_pages": v_pages}, tokens,
-                page_table, start, n_new)
+                page_table, start, n_new, pages_bound=pages_bound)
             return x_last, cache["k_pages"], cache["v_pages"]
 
         # donated pools: the chunk's K/V are written into the pool pages in
-        # place — this is what retires the one-shot path's host _scatter
-        return jax.jit(fn, donate_argnums=(1, 2))
+        # place — this is what retires the one-shot path's host _scatter.
+        # pages_bound is static: one trace per bucketed live bound
+        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(7,))
+
+    def _pages_bound(self, max_tokens: int) -> int:
+        """Static page bound for a dispatch whose live contexts reach at
+        most ``max_tokens``: the live page count rounded up to a power of
+        two (distinct compiles stay O(log max_pages)), capped at the static
+        table width. ``walk_bound="static"`` always returns the full
+        width."""
+        mp = self.cache.max_pages_per_slot
+        if self.walk_bound != "live":
+            return mp
+        return min(_bucket(self.cache.pages_for(max(max_tokens, 1))), mp)
 
     @staticmethod
     def _scatter_impl(k_pool, v_pool, ks, vs, page_ids):
@@ -443,67 +510,124 @@ class ContinuousEngine:
             r -= min(r, w)
         return widths
 
-    def _run_prefill_chunk(self, req: Request,
-                           retired: List[Request]) -> int:
-        """Advance one bucketed chunk of ``req``'s prompt into the pool.
-        Returns the number of prompt tokens consumed (0 on a page stall)."""
-        slot = req.slot
-        remaining = len(req.tokens) - req.prefill_pos
-        width = self._chunk_width(remaining)
-        n_new = min(remaining, width)
-        if self.cache.extend_slot(slot, n_new) is None:
-            self.stats.prefill_stalls += 1
-            return 0
-        chunk = np.full((1, width), tok.PAD, np.int32)
-        chunk[0, :n_new] = req.tokens[req.prefill_pos:req.prefill_pos + n_new]
-        if width not in self._chunk_widths:
-            self._chunk_widths.add(width)
+    def _dispatch_prefill(self, group: List[tuple], width: int,
+                          retired: List[Request]) -> None:
+        """Launch ONE prefill kernel over the stacked chunks of ``group``
+        ((req, n_new) rows sharing the bucketed chunk ``width``), the batch
+        padded to a power of two so packed compiles stay bounded. Padding
+        rows carry n_new=0 and an all-zero page-table row, so their K/V
+        writes land on the reserved scratch page and their attention is
+        fully masked. The page walk is bounded by the group's live maximum
+        context (see _pages_bound)."""
+        B = _bucket(len(group))
+        mp = self.cache.max_pages_per_slot
+        chunk = np.full((B, width), tok.PAD, np.int32)
+        # np copies throughout: the allocator mutates the page table while
+        # the dispatched kernel may still be reading it (CPU zero-copy alias)
+        pt = np.zeros((B, mp), np.int32)
+        start = np.zeros((B,), np.int32)
+        n_new = np.zeros((B,), np.int32)
+        for i, (req, n) in enumerate(group):
+            chunk[i, :n] = req.tokens[req.prefill_pos:req.prefill_pos + n]
+            pt[i] = self.cache.page_table[req.slot]
+            start[i] = req.prefill_pos
+            n_new[i] = n
+        bound = self._pages_bound(int((start + n_new).max()))
+        if (B, width, bound) not in self._chunk_shapes:
+            self._chunk_shapes.add((B, width, bound))
             self.stats.prefill_compiles += 1
-        # jnp.array (copy): the allocator mutates the page table while the
-        # dispatched chunk may still be reading it (CPU zero-copy alias)
-        pt = jnp.array(self.cache.page_table[slot][None])
         x_last, kp, vp = self._prefill_chunk_fn(
             self.params, self.cache.pool["k_pages"],
-            self.cache.pool["v_pages"], jnp.asarray(chunk), pt,
-            jnp.asarray([req.prefill_pos], jnp.int32),
-            jnp.asarray([n_new], jnp.int32))
+            self.cache.pool["v_pages"], jnp.asarray(chunk), jnp.asarray(pt),
+            jnp.asarray(start), jnp.asarray(n_new), bound)
         self.cache.pool = {"k_pages": kp, "v_pages": vp}
-        req.prefill_pos += n_new
-        self.stats.prefill_tokens += n_new
-        self.stats.prefill_chunks += 1
-        if req.prefill_pos == len(req.tokens):
-            # only the final chunk pays the vocab projection: its logits
-            # sample the request's first generated token
+        self.stats.prefill_dispatches += 1
+        finishing = []
+        for i, (req, n) in enumerate(group):
+            req.prefill_pos += n
+            self.stats.prefill_tokens += n
+            self.stats.prefill_chunks += 1
+            if req.prefill_pos == len(req.tokens):
+                finishing.append((i, req))
+        if finishing:
+            # one vocab projection per dispatch, and only when a prompt
+            # finished: its row's logits sample that request's first token
             logits = self._lm_head(self.params, x_last)[:, 0]
-            req.state = DECODING
-            first = int(_sample(self._next_key(), logits,
-                                self.temperature)[0])
-            done = self._push_token(req, first)
-            if done is not None:
-                retired.append(done)
-        return n_new
+            for i, req in finishing:
+                req.state = DECODING
+                first = int(_sample(self._next_key(), logits[i:i + 1],
+                                    self.temperature)[0])
+                done = self._push_token(req, first)
+                if done is not None:
+                    retired.append(done)
 
-    def _prefill_step(self, retired: List[Request]) -> int:
+    def _prefill_step(self, retired: List[Request]) -> List[int]:
         """Advance each PREFILLING slot by AT MOST one chunk, in admission
-        order, until the step's token budget is spent (the first chunk
-        always runs, so a budget smaller than a chunk still progresses).
-        One chunk per slot per step is what bounds a decode slot's
-        inter-token gap to a single chunk's prefill — a greedy drain of one
-        prompt's chunks would recreate the one-shot stall the chunked path
-        exists to remove. Returns the chunks executed."""
+        order, within the step's token budget. One chunk per slot per step
+        is what bounds a decode slot's inter-token gap to a single chunk's
+        prefill — a greedy drain of one prompt's chunks would recreate the
+        one-shot stall the chunked path exists to remove. The due chunks
+        are page-extended in one batched call (per-row stall fallback: a
+        stalled row drops out of this step's pack, the rest proceed), then
+        dispatched packed — slots sharing a bucketed width stack into one
+        kernel launch of up to ``prefill_pack`` rows (``prefill_pack=0``
+        restores the per-slot B=1 loop). Returns the slots advanced."""
         budget = self.prefill_budget
-        chunks = 0
-        for slot in self.sched.prefilling_slots():
-            req = self.sched.running[slot]
-            n_next = min(len(req.tokens) - req.prefill_pos,
-                         self.prefill_chunk)
-            if chunks and budget < n_next:
-                break       # budget spent: rest waits for next step
-            n = self._run_prefill_chunk(req, retired)
-            if n:           # 0 = page stall: try later slots, retry later
-                budget -= n
-                chunks += 1
-        return chunks
+        ready: List[tuple] = []       # (req, n_new, width) advancing
+        advanced: List[int] = []      # their slots, captured pre-dispatch
+        pending = self.sched.prefilling_slots()
+        while pending:
+            cand: List[tuple] = []
+            cand_slots: List[int] = []
+            skipped: List[int] = []
+            for slot in pending:
+                req = self.sched.running[slot]
+                remaining = len(req.tokens) - req.prefill_pos
+                width = self._chunk_width(remaining)
+                # the budget is charged at the bucketed dispatch width —
+                # the shape actually launched, which is what per-step
+                # prefill latency scales with — not the unbucketed token
+                # count. The first chunk always runs (a budget under one
+                # chunk still progresses), and an over-budget slot is
+                # skipped rather than breaking the scan: a ragged tail
+                # chunk later in admission order that fits the leftover
+                # budget still runs this step
+                if (ready or cand) and budget < width:
+                    skipped.append(slot)
+                    continue
+                cand.append((req, min(remaining, width), width))
+                cand_slots.append(slot)
+                budget -= width
+            if not cand:
+                break
+            got = self.cache.extend_slots(cand_slots,
+                                          [n for _, n, _ in cand])
+            refunded = False
+            for slot, (req, n, width), pages in zip(cand_slots, cand, got):
+                if pages is None:     # page stall: row drops out, rest run
+                    self.stats.prefill_stalls += 1
+                    # the chunk never dispatches, so its budget goes back —
+                    # a slot skipped for budget above may fit after all
+                    budget += width
+                    refunded = True
+                else:
+                    ready.append((req, n, width))
+                    advanced.append(slot)
+            pending = skipped if refunded else []
+        if not ready:
+            return advanced
+        if self.prefill_pack == 0:    # legacy per-slot dispatch (B=1)
+            for req, n, width in ready:
+                self._dispatch_prefill([(req, n)], width, retired)
+        else:
+            by_width: Dict[int, List[tuple]] = {}
+            for req, n, width in ready:
+                by_width.setdefault(width, []).append((req, n))
+            for width, rows in by_width.items():
+                for i in range(0, len(rows), self.prefill_pack):
+                    self._dispatch_prefill(rows[i:i + self.prefill_pack],
+                                           width, retired)
+        return advanced
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[Request]:
@@ -513,8 +637,10 @@ class ContinuousEngine:
         t0 = time.time()
         retired: List[Request] = []
         progressed = self._admit(retired)
+        prefilled: List[int] = []
         if self.prefill_chunk:
-            progressed += self._prefill_step(retired)
+            prefilled = self._prefill_step(retired)
+            progressed += len(prefilled)
         cap = self.cache.max_pages_per_slot * self.cache.page_size
         # decode growth must not eat pages promised to mid-prefill slots
         reserve = self._reserved_prefill_pages() if self.prefill_chunk else 0
@@ -528,13 +654,23 @@ class ContinuousEngine:
             active = np.zeros((self.n_slots,), bool)
             active[steppable] = True
             pt, sl = self.cache.device_tables()
+            # live walk bound: every steppable slot's context — including
+            # the token this step writes — fits in ``bound`` pages, so the
+            # decode kernel's page walk scales with the live max context,
+            # not the engine-wide static table width. Inactive slots may
+            # exceed the bound; their output is garbage the step masks
+            bound = self._pages_bound(
+                int(self.cache.seq_lens[steppable].max()) + 1)
+            if bound not in self._decode_bounds:
+                self._decode_bounds.add(bound)
+                self.stats.decode_compiles += 1
             # jnp.array (copy): _next_in is mutated below while the
             # dispatched step may still be reading it (CPU zero-copy alias)
             nxt, kp, vp = self._decode(
                 self.params, self.cache.pool["k_pages"],
                 self.cache.pool["v_pages"],
                 jnp.array(self._next_in[:, None]), pt, sl,
-                jnp.asarray(active), self._next_key())
+                jnp.asarray(active), self._next_key(), bound)
             self.cache.pool = {"k_pages": kp, "v_pages": vp}
             self.cache.seq_lens[steppable] += 1
             nxt = np.asarray(nxt)
@@ -544,8 +680,7 @@ class ContinuousEngine:
                                         int(nxt[slot]))
                 if done is not None:
                     retired.append(done)
-            self.stats.steps += 1
-            self.stats.occupancy_sum += len(steppable)
+            self.stats.decode_steps += 1
         elif not progressed and not retired \
                 and (self.sched.running or self.sched.pending):
             # nothing decoded, no prefill advanced, nothing admitted or
@@ -555,6 +690,17 @@ class ContinuousEngine:
             raise RuntimeError(
                 "page pool deadlock: no slot could step and no request "
                 "could admit or retire; provision more pages")
+        if steppable or progressed or retired:
+            # prefill-only steps count too: they accrue wall_s, so leaving
+            # them out of ``steps`` would overstate mean occupancy under
+            # heavy admission. Union, not sum: a slot whose final chunk
+            # landed this step decodes this same step and is busy once
+            self.stats.steps += 1
+            self.stats.occupancy_sum += len(set(steppable) | set(prefilled))
+            if prefilled:
+                self.stats.prefill_steps += 1
+                if not steppable:
+                    self.stats.prefill_only_steps += 1
         self.stats.wall_s += time.time() - t0
         return retired
 

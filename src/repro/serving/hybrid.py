@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.routing import CostMeter, HybridRouter, ThresholdPolicy
+from repro.data import tokenizer as tok
 from repro.models.encoder import RouterConfig
 from repro.models.model import ModelBundle
 from .engine import ContinuousEngine, Engine
@@ -68,7 +69,10 @@ class HybridEngine:
         # the partitions may run different output budgets
         T = max(self.small.max_new_tokens, self.large.max_new_tokens)
         N = len(query_tokens)
-        responses = np.zeros((N, T), np.int32)
+        # PAD, not zeros: a partition serving a smaller output budget than T
+        # would otherwise leave a 0-tail that disagrees with every other
+        # serve path whenever PAD != 0
+        responses = np.full((N, T), tok.PAD, np.int32)
         lengths = np.zeros((N,), np.int32)
         # distinct per-partition, per-call sampling seeds: reusing ``seed``
         # verbatim would draw the same sample stream on both partitions and

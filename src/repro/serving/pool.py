@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.routing import RoutingPolicy, TierMeter
+from repro.data import tokenizer as tok
 from repro.models.encoder import RouterConfig, router_encode
 from repro.models.model import ModelBundle
 from .engine import ContinuousEngine
@@ -168,7 +169,10 @@ class ContinuousPoolEngine:
         self.run()
         T = max(e.max_new_tokens for e in self.engines)
         N = len(reqs)
-        responses = np.zeros((N, T), np.int32)
+        # PAD, not zeros: every other serve path (Engine.serve,
+        # ContinuousEngine.serve) pads response tails with tok.PAD, and the
+        # two only coincide when PAD happens to be 0
+        responses = np.full((N, T), tok.PAD, np.int32)
         lengths = np.zeros((N,), np.int32)
         for i, req in enumerate(reqs):
             lengths[i] = req.n_generated

@@ -97,6 +97,31 @@ def test_paged_prefill_ref_matches_dense_causal_oracle():
                                rtol=3e-5, atol=3e-5)
 
 
+def test_paged_prefill_live_bound_matches_full_walk():
+    """A pages_bound covering every row's total must reproduce the full
+    static page walk exactly, kernel and ref."""
+    rng = np.random.default_rng(13)
+    B, K, G, D, ps, MP, C = 3, 2, 2, 32, 8, 6, 4
+    bound = 3
+    total = rng.integers(1, bound * ps + 1, (B,))
+    n_new = np.minimum(total, rng.integers(1, C + 1, (B,)))
+    start = jnp.asarray(total - n_new, jnp.int32)
+    total = jnp.asarray(total, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, K, C, G, D)), jnp.float32) \
+        * (D ** -0.5)
+    kp, vp, pt = _make_paged(rng, B, K, D, ps, MP, np.asarray(total))
+    full = paged_prefill_attention_gqa(q, kp, vp, pt, start, total,
+                                       interpret=True)
+    bk = paged_prefill_attention_gqa(q, kp, vp, pt, start, total,
+                                     pages_bound=bound, interpret=True)
+    br = paged_prefill_attention_ref(q, kp, vp, pt, start, total,
+                                     pages_bound=bound)
+    np.testing.assert_allclose(np.asarray(bk), np.asarray(full),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(br), np.asarray(full),
+                               rtol=3e-5, atol=3e-5)
+
+
 def test_paged_prefill_ops_layout():
     """Model entry: q (B, C, H, D) regrouped to GQA, H = K * G."""
     from repro.kernels.paged_prefill_attention import ops as ppa_ops
@@ -146,12 +171,14 @@ def test_chunked_matches_oneshot_greedy(chunk):
 
 
 def test_chunk_compiles_one_per_bucketed_width():
-    """Ragged admission traces exactly one prefill shape per bucketed chunk
-    width — resubmitting any mix of lengths adds no compiles."""
+    """Legacy per-slot static-walk admission traces exactly one prefill
+    shape per bucketed chunk width — resubmitting any mix of lengths adds
+    no compiles."""
     cfg, m, p = _bundle()
     W = 8
     ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=2, page_size=8,
-                          max_seq=64, prefill_chunk=W)
+                          max_seq=64, prefill_chunk=W, prefill_pack=0,
+                          walk_bound="static")
     rng = np.random.default_rng(1)
     lens = [3, 8, 11, 16, 20, 2, 7]
 
@@ -176,6 +203,40 @@ def test_chunk_compiles_one_per_bucketed_width():
         ce.submit(rng.integers(4, cfg.vocab_size, (l,)).astype(np.int32))
     ce.run()
     assert ce.stats.prefill_compiles == len(widths)
+
+
+def test_packed_live_compiles_stay_bounded():
+    """Packed + live-bounded admission traces one shape per bucketed
+    (batch, width, page-bound) triple — every axis drawn from a power-of-two
+    bucket set — and resubmitting the same lengths adds no compiles."""
+    cfg, m, p = _bundle()
+    W, n_slots = 8, 4
+    ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=n_slots,
+                          page_size=8, max_seq=64, prefill_chunk=W)
+    rng = np.random.default_rng(1)
+    lens = [3, 8, 11, 16, 20, 2, 7]
+    for l in lens:
+        ce.submit(rng.integers(4, cfg.vocab_size, (l,)).astype(np.int32))
+    ce.run()
+    compiles = ce.stats.prefill_compiles
+
+    def log2ceil(n):
+        b, c = 1, 1
+        while b < n:
+            b *= 2
+            c += 1
+        return c
+
+    # each compile key is a (batch-bucket, width-bucket, bound-bucket)
+    # triple; the bucket sets bound the worst case
+    widths = {w for l in lens for w in ce.chunk_widths(l)}
+    max_bounds = log2ceil(ce.cache.max_pages_per_slot)
+    assert compiles <= log2ceil(n_slots) * len(widths) * max_bounds
+    assert ce.stats.decode_compiles <= max_bounds
+    for l in lens:        # same lengths, same order: nothing retraces
+        ce.submit(rng.integers(4, cfg.vocab_size, (l,)).astype(np.int32))
+    ce.run()
+    assert ce.stats.prefill_compiles == compiles
 
 
 def test_decode_progresses_while_long_prompt_prefills():
@@ -233,6 +294,181 @@ def test_prefill_reservation_prevents_midprompt_starvation():
     ce.run()
     assert r1.done and r2.done
     assert ce.stats.prefill_stalls == 0     # reservation kept its promise
+
+
+# ------------------------------------------------- packed / bounded parity
+@pytest.mark.parametrize("pack,bound", [(None, "static"), (0, "live"),
+                                        (None, "live")])
+def test_packed_and_bounded_match_legacy_greedy(pack, bound):
+    """The tentpole parity: batched-packed prefill and live-bounded page
+    walks must reproduce the legacy per-slot / full-static-walk path
+    greedy-exactly, across ragged prompt lengths, mid-stream retirement
+    (ragged per-request caps through fewer slots than requests), and
+    admission waves through a tight pool."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(8)
+    lens = (3, 24, 1, 17, 9, 12, 5, 20)
+    caps = (2, 8, 4, 8, 1, 6, 8, 3)
+    prompts = [rng.integers(4, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in lens]
+
+    def serve(prefill_pack, walk_bound):
+        ce = ContinuousEngine(m, p, max_new_tokens=8, n_slots=3, page_size=8,
+                              max_seq=64, num_pages=12, prefill_chunk=8,
+                              prefill_pack=prefill_pack,
+                              walk_bound=walk_bound)
+        reqs = [ce.submit(t, max_new_tokens=c)
+                for t, c in zip(prompts, caps)]
+        ce.run()
+        return [r.out for r in reqs], ce
+
+    base, legacy = serve(0, "static")       # the pre-tentpole path
+    out, ce = serve(pack, bound)
+    assert out == base
+    assert ce.stats.prefill_tokens == legacy.stats.prefill_tokens
+    assert ce.cache.stats.pages_in_use == 0
+
+
+def test_packed_prefill_amortizes_dispatches():
+    """Heavy admission: concurrently PREFILLING slots sharing a bucketed
+    chunk width advance through ONE kernel launch per step, not one per
+    slot — prefill dispatches drop from O(slots) to O(width buckets)."""
+    cfg, m, p = _bundle()
+    ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=4, page_size=8,
+                          max_seq=64, prefill_chunk=8)
+    rng = np.random.default_rng(9)
+    reqs = [ce.submit(rng.integers(4, cfg.vocab_size, (32,))
+                      .astype(np.int32)) for _ in range(4)]
+    ce.run()
+    assert all(r.done for r in reqs)
+    st = ce.stats
+    assert st.prefill_chunks == 16               # 4 slots x 4 chunks each
+    assert st.prefill_dispatches == 4            # one per step, all packed
+    assert st.prefill_steps == 4
+    assert st.prefill_dispatches < st.prefill_chunks
+
+
+def test_extend_slots_per_row_stall_fallback():
+    """Batched page extension: a row the pool can't satisfy returns None
+    while later rows still get their pages — one slot's stall never blocks
+    the bucket."""
+    _, m, _ = _bundle()
+    c = PagedKVCache(m, n_slots=3, num_pages=4, page_size=4,
+                     max_pages_per_slot=3)
+    got = c.extend_slots([0, 1, 2], [8, 8, 4])   # needs 2+2+1, only 3 free
+    assert got[0] is not None and len(got[0]) == 2
+    assert got[1] is None                        # 1 page left < 2 needed
+    assert got[2] is not None and len(got[2]) == 1
+    assert c.stats.oom_denials == 1
+    assert int(c.seq_lens[1]) == 0               # stalled row untouched
+
+
+def test_packed_prefill_stall_defers_row_only():
+    """Engine-level per-row fallback: when the pool can only extend one of
+    two mid-prefill slots, the other defers a step instead of blocking the
+    whole pack, and both complete once pages free up."""
+    cfg, m, p = _bundle()
+    ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=2, page_size=8,
+                          max_seq=64, prefill_chunk=8, prefill_budget=16)
+    rng = np.random.default_rng(10)
+    r1 = ce.submit(rng.integers(4, cfg.vocab_size, (24,)).astype(np.int32))
+    r2 = ce.submit(rng.integers(4, cfg.vocab_size, (24,)).astype(np.int32))
+    ce.step()                      # both admitted, first chunks in
+    assert r1.prefill_pos == 8 and r2.prefill_pos == 8
+    stolen = [ce.cache._free.pop()
+              for _ in range(len(ce.cache._free) - 1)]
+    ce.step()                      # one page left: r1 extends, r2 stalls
+    assert r1.prefill_pos == 16 and r2.prefill_pos == 8
+    assert ce.stats.prefill_stalls == 1
+    ce.cache._free.extend(stolen)
+    ce.run()
+    assert r1.done and r2.done
+
+
+def test_budget_admits_fitting_tail_chunk_same_step():
+    """Satellite: the step budget is charged at the bucketed dispatch width
+    and over-budget slots are skipped, not break-ed — a non-power-of-two
+    ragged tail later in admission order that fits the leftover budget runs
+    the same step instead of starving behind a bigger chunk."""
+    cfg, m, p = _bundle()
+    ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=3, page_size=8,
+                          max_seq=64, prefill_chunk=8, prefill_budget=12)
+    rng = np.random.default_rng(11)
+    a = ce.submit(rng.integers(4, cfg.vocab_size, (32,)).astype(np.int32))
+    b = ce.submit(rng.integers(4, cfg.vocab_size, (24,)).astype(np.int32))
+    c = ce.submit(rng.integers(4, cfg.vocab_size, (3,)).astype(np.int32))
+    ce.step()
+    # budget 12: a's chunk spends 8; b's width-8 chunk exceeds the leftover
+    # 4 and is skipped; c's 3-token tail buckets to width 4 and fits — it
+    # must run this step, not wait behind b
+    assert a.prefill_pos == 8
+    assert b.prefill_pos == 0
+    assert c.prefill_pos == 3       # tail prefilled same step
+    ce.run()
+    assert a.done and b.done and c.done
+
+
+def test_final_chunk_slot_not_double_counted_in_occupancy():
+    """A slot whose final chunk lands this step flips to DECODING and
+    decodes this same step — it is busy once, not twice, so mean occupancy
+    can never exceed the slot count."""
+    cfg, m, p = _bundle()
+    ce = ContinuousEngine(m, p, max_new_tokens=4, n_slots=1, page_size=8,
+                          max_seq=32, prefill_chunk=8)
+    rng = np.random.default_rng(14)
+    r = ce.submit(rng.integers(4, cfg.vocab_size, (8,)).astype(np.int32))
+    ce.step()
+    assert r.prefill_pos == 8       # the only chunk landed, then decoded
+    assert ce.stats.occupancy_sum <= ce.stats.steps * ce.n_slots
+    ce.run()
+    assert ce.stats.mean_occupancy <= ce.n_slots
+
+
+def test_stalled_chunk_refunds_budget_to_skipped_slots():
+    """A slot that stalls on pages never dispatched, so its budget charge
+    is refunded and a slot previously skipped for budget can still run —
+    pool pressure must not make the packed path lose throughput the legacy
+    per-slot loop (charge only on success) would have kept."""
+    cfg, m, p = _bundle()
+    # page_size 4 + chunk 8: a full chunk needs 2 fresh pages, a 3-token
+    # tail only 1 — that asymmetry is what lets the tail fit a one-page
+    # pool where the full chunks stall
+    ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=3, page_size=4,
+                          max_seq=64, prefill_chunk=8, prefill_budget=8)
+    rng = np.random.default_rng(15)
+    a = ce.submit(rng.integers(4, cfg.vocab_size, (24,)).astype(np.int32))
+    b = ce.submit(rng.integers(4, cfg.vocab_size, (24,)).astype(np.int32))
+    c = ce.submit(rng.integers(4, cfg.vocab_size, (3,)).astype(np.int32))
+    ce.step()    # all admitted; budget 8 lets only a's chunk run
+    assert a.prefill_pos == 8 and b.prefill_pos == 0 and c.prefill_pos == 0
+    stolen = [ce.cache._free.pop()
+              for _ in range(len(ce.cache._free) - 1)]
+    ce.step()    # a stalls (needs 2 pages, 1 free) and refunds its budget;
+    # b, rescanned, stalls and refunds too; c's 1-page tail then fits
+    assert a.prefill_pos == 8 and b.prefill_pos == 0
+    assert c.prefill_pos == 3
+    assert ce.stats.prefill_stalls == 2
+    ce.cache._free.extend(stolen)
+    ce.run()
+    assert a.done and b.done and c.done
+
+
+def test_prefill_only_steps_counted_in_occupancy():
+    """Satellite: steps that only advanced prefill used to be invisible to
+    ``steps``/``occupancy_sum`` while still accruing wall_s, so
+    mean occupancy overstated under heavy admission. They now count."""
+    cfg, m, p = _bundle()
+    ce = ContinuousEngine(m, p, max_new_tokens=2, n_slots=2, page_size=8,
+                          max_seq=64, prefill_chunk=4, prefill_budget=4)
+    rng = np.random.default_rng(12)
+    r = ce.submit(rng.integers(4, cfg.vocab_size, (16,)).astype(np.int32))
+    ce.run()
+    assert r.done
+    st = ce.stats
+    assert st.prefill_only_steps >= 3    # 16-token prompt, 4-token chunks
+    assert st.steps == st.decode_steps + st.prefill_only_steps
+    assert st.steps >= st.prefill_steps >= 4
+    assert 0 < st.mean_occupancy <= ce.n_slots
 
 
 # --------------------------------------------------------------- satellites

@@ -162,6 +162,40 @@ def test_make_engine_cache_layout_dispatch():
     assert isinstance(eng, Engine) and not isinstance(eng, ContinuousEngine)
 
 
+def test_serve_paths_agree_on_padding(monkeypatch):
+    """Padding-parity regression: ContinuousPoolEngine.serve used to fill
+    its response matrix with np.zeros while Engine.serve and
+    ContinuousEngine.serve pad with tok.PAD, so pool results disagreed with
+    every other serve path whenever PAD != 0. Remap PAD to a nonzero id and
+    require all three paths to agree elementwise, with PAD tails."""
+    import repro.data.tokenizer as tokenizer
+    from repro.core.routing import ThresholdPolicy
+    from repro.serving.pool import ContinuousPoolEngine
+    monkeypatch.setattr(tokenizer, "PAD", 41)
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(7)
+    # uniform-length prompts: serve() paths must see identical contexts
+    # (pool.submit trims by mask, the engines serve rows verbatim)
+    q = rng.integers(4, 40, (5, 9)).astype(np.int32)
+    mask = np.ones_like(q, np.float32)
+    dense = Engine(m, p, max_new_tokens=6)
+    rd, ld = dense.serve(q)
+    ce = ContinuousEngine(m, p, max_new_tokens=6, n_slots=2, page_size=8,
+                          max_seq=32)
+    rc, lc = ce.serve(q)
+    c0 = ContinuousEngine(m, p, max_new_tokens=6, n_slots=2, page_size=8,
+                          max_seq=32)
+    pool = ContinuousPoolEngine(ThresholdPolicy(_router(-1.0)),
+                                [("small", c0), ("large", c0)])
+    res = pool.serve(q, mask)
+    np.testing.assert_array_equal(rd, rc)
+    np.testing.assert_array_equal(rc, res.responses)
+    np.testing.assert_array_equal(ld, lc)
+    np.testing.assert_array_equal(lc, res.lengths)
+    for i, l in enumerate(res.lengths):
+        assert (res.responses[i, l:] == tokenizer.PAD).all()
+
+
 # -------------------------------------------------------------------- hybrid
 def _router(threshold):
     rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
