@@ -31,14 +31,18 @@ tokens/s, TTFT, and KV high-water columns) — and reports:
                       slab (bucket x (prompt + max_new)) vs the paged pool's
                       high-water page count.
 
-Two serving-hot-path rows ride along: ``long_context`` serves a stream of
+Three serving-hot-path rows ride along: ``long_context`` serves a stream of
 short live contexts on an engine provisioned for much longer prompts, with
 live-bounded vs full-static page walks — decode step time must track the
 live max context, not ``max_pages_per_slot``; ``heavy_admission`` floods the
 engine with multi-chunk prompts — packed prefill must launch ~one kernel
-per width bucket per step instead of one per PREFILLING slot. A
-``padding_parity`` flag asserts the dense, continuous, and pool serve paths
-agree on responses including tok.PAD tails.
+per width bucket per step instead of one per PREFILLING slot;
+``window_ssm`` serves the mixed stream through a 3-tier pool whose tiers
+are a plain uniform-global stack, a gemma3-style sliding-window stack, and
+a jamba-style SSM/hybrid stack — the two new layer kinds must stay
+greedy-exact vs their dense per-layer references. A ``padding_parity`` flag
+asserts the dense, continuous, and pool serve paths agree on responses
+including tok.PAD tails.
 
 Both engines are warmed up (jit compiles excluded from the timed stream):
 the dense engine precompiles its buckets, and every continuous row replays
@@ -368,23 +372,15 @@ def _tercile_cascade(q, mask):
                              float(np.quantile(scores, 1 / 3))))
 
 
-def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
-                        prefill_chunk=None, prefill_pack=None,
-                        walk_bound="live"):
-    """3-tier cascade-routed pool: per-tier traffic, tokens/s, TTFT, and KV
-    high-water, plus the calls-/token-weighted cost advantage vs routing
-    everything to the priciest tier."""
+def _run_pool_stream(pool, names, engines, stream):
+    """Warm/reset/timed replay + per-tier accounting shared by every pool
+    row: warm pass over the identical stream (traces every packed shape the
+    deterministic schedule needs), reset the meter and cache high-water
+    marks so only the timed stream counts (see _warm_then_timed), then the
+    timed pass. Returns the row skeleton: pool totals, latency columns,
+    and per-tier rows (calls/tokens/tok-s/KV/TTFT) callers extend."""
     toks, lens, caps = stream
     mask = (toks != tok.PAD).astype(np.float32)
-    policy = _tercile_cascade(toks, mask)
-    names = ("small", "medium", "large")
-    slot_counts = (n_slots, max(2, 3 * n_slots // 4), max(2, n_slots // 2))
-    engines = [_continuous(b, p, t_max, ns, prefill_chunk, prefill_pack,
-                           walk_bound)
-               for (b, p), ns in zip(bundles, slot_counts)]
-    pool = ContinuousPoolEngine(policy, list(zip(names, engines)))
-    # warm pass, then reset the meter and high-water marks so only the
-    # timed stream counts (see _warm_then_timed)
     pool.submit(toks, mask, max_new_tokens=caps)
     pool.run()
     for eng in engines:
@@ -404,7 +400,6 @@ def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
             "tokens_per_s": round(row["gen_tokens"] / wall, 2),
             "kv_high_water_bytes": int(eng.cache.stats.high_water_pages
                                        * eng.cache.bytes_per_page),
-            "prefill_compiles": eng.stats.prefill_compiles,
         })
         if treqs:
             row.update({k: v for k, v in _streaming_metrics(treqs).items()
@@ -426,6 +421,28 @@ def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
         **_percentiles(latencies),
         **_streaming_metrics(reqs),
     }
+
+
+def run_pool_continuous(bundles, stream, t_max, n_slots, rng,
+                        prefill_chunk=None, prefill_pack=None,
+                        walk_bound="live"):
+    """3-tier cascade-routed pool: per-tier traffic, tokens/s, TTFT, and KV
+    high-water, plus the calls-/token-weighted cost advantage vs routing
+    everything to the priciest tier."""
+    toks, lens, caps = stream
+    mask = (toks != tok.PAD).astype(np.float32)
+    policy = _tercile_cascade(toks, mask)
+    names = ("small", "medium", "large")
+    slot_counts = (n_slots, max(2, 3 * n_slots // 4), max(2, n_slots // 2))
+    engines = [_continuous(b, p, t_max, ns, prefill_chunk, prefill_pack,
+                           walk_bound)
+               for (b, p), ns in zip(bundles, slot_counts)]
+    pool = ContinuousPoolEngine(policy, list(zip(names, engines)))
+    row = _run_pool_stream(pool, names, engines, stream)
+    for name, eng in zip(names, engines):
+        row["per_tier"][name]["prefill_compiles"] = \
+            eng.stats.prefill_compiles
+    return row
 
 
 def run_long_context(bundle, params, rng, n, t_max, n_slots, smoke):
@@ -458,7 +475,7 @@ def run_long_context(bundle, params, rng, n, t_max, n_slots, smoke):
         "max_pages_per_slot": live.cache.max_pages_per_slot,
         # the widest live walk any decode dispatch actually took — the
         # compute analogue of the KV high-water column
-        "decode_bound_pages": max(live._decode_bounds),
+        "decode_bound_pages": max(b for b, _ in live._decode_bounds),
         "kv_high_water_bytes": int(live.cache.stats.high_water_pages
                                    * live.cache.bytes_per_page),
         "useful_tokens": useful,
@@ -529,6 +546,79 @@ def run_heavy_admission(bundle, params, rng, n, n_slots, smoke):
         **_percentiles(latencies),
         **_streaming_metrics(reqs_p),
     }
+
+
+def window_ssm_configs(smoke: bool):
+    """(plain, window, hybrid) tier configs for the window_ssm row: a
+    gemma3-style sliding-window tier and a jamba-style hybrid tier beside a
+    plain uniform-global tier — the edge-tier stacks the recurrent-state
+    pool and per-layer window masks exist for."""
+    base = dict(vocab_size=tok.VOCAB_SIZE, vocab_pad_multiple=16,
+                head_dim=16, attn_chunk=32, cache_layout="paged",
+                kv_page_size=16)
+    plain = ArchConfig(name="ws-plain", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, **base)
+    window = ArchConfig(name="ws-window", family="dense",
+                        n_layers=3 if smoke else 6, d_model=64, n_heads=4,
+                        n_kv_heads=2, d_ff=128, sliding_window=24,
+                        local_global_ratio=2, **base)
+    hybrid = ArchConfig(name="ws-hybrid", family="hybrid",
+                        n_layers=2 if smoke else 4, d_model=64, n_heads=4,
+                        n_kv_heads=2, d_ff=128, attn_every=2, attn_offset=1,
+                        moe_every=2, n_experts=4, top_k=2,
+                        ssm_state=16, ssm_headdim=16, ssm_chunk=8, **base)
+    return plain, window, hybrid
+
+
+def run_window_ssm(stream, t_max, n_slots, smoke,
+                   prefill_chunk=None, prefill_pack=None,
+                   walk_bound="live"):
+    """window_ssm row: a 3-tier pool whose middle tier is a sliding-window
+    stack and whose priciest tier is an SSM/hybrid stack, serving the same
+    mixed stream as the other pool row. Greedy-exactness of the two new
+    layer kinds is asserted against their dense per-layer reference
+    engines on a uniform sub-batch and reported as flags the CI smoke job
+    checks."""
+    toks, lens, caps = stream
+    mask = (toks != tok.PAD).astype(np.float32)
+    policy = _tercile_cascade(toks, mask)
+    cfgs = window_ssm_configs(smoke)
+    names = ("plain", "window", "hybrid")
+    bundles = []
+    for cfg, seed in zip(cfgs, (1, 4, 5)):
+        b = build_model(cfg)
+        bundles.append((b, b.init(jax.random.PRNGKey(seed))))
+    engines = [_continuous(b, p, t_max, n_slots, prefill_chunk,
+                           prefill_pack, walk_bound)
+               for b, p in bundles]
+    pool = ContinuousPoolEngine(policy, list(zip(names, engines)))
+    row = _run_pool_stream(pool, names, engines, stream)
+    for name, eng in zip(names, engines):
+        row["per_tier"][name]["recurrent_state_bytes"] = \
+            eng.rstate.state_bytes if eng.rstate is not None else 0
+
+    # greedy-exactness of the new layer kinds vs the dense per-layer
+    # reference engines, on a uniform-length greedy sub-batch
+    rng = np.random.default_rng(23)
+    exact = {}
+    for name, (b, p) in zip(names[1:], bundles[1:]):
+        q = rng.integers(4, tok.VOCAB_SIZE, (4, 12)).astype(np.int32)
+        rd, ld = Engine(b, p, max_new_tokens=4).serve(q)
+        ce = ContinuousEngine(b, p, max_new_tokens=4, n_slots=2, max_seq=96)
+        rc, lc = ce.serve(q)
+        exact[name] = bool(np.array_equal(rd, rc)
+                           and np.array_equal(ld, lc))
+    row.update({
+        "recurrent_state_bytes": sum(t["recurrent_state_bytes"]
+                                     for t in row["per_tier"].values()),
+        # widest window-walk start any decode dispatch took (window tier):
+        # > 0 means window layers actually skipped dead prefix pages
+        "window_pages_start_max": max(ws for _, ws
+                                      in engines[1]._decode_bounds),
+        "greedy_exact_window": exact["window"],
+        "greedy_exact_hybrid": exact["hybrid"],
+    })
+    return row
 
 
 def check_padding_parity(bundle, params, rng):
@@ -657,6 +747,22 @@ def main():
           f"({lc['live_step_speedup']:.2f}x; widest live walk "
           f"{lc['decode_bound_pages']} of {lc['max_pages_per_slot']} "
           f"pages)")
+
+    print("== window_ssm (3-tier: plain + sliding-window + hybrid) ==")
+    ws = run_window_ssm(stream, t_max, n_slots, args.smoke,
+                        args.prefill_chunk, args.prefill_pack,
+                        args.walk_bound)
+    results["window_ssm"] = ws
+    report("window-ssm", ws)
+    for name, row in ws["per_tier"].items():
+        rec = f"  rec {row['recurrent_state_bytes']}" \
+            if row["recurrent_state_bytes"] else ""
+        print(f"    {name:<8} {row['calls']:>4} calls  "
+              f"{row['tokens_per_s']:>8} tok/s  kv "
+              f"{row['kv_high_water_bytes']}{rec}")
+    print(f"    greedy-exact: window {ws['greedy_exact_window']}, "
+          f"hybrid {ws['greedy_exact_hybrid']}; widest window walk start "
+          f"page {ws['window_pages_start_max']}")
 
     print("== heavy admission (packed prefill) ==")
     ha = run_heavy_admission(bundles[0][0], bundles[0][1],

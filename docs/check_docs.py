@@ -1,0 +1,106 @@
+"""Docs liveness check: every module path and repo file path referenced
+from README.md / docs/*.md code (fenced blocks and inline spans) must
+resolve against the current tree.
+
+Two reference kinds are checked:
+
+* dotted module paths ``repro.foo.bar`` (optionally ``repro.foo.Bar.attr``):
+  the longest importable module prefix is imported and any remaining
+  segments are resolved with getattr — so renaming ``serving.pool`` or
+  ``ContinuousPoolEngine`` breaks the docs job, not just the reader;
+* repo-relative file paths containing a ``/`` and ending in a known suffix
+  (``.py`` / ``.md`` / ``.json`` / ``.yml``): they must exist on disk.
+
+Run: PYTHONPATH=src python docs/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_GLOBS = ["README.md", "docs"]
+FILE_SUFFIXES = (".py", ".md", ".json", ".yml")
+
+# repro.module.path with optional attribute tail; individual segments stay
+# word-like so prose is never matched
+MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+PATH_RE = re.compile(r"[\w.\-]+(?:/[\w.\-]+)+")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+SPAN_RE = re.compile(r"`[^`\n]+`")
+
+
+def doc_files():
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+            if f.endswith(".md")]
+    return [f for f in out if os.path.exists(f)]
+
+
+def code_chunks(text: str):
+    """Fenced code blocks plus inline code spans — the docs' API surface."""
+    for m in FENCE_RE.finditer(text):
+        yield m.group(0)
+    for m in SPAN_RE.finditer(FENCE_RE.sub("", text)):
+        yield m.group(0)
+
+
+def resolve_module(dotted: str) -> str | None:
+    """None if ``dotted`` resolves (module, or module attribute chain);
+    otherwise the error string."""
+    parts = dotted.split(".")
+    mod, idx = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            idx = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        return f"no importable prefix of {dotted!r}"
+    obj = mod
+    for attr in parts[idx:]:
+        if not hasattr(obj, attr):
+            return f"{'.'.join(parts[:idx])} has no attribute chain " \
+                   f"{'.'.join(parts[idx:])!r}"
+        obj = getattr(obj, attr)
+    return None
+
+
+def check_file(path: str) -> list:
+    errors = []
+    with open(path) as f:
+        text = f.read()
+    rel = os.path.relpath(path, ROOT)
+    for chunk in code_chunks(text):
+        for dotted in set(MODULE_RE.findall(chunk)):
+            err = resolve_module(dotted)
+            if err:
+                errors.append(f"{rel}: {err}")
+        for token in set(PATH_RE.findall(chunk)):
+            if not token.endswith(FILE_SUFFIXES) or token.startswith("/"):
+                continue
+            if MODULE_RE.fullmatch(token):
+                continue
+            if not os.path.exists(os.path.join(ROOT, token)):
+                errors.append(f"{rel}: dead file path {token!r}")
+    return errors
+
+
+def main():
+    errors = []
+    for path in doc_files():
+        errors += check_file(path)
+    if errors:
+        print("\n".join(sorted(set(errors))))
+        sys.exit(1)
+    print(f"docs OK: {len(doc_files())} files, all module and file "
+          "references resolve")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,6 +53,9 @@ class HybridRouter:
     label_kind: str = "trans"   # det | prob | trans — provenance only
 
     def scores(self, tokens, mask) -> jnp.ndarray:
+        """Sigmoid router scores (N,) in [0, 1] for a padded query batch
+        ``tokens`` (N, L) int32 with validity ``mask`` (N, L); higher =
+        easier = safer to serve on a cheaper tier."""
         return _scores_jit(self.rcfg)(self.params, tokens, mask)
 
     def route(self, tokens, mask) -> jnp.ndarray:
@@ -60,6 +63,8 @@ class HybridRouter:
         return self.scores(tokens, mask) >= self.threshold
 
     def with_threshold(self, threshold: float) -> "HybridRouter":
+        """A copy of this router gating at ``threshold`` (params shared —
+        recalibrating the quality/cost dial costs nothing)."""
         return dataclasses.replace(self, threshold=threshold)
 
 

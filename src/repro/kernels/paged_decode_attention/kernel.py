@@ -11,6 +11,19 @@ masking still handles ragged lengths within the bound, and pages past a
 request's length resolve to the reserved scratch page and are fully masked.
 ``pages_bound=None`` keeps the full static walk (the parity baseline).
 
+Sliding-window layers (gemma3-style local attention) pass a static
+``window > 0``: key position ``kpos`` is additionally valid only when it
+falls inside the query's trailing window, ``kpos >= seq_lens[b] - window``
+(the decode query sits at global position ``seq_lens[b] - 1``). Because the
+mask is by *global* position, the walk may also *start* late:
+``pages_start`` (static, caller-bucketed) skips pages that no request's
+window can reach, so a window layer's page walk covers
+``[pages_start, pages_bound)`` instead of ``[0, pages_bound)`` — dead
+prefix pages cost nothing. A page that is fully masked for one request
+(its window starts later than the shared walk) contributes nothing: the
+masked probabilities are zeroed explicitly, so the online-softmax
+statistics never see the exp(NEG_INF - NEG_INF) = 1 degeneracy.
+
 This kernel extends the dense GQA decode kernel (kernels/decode_attention)
 with that gather: the page table and per-request sequence lengths arrive as
 *scalar-prefetch* operands (``PrefetchScalarGridSpec``), so the K/V
@@ -43,7 +56,8 @@ NEG_INF = -1e30
 
 
 def _paged_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, page_size: int):
+                  m_ref, l_ref, acc_ref, *, page_size: int, window: int,
+                  pages_start: int):
     b = pl.program_id(0)
     p = pl.program_id(2)
     np_ = pl.num_programs(2)
@@ -59,15 +73,22 @@ def _paged_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
     v = v_ref[0, :, 0, :]  # (ps, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, ps)
-    kpos = p * page_size + jax.lax.broadcasted_iota(
+    kpos = (pages_start + p) * page_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, page_size), 1)
-    s = jnp.where(kpos < sl_ref[b], s, NEG_INF)
+    valid = kpos < sl_ref[b]
+    if window > 0:
+        # the decode query sits at global position sl_ref[b] - 1; keys
+        # older than its trailing window are masked by global position
+        valid &= kpos >= sl_ref[b] - window
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
     l_prev = l_ref[...]
     m_cur = jnp.max(s, axis=1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
-    pexp = jnp.exp(s - m_new)
+    # explicit re-mask: on a fully-masked page m_new can still be NEG_INF,
+    # and exp(NEG_INF - NEG_INF) = 1 would count masked keys into l/acc
+    pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = alpha * l_prev + jnp.sum(pexp, axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -84,13 +105,19 @@ def _paged_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_decode_attention_gqa(q, k_pages, v_pages, page_table, seq_lens, *,
                                pages_bound: int | None = None,
+                               pages_start: int = 0, window: int = 0,
                                interpret: bool | None = None):
     """q: (B, K, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
     page_table: (B, MP) int32; seq_lens: (B,) int32.
 
     ``pages_bound``: static bound on the sequential page walk — the caller
     guarantees every seq_len fits in ``pages_bound`` pages (live-bounded
-    dispatch); None walks the full static page-table width.
+    dispatch); None walks the full static page-table width. ``window``:
+    static sliding-window size (0 = global attention) — keys older than the
+    query's trailing ``window`` positions are masked by global position.
+    ``pages_start``: static first page of the walk (window layers only) —
+    the caller guarantees every request's first in-window key position is
+    ``>= pages_start * ps``, so the walk covers [pages_start, pages_bound).
 
     Returns (B, K, G, D). ``interpret=None`` auto-detects the backend.
     """
@@ -100,17 +127,23 @@ def paged_decode_attention_gqa(q, k_pages, v_pages, page_table, seq_lens, *,
     _, ps, Kk, Dk = k_pages.shape
     assert (Kk, Dk) == (K, D), (k_pages.shape, q.shape)
     MP = page_table.shape[1]
-    NP = MP if pages_bound is None else pages_bound
-    assert 1 <= NP <= MP, (pages_bound, MP)
+    end = MP if pages_bound is None else pages_bound
+    assert window >= 0 and pages_start >= 0, (window, pages_start)
+    assert pages_start == 0 or window > 0, \
+        "pages_start > 0 is only sound under a sliding window"
+    NP = end - pages_start
+    assert 1 <= NP and end <= MP, (pages_bound, pages_start, MP)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, K, NP),
         in_specs=[
             pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, sl: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+                         lambda b, h, p, pt, sl: (pt[b, pages_start + p],
+                                                  0, h, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, p, pt, sl: (pt[b, p], 0, h, 0)),
+                         lambda b, h, p, pt, sl: (pt[b, pages_start + p],
+                                                  0, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, h, p, pt, sl: (b, h, 0, 0)),
@@ -121,7 +154,8 @@ def paged_decode_attention_gqa(q, k_pages, v_pages, page_table, seq_lens, *,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_paged_kernel, page_size=ps),
+        functools.partial(_paged_kernel, page_size=ps, window=window,
+                          pages_start=pages_start),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,

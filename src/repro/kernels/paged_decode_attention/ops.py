@@ -14,16 +14,20 @@ import jax.numpy as jnp
 from .kernel import paged_decode_attention_gqa
 
 
-@functools.partial(jax.jit, static_argnames=("pages_bound",))
+@functools.partial(jax.jit, static_argnames=("pages_bound", "pages_start",
+                                             "window"))
 def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
-                           pages_bound=None):
+                           pages_bound=None, pages_start=0, window=0):
     """q: (B, H, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
     page_table: (B, MP); seq_lens: (B,). ``pages_bound``: static live bound
-    on the page walk (None = full static width). Returns (B, H, D)."""
+    on the page walk (None = full static width); ``window``/``pages_start``:
+    static sliding-window size (0 = global) and first walked page (window
+    layers only). Returns (B, H, D)."""
     B, H, D = q.shape
     K = k_pages.shape[2]
     G = H // K
     qg = q.reshape(B, K, G, D)  # heads are grouped per KV head (GQA order)
     out = paged_decode_attention_gqa(qg, k_pages, v_pages, page_table,
-                                     seq_lens, pages_bound=pages_bound)
+                                     seq_lens, pages_bound=pages_bound,
+                                     pages_start=pages_start, window=window)
     return out.reshape(B, H, D)

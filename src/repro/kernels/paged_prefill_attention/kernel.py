@@ -22,6 +22,16 @@ the in-chunk keys) and ``< total`` (pages past the written prefix may point
 anywhere, conventionally scratch page 0, and are fully masked). Padded query
 rows (``c >= n_new``) produce garbage the caller slices off.
 
+Sliding-window layers pass a static ``window > 0``: a key is additionally
+valid only inside its query's trailing window,
+``start + c - kpos < window`` — the same global-position mask the dense
+reference applies. ``pages_start`` (static, caller-bucketed) then lets the
+walk skip pages no query's window can reach (every request's earliest
+in-window key, ``start - window + 1``, must be >= ``pages_start * ps``), so
+windowed prefill compute scales with the window, not the resident prefix.
+Fully-masked (query, page) pairs are re-masked after the online-softmax max
+so they contribute exactly zero.
+
 Layouts:
   q        (B, K, C, G, D)  pre-scaled chunk queries; G = n_heads / n_kv_heads
   k_pages  (P, ps, K, D)    shared page pool (P pages of ps tokens)
@@ -48,7 +58,7 @@ NEG_INF = -1e30
 
 def _paged_prefill_kernel(pt_ref, st_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
                           m_ref, l_ref, acc_ref, *, page_size: int,
-                          group: int):
+                          group: int, window: int, pages_start: int):
     b = pl.program_id(0)
     p = pl.program_id(2)
     np_ = pl.num_programs(2)
@@ -66,17 +76,22 @@ def _paged_prefill_kernel(pt_ref, st_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
                             preferred_element_type=jnp.float32)  # (CG, ps)
 
     CG = s.shape[0]
-    kpos = p * page_size + jax.lax.broadcasted_iota(
+    kpos = (pages_start + p) * page_size + jax.lax.broadcasted_iota(
         jnp.int32, (CG, page_size), 1)
     qpos = st_ref[b] + jax.lax.broadcasted_iota(
         jnp.int32, (CG, page_size), 0) // group
-    s = jnp.where((kpos <= qpos) & (kpos < tl_ref[b]), s, NEG_INF)
+    valid = (kpos <= qpos) & (kpos < tl_ref[b])
+    if window > 0:
+        valid &= qpos - kpos < window
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
     l_prev = l_ref[...]
     m_cur = jnp.max(s, axis=1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
-    pexp = jnp.exp(s - m_new)
+    # explicit re-mask: a (query, page) pair with no valid key keeps
+    # m_new at NEG_INF, where exp(s - m_new) = 1 would count masked keys
+    pexp = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = alpha * l_prev + jnp.sum(pexp, axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -93,6 +108,7 @@ def _paged_prefill_kernel(pt_ref, st_ref, tl_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
                                 total, *, pages_bound: int | None = None,
+                                pages_start: int = 0, window: int = 0,
                                 interpret: bool | None = None):
     """q: (B, K, C, G, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
     page_table: (B, MP) int32; start/total: (B,) int32 (tokens resident
@@ -100,7 +116,12 @@ def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
 
     ``pages_bound``: static bound on the sequential page walk — the caller
     guarantees every ``total`` fits in ``pages_bound`` pages (live-bounded
-    dispatch); None walks the full static page-table width.
+    dispatch); None walks the full static page-table width. ``window``:
+    static sliding-window size (0 = global) — keys outside a query's
+    trailing window are masked by global position. ``pages_start``: static
+    first page of the walk (window layers only) — the caller guarantees
+    every request's earliest in-window key (``start - window + 1``) is
+    ``>= pages_start * ps``.
 
     Returns (B, K, C, G, D). ``interpret=None`` auto-detects the backend.
     """
@@ -110,8 +131,12 @@ def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
     _, ps, Kk, Dk = k_pages.shape
     assert (Kk, Dk) == (K, D), (k_pages.shape, q.shape)
     MP = page_table.shape[1]
-    NP = MP if pages_bound is None else pages_bound
-    assert 1 <= NP <= MP, (pages_bound, MP)
+    end = MP if pages_bound is None else pages_bound
+    assert window >= 0 and pages_start >= 0, (window, pages_start)
+    assert pages_start == 0 or window > 0, \
+        "pages_start > 0 is only sound under a sliding window"
+    NP = end - pages_start
+    assert 1 <= NP and end <= MP, (pages_bound, pages_start, MP)
     CG = C * G
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -120,9 +145,11 @@ def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
             pl.BlockSpec((1, 1, CG, D),
                          lambda b, h, p, pt, st, tl: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, p, pt, st, tl: (pt[b, p], 0, h, 0)),
+                         lambda b, h, p, pt, st, tl:
+                         (pt[b, pages_start + p], 0, h, 0)),
             pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, p, pt, st, tl: (pt[b, p], 0, h, 0)),
+                         lambda b, h, p, pt, st, tl:
+                         (pt[b, pages_start + p], 0, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, CG, D),
                                lambda b, h, p, pt, st, tl: (b, h, 0, 0)),
@@ -133,7 +160,8 @@ def paged_prefill_attention_gqa(q, k_pages, v_pages, page_table, start,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_prefill_kernel, page_size=ps, group=G),
+        functools.partial(_paged_prefill_kernel, page_size=ps, group=G,
+                          window=window, pages_start=pages_start),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, CG, D), q.dtype),
         interpret=interpret,

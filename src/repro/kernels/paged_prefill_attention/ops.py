@@ -15,16 +15,20 @@ import jax.numpy as jnp
 from .kernel import paged_prefill_attention_gqa
 
 
-@functools.partial(jax.jit, static_argnames=("pages_bound",))
+@functools.partial(jax.jit, static_argnames=("pages_bound", "pages_start",
+                                             "window"))
 def paged_prefill_attention(q, k_pages, v_pages, page_table, start, total,
-                            pages_bound=None):
+                            pages_bound=None, pages_start=0, window=0):
     """q: (B, C, H, D) pre-scaled; k_pages/v_pages: (P, ps, K, D);
     page_table: (B, MP); start/total: (B,). ``pages_bound``: static live
-    bound on the page walk (None = full static width). Returns (B, C, H, D)."""
+    bound on the page walk (None = full static width); ``window``/
+    ``pages_start``: static sliding-window size (0 = global) and first
+    walked page (window layers only). Returns (B, C, H, D)."""
     B, C, H, D = q.shape
     K = k_pages.shape[2]
     G = H // K
     qg = jnp.transpose(q.reshape(B, C, K, G, D), (0, 2, 1, 3, 4))
     out = paged_prefill_attention_gqa(qg, k_pages, v_pages, page_table,
-                                      start, total, pages_bound=pages_bound)
+                                      start, total, pages_bound=pages_bound,
+                                      pages_start=pages_start, window=window)
     return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, D)

@@ -23,10 +23,15 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-32b \
       --tiers quarter half full --continuous
 
-``--continuous`` serves the stream through the continuous-batching paged-KV
+``--continuous`` serves the stream through the continuous-batching paged
 engines (serving.ContinuousPoolEngine) instead of the dense-batch pair —
-the production path for ragged online traffic (attention families only).
-K > 2 tiers require ``--continuous`` (the dense barrier-join path is the
+the production path for ragged online traffic. Sliding-window stacks
+(gemma3-4b), SSM stacks (mamba2-130m), and hybrid stacks (jamba-v0.1-52b)
+all serve continuously: window layers mask the paged kernels by global
+position, recurrent layers keep per-slot state in the engine's
+RecurrentStatePool. Only encoder-decoder and frontend configs
+(whisper-large-v3, internvl2-26b) fall back to the dense engine. K > 2
+tiers require ``--continuous`` (the dense barrier-join path is the
 two-tier offline evaluation artifact).
 """
 from __future__ import annotations
@@ -59,11 +64,17 @@ _SCALE_SUFFIX = {8: "-e", 4: "-q", 2: "-s", 1: ""}
 
 def scaled_sibling(full, factor: int):
     """A capacity-scaled sibling of ``full`` (factor 1 = the config itself),
-    shrinking layers, width, heads, and FFN together."""
+    shrinking layers, width, heads, and FFN together. Hybrid stacks keep
+    ``n_layers`` a multiple of ``attn_every`` (their block period) so a
+    scaled sibling still has at least one complete block."""
     if factor == 1:
         return full
+    n_layers = max(1, full.n_layers // factor)
+    if full.family == "hybrid" and full.attn_every:
+        n_layers = max(full.attn_every,
+                       n_layers - n_layers % full.attn_every)
     return dataclasses.replace(
-        full, n_layers=max(1, full.n_layers // factor),
+        full, n_layers=n_layers,
         d_model=max(8, full.d_model // factor),
         n_heads=max(1, full.n_heads // factor),
         n_kv_heads=max(1, min(full.n_kv_heads, full.n_heads // factor))

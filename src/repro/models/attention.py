@@ -241,7 +241,8 @@ def decode_attention(params, x_t, layer_k, layer_v, pos, cfg, *,
 
 
 def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
-                           seq_lens, active, cfg, pages_bound=None):
+                           seq_lens, active, cfg, pages_bound=None, *,
+                           window=0, pages_start=0):
     """One decode step against a paged KV cache (continuous batching).
 
     x_t: (B, 1, D) — one new token per serving slot. k_pages/v_pages:
@@ -251,10 +252,12 @@ def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
     and their output is garbage the engine masks. ``pages_bound``: static
     live bound on the kernel's page walk (the engine computes it from its
     seq_lens snapshot; every active slot's context must fit); None = the
-    full static page-table width.
+    full static page-table width. ``window``: this layer's static sliding
+    window (0 = global); ``pages_start``: static first walked page for
+    window layers (every active slot's first in-window key must be
+    ``>= pages_start * ps``; must be 0 when ``window`` is 0).
 
-    Returns (out (B, 1, D), k_pages, v_pages). Requires uniform global
-    attention (cfg.supports_paged_kv).
+    Returns (out (B, 1, D), k_pages, v_pages).
     """
     B = x_t.shape[0]
     H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -274,18 +277,23 @@ def paged_decode_attention(params, x_t, k_pages, v_pages, page_table,
         from repro.kernels.paged_decode_attention.kernel import \
             paged_decode_attention_gqa
         out = paged_decode_attention_gqa(qg, k_pages, v_pages, page_table,
-                                         lens, pages_bound=pages_bound)
+                                         lens, pages_bound=pages_bound,
+                                         pages_start=pages_start,
+                                         window=window)
     else:
         from repro.kernels.paged_decode_attention.ref import \
             paged_decode_attention_ref
         out = paged_decode_attention_ref(qg, k_pages, v_pages, page_table,
-                                         lens, pages_bound=pages_bound)
+                                         lens, pages_bound=pages_bound,
+                                         pages_start=pages_start,
+                                         window=window)
     out = out.reshape(B, 1, H, Dh)
     return _out_proj(params, out, B, 1, H, Dh), k_pages, v_pages
 
 
 def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
-                            n_new, cfg, pages_bound=None):
+                            n_new, cfg, pages_bound=None, *, window=0,
+                            pages_start=0):
     """One chunked-prefill step against a paged KV cache.
 
     x: (B, C, D) — a fixed-width chunk of prompt activations per serving
@@ -300,9 +308,11 @@ def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
     attends each chunk query causally to the resident context plus the
     in-chunk keys via the paged prefill kernel. ``pages_bound``: static live
     bound on the kernel's page walk (every ``start + n_new`` must fit); None
-    = the full static page-table width. Returns
-    (out (B, C, D), k_pages, v_pages). Requires uniform global attention
-    (cfg.supports_paged_kv).
+    = the full static page-table width. ``window``: this layer's static
+    sliding window (0 = global); ``pages_start``: static first walked page
+    for window layers (every row's earliest in-window key,
+    ``start - window + 1``, must be ``>= pages_start * ps``). Returns
+    (out (B, C, D), k_pages, v_pages).
     """
     B, C, D = x.shape
     H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -328,13 +338,17 @@ def paged_prefill_attention(params, x, k_pages, v_pages, page_table, start,
             paged_prefill_attention_gqa
         out = paged_prefill_attention_gqa(qg, k_pages, v_pages, page_table,
                                           start, total,
-                                          pages_bound=pages_bound)
+                                          pages_bound=pages_bound,
+                                          pages_start=pages_start,
+                                          window=window)
     else:
         from repro.kernels.paged_prefill_attention.ref import \
             paged_prefill_attention_ref
         out = paged_prefill_attention_ref(qg, k_pages, v_pages, page_table,
                                           start, total,
-                                          pages_bound=pages_bound)
+                                          pages_bound=pages_bound,
+                                          pages_start=pages_start,
+                                          window=window)
     out = jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, Dh)
     return _out_proj(params, out, B, C, H, Dh), k_pages, v_pages
 

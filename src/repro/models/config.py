@@ -113,16 +113,52 @@ class ArchConfig:
 
     @property
     def supports_paged_kv(self) -> bool:
-        """True if the paged KV-cache decode path (continuous-batching
-        serving) covers this architecture: a decoder-only attention stack
-        with uniform global attention and no modality frontend. SSM/hybrid
-        state and sliding-window layers keep recurrent/windowed state the
-        page pool doesn't model; frontend embeddings would occupy cache
-        entries the engine's token-count bookkeeping doesn't cover."""
-        return (not self.is_encoder_decoder
-                and self.family not in ("ssm", "hybrid")
-                and self.frontend == "none"
-                and all(self.is_global_layer_flags()))
+        """True if the continuous-batching paged serving path covers this
+        architecture (see ``paged_unsupported_reason`` for the exclusions).
+        Decoder-only stacks of any mixer mix qualify: uniform-global and
+        sliding-window attention layers (per-layer window masks in the
+        paged kernels) and SSM/hybrid recurrent layers (page-pooled
+        per-slot state — serving.cache.RecurrentStatePool)."""
+        return self.paged_unsupported_reason is None
+
+    @property
+    def paged_unsupported_reason(self) -> Optional[str]:
+        """Why the continuous paged engine cannot serve this config, or
+        None when it can. The two remaining exclusions: encoder–decoder
+        stacks (the encoder memory is not a per-token cache the page pool
+        models) and modality frontends (frontend embeddings would occupy
+        cache entries the engine's token-count bookkeeping doesn't
+        cover)."""
+        if self.is_encoder_decoder:
+            return ("encoder-decoder: cross-attention reads fixed encoder "
+                    "memory, not a per-token paged cache")
+        if self.frontend != "none":
+            return (f"frontend={self.frontend}: frontend embeddings occupy "
+                    "cache entries outside the engine's token accounting")
+        return None
+
+    @property
+    def has_recurrent_layers(self) -> bool:
+        """True when serving needs per-slot recurrent (SSD + conv) state
+        beside the paged KV pool."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_window_layers(self) -> bool:
+        """True when any attention layer masks by a sliding window (the
+        paged kernels then take a nonzero static ``window``). Checked per
+        layer: SSM/hybrid mixer layers are not window layers even though
+        they are not global-attention layers either."""
+        return any(self.layer_window(i) > 0 for i in range(self.n_layers))
+
+    def layer_window(self, i: int) -> int:
+        """Sliding-window size of attention layer ``i`` (0 = global or not
+        an attention layer). Units: tokens of trailing context the layer
+        may attend to, the query position included."""
+        kind = self.layer_kind(i)
+        if not kind["attn"] or kind["global_attn"]:
+            return 0
+        return self.sliding_window
 
     @property
     def has_subquadratic_path(self) -> bool:

@@ -198,25 +198,73 @@ def _ssm_prefill_layer(p, h, cfg):
 # --------------------------------------------------------------------- decode
 def init_paged_decode_cache(cfg, num_pages: int, page_size: int):
     """Paged KV cache (continuous-batching serving): a shared page pool per
-    layer. Slot bookkeeping (page table, seq lens) lives with the serving
-    engine's allocator, not in the cache pytree."""
+    attention layer. Slot bookkeeping (page table, seq lens) lives with the
+    serving engine's allocator, not in the cache pytree. Attention-free
+    stacks (family="ssm") get zero-layer pools — their serving state lives
+    entirely in the recurrent-state pool."""
     if not cfg.supports_paged_kv:
-        raise ValueError(f"{cfg.name}: paged KV cache requires a decoder-only "
-                         "uniform-global attention stack")
-    kv = attn.init_paged_kv_cache(cfg, num_pages, page_size, cfg.n_layers)
+        raise ValueError(f"{cfg.name}: no paged serving path "
+                         f"({cfg.paged_unsupported_reason})")
+    n_attn = 0 if cfg.family == "ssm" else cfg.n_layers
+    kv = attn.init_paged_kv_cache(cfg, num_pages, page_size, n_attn)
     return {"k_pages": kv["k_pages"], "v_pages": kv["v_pages"]}
 
 
+def init_decoder_recurrent_state(cfg, n_rows: int):
+    """Recurrent-state slabs for the ssm family's serving slots: SSD state
+    ``h`` (n_rows, L, H, P, N) fp32 and raw conv-tail ``conv``
+    (n_rows, L, cw-1, di+2N). Row 0 is the pool's reserved scratch row
+    (packed-prefill padding rows read/write it); slot ``s`` owns row
+    ``s + 1`` (see serving.cache.RecurrentStatePool)."""
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    cw, di = cfg.ssm_conv_width, cfg.d_inner
+    L = cfg.n_layers
+    return {
+        "h": jnp.zeros((n_rows, L, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_rows, L, cw - 1, di + 2 * N), dtype_of(cfg)),
+    }
+
+
+def _attn_layer_runs(cfg):
+    """Maximal runs of consecutive layers sharing one sliding window:
+    [(window, first_layer, n_layers), ...] in stack order. Uniform stacks
+    (all-global, or every layer the same window) collapse to one run, so
+    the paged step keeps its single layer-scan; gemma3-style mixed stacks
+    get one scan per run, each with its own static kernel ``window`` —
+    which is what lets window runs also take a late ``pages_start``."""
+    runs: list = []
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        if runs and runs[-1][0] == w:
+            runs[-1][2] += 1
+        else:
+            runs.append([w, i, 1])
+    return [tuple(r) for r in runs]
+
+
+def _slice_layers(tree, i0: int, n: int):
+    """Slice a stacked-params pytree (leading layer axis) to layers
+    [i0, i0 + n)."""
+    return jax.tree_util.tree_map(lambda a: a[i0:i0 + n], tree)
+
+
 def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
-                                n_new, cfg, pages_bound=None):
+                                n_new, cfg, pages_bound=None,
+                                window_start=0, state_rows=None):
     """One chunked-prefill step over the paged pool (continuous batching).
 
     tokens: (B, C) int32 — a fixed-width chunk of prompt tokens per serving
     slot, PAD-filled past ``n_new[b]``; page_table (B, MP) rows already
     cover positions ``start .. start + n_new - 1`` (the engine extends the
-    slot's pages before calling). Each layer writes the chunk's K/V directly
-    into the pool and attends causally to resident context + in-chunk keys
-    (models.attention.paged_prefill_attention). Returns
+    slot's pages before calling). Each attention layer writes the chunk's
+    K/V directly into the pool and attends causally to resident context +
+    in-chunk keys (models.attention.paged_prefill_attention); sliding-window
+    runs use their static per-layer window and may start their page walk at
+    ``window_start`` (static, engine-bucketed). The ssm family instead
+    advances per-slot recurrent state: ``cache["rec"]`` rows are gathered by
+    ``state_rows`` (B,) int32 (0 = the scratch row padding rows use), a row
+    whose chunk starts at position 0 re-enters from zero state (slot reuse
+    needs no host-side reset), and the advanced rows scatter back. Returns
     (x_last (B, 1, D), cache with updated pools) — the final-norm hidden
     state of token ``start + n_new - 1``. The LM head is deliberately NOT
     applied here: only the final chunk's logits are ever consumed (they
@@ -227,58 +275,135 @@ def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
     B, C = tokens.shape
     x = embed(params["embed"], tokens)
 
-    def body(x, xs):
-        layer_p, kp, vp = xs
-        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
-        o, kp, vp = attn.paged_prefill_attention(layer_p["attn"], h, kp, vp,
-                                                 page_table, start, n_new,
-                                                 cfg, pages_bound)
-        x = x + o
-        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
-        if cfg.n_experts > 0:
-            y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
-        else:
-            y = mlp(layer_p["mlp"], h)
-        return constrain_batch(x + y), (kp, vp)
+    if cfg.family == "ssm":
+        rec = cache["rec"]
+        fresh = (start == 0)
+        # first chunk of a prompt starts from zero state, whatever the
+        # previous tenant of the slot left behind
+        h0 = jnp.where(fresh[:, None, None, None, None], 0.0,
+                       rec["h"][state_rows])                 # (B, L, ...)
+        tails = jnp.where(fresh[:, None, None, None], 0.0,
+                          rec["conv"][state_rows]).astype(rec["conv"].dtype)
 
-    x, (kps, vps) = jax.lax.scan(
-        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+        def body(x, xs):
+            layer_p, h_st, tail = xs
+            h = rmsnorm(layer_p["ln"], x, cfg.norm_eps)
+            y, h_new, tail_new = ssm_lib.ssm_prefill_chunk(
+                layer_p["ssm"], h, h_st, tail, n_new, cfg)
+            return constrain_batch(x + y), (h_new, tail_new)
+
+        x, (h_new, tails_new) = jax.lax.scan(
+            body, x, (params["layers"], jnp.moveaxis(h0, 0, 1),
+                      jnp.moveaxis(tails, 0, 1)))
+        rec = {"h": rec["h"].at[state_rows].set(jnp.moveaxis(h_new, 0, 1)),
+               "conv": rec["conv"].at[state_rows].set(
+                   jnp.moveaxis(tails_new, 0, 1))}
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        last = jnp.clip(n_new - 1, 0, C - 1)
+        x_last = x[jnp.arange(B), last][:, None]              # (B, 1, D)
+        return x_last, {**cache, "rec": rec}
+
+    def make_body(window):
+        def body(x, xs):
+            layer_p, kp, vp = xs
+            h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+            o, kp, vp = attn.paged_prefill_attention(
+                layer_p["attn"], h, kp, vp, page_table, start, n_new, cfg,
+                pages_bound, window=window,
+                pages_start=window_start if window else 0)
+            x = x + o
+            h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+            if cfg.n_experts > 0:
+                y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+            else:
+                y = mlp(layer_p["mlp"], h)
+            return constrain_batch(x + y), (kp, vp)
+        return body
+
+    seg_k, seg_v = [], []
+    for w, i0, n in _attn_layer_runs(cfg):
+        x, (kps, vps) = jax.lax.scan(
+            make_body(w), x,
+            (_slice_layers(params["layers"], i0, n),
+             cache["k_pages"][i0:i0 + n], cache["v_pages"][i0:i0 + n]))
+        seg_k.append(kps)
+        seg_v.append(vps)
+    kps = seg_k[0] if len(seg_k) == 1 else jnp.concatenate(seg_k)
+    vps = seg_v[0] if len(seg_v) == 1 else jnp.concatenate(seg_v)
     x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
     last = jnp.clip(n_new - 1, 0, C - 1)
     x_last = x[jnp.arange(B), last][:, None]                  # (B, 1, D)
-    return x_last, {"k_pages": kps, "v_pages": vps}
+    return x_last, {**cache, "k_pages": kps, "v_pages": vps}
 
 
 def decoder_decode_step_paged(params, cache, token, page_table, seq_lens,
-                              active, cfg, pages_bound=None):
+                              active, cfg, pages_bound=None, window_start=0):
     """One continuous-batching decode step over the serving slots.
 
     token: (B, 1) int32 — per-slot next token; page_table (B, MP),
     seq_lens (B,) int32, active (B,) bool come from the engine's page
     allocator; ``pages_bound`` is the engine's static live page bound (None
-    = full static width). Returns (logits (B, V), cache with updated
-    pools)."""
+    = full static width) and ``window_start`` the static first page of
+    sliding-window runs' walks (global runs always walk from page 0). The
+    ssm family advances ``cache["rec"]`` rows 1..B instead (row 0 is the
+    scratch row); rows of slots not in ``active`` keep their state
+    unchanged, so a decode dispatch can never corrupt a slot that is still
+    mid-prefill. Returns (logits (B, V), cache with updated pools)."""
     x = embed(params["embed"], token)
 
-    def body(x, xs):
-        layer_p, kp, vp = xs
-        h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
-        o, kp, vp = attn.paged_decode_attention(layer_p["attn"], h, kp, vp,
-                                                page_table, seq_lens, active,
-                                                cfg, pages_bound)
-        x = x + o
-        h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
-        if cfg.n_experts > 0:
-            y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
-        else:
-            y = mlp(layer_p["mlp"], h)
-        return constrain_batch(x + y), (kp, vp)
+    if cfg.family == "ssm":
+        rec = cache["rec"]
+        act = active.reshape(-1)
 
-    x, (kps, vps) = jax.lax.scan(
-        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+        def body(x, xs):
+            layer_p, h_st, tail = xs
+            hn = rmsnorm(layer_p["ln"], x, cfg.norm_eps)
+            y, h_new, tail_new = ssm_lib.ssm_decode_step(layer_p["ssm"], hn,
+                                                         h_st, tail, cfg)
+            h_new = jnp.where(act[:, None, None, None], h_new, h_st)
+            tail_new = jnp.where(act[:, None, None], tail_new, tail)
+            return constrain_batch(x + y), (h_new, tail_new)
+
+        x, (h_new, tails_new) = jax.lax.scan(
+            body, x, (params["layers"], jnp.moveaxis(rec["h"][1:], 0, 1),
+                      jnp.moveaxis(rec["conv"][1:], 0, 1)))
+        rec = {"h": rec["h"].at[1:].set(jnp.moveaxis(h_new, 0, 1)),
+               "conv": rec["conv"].at[1:].set(
+                   jnp.moveaxis(tails_new, 0, 1))}
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = _unembed(params, x, cfg)[:, 0]
+        return logits, {**cache, "rec": rec}
+
+    def make_body(window):
+        def body(x, xs):
+            layer_p, kp, vp = xs
+            h = rmsnorm(layer_p["ln1"], x, cfg.norm_eps)
+            o, kp, vp = attn.paged_decode_attention(
+                layer_p["attn"], h, kp, vp, page_table, seq_lens, active,
+                cfg, pages_bound, window=window,
+                pages_start=window_start if window else 0)
+            x = x + o
+            h = rmsnorm(layer_p["ln2"], x, cfg.norm_eps)
+            if cfg.n_experts > 0:
+                y, _ = moe_lib.moe_forward(layer_p["moe"], h, cfg)
+            else:
+                y = mlp(layer_p["mlp"], h)
+            return constrain_batch(x + y), (kp, vp)
+        return body
+
+    seg_k, seg_v = [], []
+    for w, i0, n in _attn_layer_runs(cfg):
+        x, (kps, vps) = jax.lax.scan(
+            make_body(w), x,
+            (_slice_layers(params["layers"], i0, n),
+             cache["k_pages"][i0:i0 + n], cache["v_pages"][i0:i0 + n]))
+        seg_k.append(kps)
+        seg_v.append(vps)
+    kps = seg_k[0] if len(seg_k) == 1 else jnp.concatenate(seg_k)
+    vps = seg_v[0] if len(seg_v) == 1 else jnp.concatenate(seg_v)
     x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
     logits = _unembed(params, x, cfg)[:, 0]
-    return logits, {"k_pages": kps, "v_pages": vps}
+    return logits, {**cache, "k_pages": kps, "v_pages": vps}
 
 
 def init_decode_cache(cfg, batch: int, max_seq: int):

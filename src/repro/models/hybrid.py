@@ -172,6 +172,169 @@ def hybrid_prefill(params, batch, cfg, max_seq: int | None = None):
     return logits, cache
 
 
+# ------------------------------------------------------- paged (continuous)
+def init_hybrid_paged_cache(cfg, num_pages: int, page_size: int):
+    """Paged KV pool for the hybrid stack's attention layers (one per
+    block): (n_blocks, num_pages, page_size, K, Dh) per tensor, page 0
+    reserved as scratch. The Mamba layers' state lives in the recurrent
+    pool (init_hybrid_recurrent_state), not here."""
+    if not cfg.supports_paged_kv:
+        raise ValueError(f"{cfg.name}: no paged serving path "
+                         f"({cfg.paged_unsupported_reason})")
+    n_blocks = cfg.n_layers // cfg.attn_every
+    kv = attn.init_paged_kv_cache(cfg, num_pages, page_size, n_blocks)
+    return {"k_pages": kv["k_pages"], "v_pages": kv["v_pages"]}
+
+
+def init_hybrid_recurrent_state(cfg, n_rows: int):
+    """Recurrent-state slabs for the hybrid stack's serving slots: SSD
+    state ``h`` (n_rows, n_blocks, n_mamba, H, P, N) fp32 and raw conv-tail
+    ``conv`` (n_rows, n_blocks, n_mamba, cw-1, di+2N). Row 0 is the
+    reserved scratch row; slot ``s`` owns row ``s + 1`` (see
+    serving.cache.RecurrentStatePool)."""
+    n_blocks = cfg.n_layers // cfg.attn_every
+    n_mamba = sum(1 for m, _ in _block_layout(cfg) if m == "mamba")
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    cw, di = cfg.ssm_conv_width, cfg.d_inner
+    return {
+        "h": jnp.zeros((n_rows, n_blocks, n_mamba, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_rows, n_blocks, n_mamba, cw - 1, di + 2 * N),
+                          dtype_of(cfg)),
+    }
+
+
+def hybrid_prefill_paged_chunk(params, cache, tokens, page_table, start,
+                               n_new, cfg, pages_bound=None, window_start=0,
+                               state_rows=None):
+    """One chunked-prefill step of the hybrid stack (continuous batching).
+
+    tokens: (B, C) int32 chunk per serving slot, PAD-filled past
+    ``n_new[b]``; page_table (B, MP) rows already cover positions
+    ``start .. start + n_new - 1``. Attention layers write the chunk's K/V
+    into the pool and attend causally by global position
+    (models.attention.paged_prefill_attention); Mamba layers advance the
+    gathered ``cache["rec"]`` rows (``state_rows`` (B,) int32; 0 = scratch
+    row for padding rows) through ``ssm_lib.ssm_prefill_chunk`` — a row
+    whose chunk starts at position 0 re-enters from zero state, so slot
+    reuse needs no host-side reset. Returns (x_last (B, 1, D), cache); the
+    LM head is applied by the engine only when a prompt finishes
+    (ModelBundle.lm_head). ``pages_bound``/``window_start``: static page-walk
+    bounds (hybrid attention layers are global, so ``window_start`` is
+    unused but kept for signature parity)."""
+    del window_start
+    B, C = tokens.shape
+    x = embed(params["embed"], tokens)
+    layout = _block_layout(cfg)
+    rec = cache["rec"]
+    fresh = (start == 0)
+    h0 = jnp.where(fresh[:, None, None, None, None, None], 0.0,
+                   rec["h"][state_rows])          # (B, nb, nm, H, P, N)
+    tails = jnp.where(fresh[:, None, None, None, None], 0.0,
+                      rec["conv"][state_rows]).astype(rec["conv"].dtype)
+    # scan over blocks: move the block axis in front of the batch axis
+    h0 = jnp.moveaxis(h0, 0, 1)                   # (nb, B, nm, ...)
+    tails = jnp.moveaxis(tails, 0, 1)
+
+    def block_fn(x, xs):
+        block_p, kp, vp, h_sts, tls = xs          # h_sts: (B, nm, ...)
+        jm = jmoe = jmlp = 0
+        new_states, new_tails = [], []
+        for (mixer, ffn) in layout:
+            if mixer == "attn":
+                h = rmsnorm(block_p["attn"]["ln1"], x, cfg.norm_eps)
+                o, kp, vp = attn.paged_prefill_attention(
+                    block_p["attn"]["attn"], h, kp, vp, page_table, start,
+                    n_new, cfg, pages_bound)
+                x = x + o
+            else:
+                p = _take(block_p["mamba"], jm)
+                h = rmsnorm(p["ln"], x, cfg.norm_eps)
+                y, h_new, tail_new = ssm_lib.ssm_prefill_chunk(
+                    p["ssm"], h, h_sts[:, jm], tls[:, jm], n_new, cfg)
+                new_states.append(h_new)
+                new_tails.append(tail_new)
+                x = x + y
+                jm += 1
+            x, _ = _apply_ffn(block_p, x, jmoe, jmlp, ffn == "moe", cfg)
+            if ffn == "moe":
+                jmoe += 1
+            else:
+                jmlp += 1
+        return constrain_batch(x), (kp, vp, jnp.stack(new_states, axis=1),
+                                    jnp.stack(new_tails, axis=1))
+
+    x, (kps, vps, states, new_tails) = jax.lax.scan(
+        block_fn, x, (params["blocks"], cache["k_pages"], cache["v_pages"],
+                      h0, tails))
+    rec = {"h": rec["h"].at[state_rows].set(jnp.moveaxis(states, 0, 1)),
+           "conv": rec["conv"].at[state_rows].set(
+               jnp.moveaxis(new_tails, 0, 1))}
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    last = jnp.clip(n_new - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last][:, None]                  # (B, 1, D)
+    return x_last, {"k_pages": kps, "v_pages": vps, "rec": rec}
+
+
+def hybrid_decode_step_paged(params, cache, token, page_table, seq_lens,
+                             active, cfg, pages_bound=None, window_start=0):
+    """One continuous-batching decode step of the hybrid stack.
+
+    token: (B, 1) int32 per-slot next token; page_table (B, MP), seq_lens
+    (B,), active (B,) bool from the engine's allocator. Attention layers
+    run the paged decode kernel over the block's page pool; Mamba layers
+    advance ``cache["rec"]`` rows 1..B (row 0 is scratch), and rows of
+    slots not in ``active`` keep their state unchanged so a decode dispatch
+    can never corrupt a mid-prefill slot. Returns (logits (B, V), cache)."""
+    del window_start
+    x = embed(params["embed"], token)
+    layout = _block_layout(cfg)
+    rec = cache["rec"]
+    act = active.reshape(-1)
+    h_all = jnp.moveaxis(rec["h"][1:], 0, 1)      # (nb, B, nm, ...)
+    t_all = jnp.moveaxis(rec["conv"][1:], 0, 1)
+
+    def block_fn(x, xs):
+        block_p, kp, vp, h_sts, tls = xs
+        jm = jmoe = jmlp = 0
+        new_states, new_tails = [], []
+        for (mixer, ffn) in layout:
+            if mixer == "attn":
+                h = rmsnorm(block_p["attn"]["ln1"], x, cfg.norm_eps)
+                o, kp, vp = attn.paged_decode_attention(
+                    block_p["attn"]["attn"], h, kp, vp, page_table,
+                    seq_lens, active, cfg, pages_bound)
+                x = x + o
+            else:
+                p = _take(block_p["mamba"], jm)
+                h = rmsnorm(p["ln"], x, cfg.norm_eps)
+                y, h_new, tail_new = ssm_lib.ssm_decode_step(
+                    p["ssm"], h, h_sts[:, jm], tls[:, jm], cfg)
+                h_new = jnp.where(act[:, None, None, None], h_new,
+                                  h_sts[:, jm])
+                tail_new = jnp.where(act[:, None, None], tail_new,
+                                     tls[:, jm])
+                new_states.append(h_new)
+                new_tails.append(tail_new)
+                x = x + y
+                jm += 1
+            x, _ = _apply_ffn(block_p, x, jmoe, jmlp, ffn == "moe", cfg)
+            if ffn == "moe":
+                jmoe += 1
+            else:
+                jmlp += 1
+        return constrain_batch(x), (kp, vp, jnp.stack(new_states, axis=1),
+                                    jnp.stack(new_tails, axis=1))
+
+    x, (kps, vps, states, tails) = jax.lax.scan(
+        block_fn, x, (params["blocks"], cache["k_pages"], cache["v_pages"],
+                      h_all, t_all))
+    rec = {"h": rec["h"].at[1:].set(jnp.moveaxis(states, 0, 1)),
+           "conv": rec["conv"].at[1:].set(jnp.moveaxis(tails, 0, 1))}
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, {"k_pages": kps, "v_pages": vps, "rec": rec}
+
+
 # --------------------------------------------------------------------- decode
 def init_hybrid_cache(cfg, batch: int, max_seq: int):
     n_blocks = cfg.n_layers // cfg.attn_every

@@ -28,21 +28,31 @@ class ModelBundle:
     prefill: Callable
     decode_step: Callable
     init_cache: Callable
-    # Paged-KV (continuous-batching) serving path; None where the family
-    # doesn't support it (see ArchConfig.supports_paged_kv). Selected by
-    # cfg.cache_layout="paged" / the ContinuousEngine.
+    # Paged (continuous-batching) serving path; None where the family
+    # doesn't support it (see ArchConfig.paged_unsupported_reason).
+    # Selected by cfg.cache_layout="paged" / the ContinuousEngine.
+    # decode_step_paged(params, cache, token, page_table, seq_lens, active,
+    # pages_bound=None, window_start=0) -> (logits (B, V), cache). ``cache``
+    # is {"k_pages", "v_pages"} plus, for recurrent families, "rec" (the
+    # RecurrentStatePool's pytree). ``pages_bound``/``window_start`` are the
+    # engine's static page-walk bounds (live end page / first window page).
     decode_step_paged: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
     # Chunked paged prefill: prefill_paged_chunk(params, cache, tokens,
-    # page_table, start, n_new, pages_bound=None) -> (x_last (B, 1, D),
-    # cache). Admits prompts chunk-by-chunk (possibly several slots stacked
-    # per call) so decode slots never stall on a long prompt; the LM head is
-    # applied separately (lm_head) so non-final chunks skip the vocab
-    # projection entirely. ``pages_bound`` (also on decode_step_paged) is
-    # the engine's static live bound on the attention page walk.
+    # page_table, start, n_new, pages_bound=None, window_start=0,
+    # state_rows=None) -> (x_last (B, 1, D), cache). Admits prompts
+    # chunk-by-chunk (possibly several slots stacked per call) so decode
+    # slots never stall on a long prompt; ``state_rows`` (B,) int32 names
+    # each packed row's recurrent-state pool row (0 = scratch; recurrent
+    # families only). The LM head is applied separately (lm_head) so
+    # non-final chunks skip the vocab projection entirely.
     prefill_paged_chunk: Optional[Callable] = None
     # lm_head(params, x (B, S, D)) -> logits (B, S, V)
     lm_head: Optional[Callable] = None
+    # init_recurrent_state(n_rows) -> pytree with leading row axis: per-slot
+    # SSD/conv state slabs for ssm/hybrid serving (row 0 reserved as
+    # scratch); None for pure-attention stacks.
+    init_recurrent_state: Optional[Callable] = None
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -57,6 +67,29 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
             init_cache=lambda bs, ms: encdec.init_encdec_cache(cfg, bs, ms),
         )
     if cfg.family == "hybrid":
+        paged = {}
+        if cfg.supports_paged_kv:
+            paged = dict(
+                decode_step_paged=lambda p, c, t, page_table, seq_lens,
+                    active, pages_bound=None, window_start=0:
+                    hybrid.hybrid_decode_step_paged(p, c, t, page_table,
+                                                    seq_lens, active, cfg,
+                                                    pages_bound,
+                                                    window_start),
+                init_paged_cache=lambda num_pages, page_size=None:
+                    hybrid.init_hybrid_paged_cache(
+                        cfg, num_pages, page_size or cfg.kv_page_size),
+                prefill_paged_chunk=lambda p, c, t, page_table, start, n_new,
+                    pages_bound=None, window_start=0, state_rows=None:
+                    hybrid.hybrid_prefill_paged_chunk(p, c, t, page_table,
+                                                      start, n_new, cfg,
+                                                      pages_bound,
+                                                      window_start,
+                                                      state_rows),
+                lm_head=lambda p, x: decoder._unembed(p, x, cfg),
+                init_recurrent_state=lambda n_rows:
+                    hybrid.init_hybrid_recurrent_state(cfg, n_rows),
+            )
         return ModelBundle(
             cfg=cfg,
             init=lambda key: hybrid.init_hybrid(key, cfg),
@@ -65,26 +98,32 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
             decode_step=lambda p, c, t, windowed=False:
                 hybrid.hybrid_decode_step(p, c, t, cfg, windowed=windowed),
             init_cache=lambda bs, ms: hybrid.init_hybrid_cache(cfg, bs, ms),
+            **paged,
         )
     # dense / moe / ssm / vlm all share the decoder-only path
     paged = {}
     if cfg.supports_paged_kv:
         paged = dict(
             decode_step_paged=lambda p, c, t, page_table, seq_lens, active,
-                pages_bound=None:
+                pages_bound=None, window_start=0:
                 decoder.decoder_decode_step_paged(p, c, t, page_table,
                                                   seq_lens, active, cfg,
-                                                  pages_bound),
+                                                  pages_bound, window_start),
             init_paged_cache=lambda num_pages, page_size=None:
                 decoder.init_paged_decode_cache(
                     cfg, num_pages, page_size or cfg.kv_page_size),
             prefill_paged_chunk=lambda p, c, t, page_table, start, n_new,
-                pages_bound=None:
+                pages_bound=None, window_start=0, state_rows=None:
                 decoder.decoder_prefill_paged_chunk(p, c, t, page_table,
                                                     start, n_new, cfg,
-                                                    pages_bound),
+                                                    pages_bound,
+                                                    window_start,
+                                                    state_rows),
             lm_head=lambda p, x: decoder._unembed(p, x, cfg),
         )
+        if cfg.family == "ssm":
+            paged["init_recurrent_state"] = lambda n_rows: \
+                decoder.init_decoder_recurrent_state(cfg, n_rows)
     return ModelBundle(
         cfg=cfg,
         init=lambda key: decoder.init_decoder(key, cfg),

@@ -55,11 +55,16 @@ def _causal_conv(xBC, conv_w):
     return jax.nn.silu(out)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False):
+def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False,
+                h0=None):
     """Chunked SSD. Shapes: x (b, S, H, P); dt (b, S, H); A (H,);
     B, C (b, S, N) [single group broadcast over heads]. Returns (y, final_state).
 
     Math: h_t = exp(dt_t*A) h_{t-1} + dt_t * B_t x_t ; y_t = C_t^T h_t.
+
+    ``h0``: (b, H, P, N) fp32 state entering the sequence (None = zeros) —
+    chunked-prefill serving streams a prompt through several calls, carrying
+    ``final_state`` of one call in as the next call's ``h0``.
 
     The jnp path scans SEQUENTIALLY over chunks so only one chunk's (l, l, H)
     decay tensor is live at a time (memory-bounded, mirrors the Pallas
@@ -69,6 +74,9 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False):
     b, S, H, P = x.shape
     N = B.shape[-1]
     nc = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    h0 = h0.astype(jnp.float32)
     xs = x.reshape(b, nc, chunk, H, P)
     dts = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
     Bs = B.reshape(b, nc, chunk, N)
@@ -87,7 +95,6 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False):
             h_new = h * dec[..., None, None] + st
             return h_new, h  # emit state entering the chunk
 
-        h0 = jnp.zeros((b, H, P, N), jnp.float32)
         final, h_prev = jax.lax.scan(
             step, h0, (jnp.moveaxis(states, 1, 0),
                        jnp.moveaxis(chunk_decay, 1, 0)))
@@ -111,7 +118,6 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, use_pallas: bool = False):
         h_new = h * dec[..., None, None] + st
         return h_new, (y_diag + y_off).astype(x.dtype)
 
-    h0 = jnp.zeros((b, H, P, N), jnp.float32)
     final, ys = jax.lax.scan(
         chunk_step, h0,
         (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dts, 1, 0),
@@ -181,6 +187,52 @@ def init_ssm_state(cfg, batch: int, n_layers: int):
         "h": jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
         "conv": jnp.zeros((n_layers, batch, cw - 1, di + 2 * N), dtype_of(cfg)),
     }
+
+
+def ssm_prefill_chunk(params, x, h0, conv_tail, n_new, cfg):
+    """One chunked-prefill step of the SSD mixer (continuous serving).
+
+    x: (B, C, D) — a fixed-width chunk of prompt activations per serving
+    slot, of which the first ``n_new[b]`` rows are real tokens (the rest is
+    bucket padding); h0: (B, H, P, N) fp32 recurrent state entering the
+    chunk; conv_tail: (B, cw-1, di+2N) raw (pre-silu) conv inputs preceding
+    the chunk — zeros at the start of a prompt. Returns
+    (y (B, C, D), h_final, conv_tail_new).
+
+    Padding rows must not advance the state: their dt is zeroed, which makes
+    both the decay (exp(0·A) = 1) and the update (dt·B·x = 0) the identity,
+    and the new conv tail is gathered to end at each row's last REAL token
+    (an n_new=0 row keeps its tail verbatim). Streaming a prompt chunk by
+    chunk through this function is exactly the full-sequence
+    ``ssm_forward`` up to fp accumulation order.
+    """
+    Bsz, C, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    cw = cfg.ssm_conv_width
+    zxbcdt = x @ params["w_in"]
+    z, xBC_raw, dt_raw = _split_proj(zxbcdt, cfg)
+    # causal conv with carried left context: taps end at chunk position c
+    buf = jnp.concatenate([conv_tail, xBC_raw], axis=1)   # (B, cw-1+C, ch)
+    xBC = jax.nn.silu(sum(buf[:, i:i + C, :] * params["conv_w"][i]
+                          for i in range(cw)))
+    xs = xBC[..., :di].reshape(Bsz, C, H, P)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    valid = jnp.arange(C)[None, :] < n_new[:, None]       # (B, C)
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    A = -jnp.exp(params["A_log"])
+    y, h_final = ssd_chunked(xs, dt, A, Bmat, Cmat, C,
+                             use_pallas=cfg.use_pallas, h0=h0)
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, C, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    # new tail: the cw-1 raw inputs ending at each row's last real token —
+    # buf index n_new-1 + (cw-1) is that token, so the tail spans
+    # buf[n_new .. n_new+cw-2]
+    idx = n_new[:, None] + jnp.arange(cw - 1)[None, :]    # (B, cw-1)
+    tail_new = jnp.take_along_axis(buf, idx[..., None], axis=1)
+    return y @ params["w_out"], h_final, tail_new
 
 
 def ssm_decode_step(params, x_t, h, conv_tail, cfg):

@@ -1,7 +1,7 @@
 from .generate import build_generate_fn, sample_responses
 from .engine import (ContinuousEngine, ContinuousStats, Engine, ServeStats,
                      make_engine)
-from .cache import CacheStats, PagedKVCache
+from .cache import CacheStats, PagedKVCache, RecurrentStatePool
 from .scheduler import ContinuousScheduler, Request
 from .pool import ContinuousPoolEngine, PoolResult, build_fused_pool_step
 from .hybrid import (ContinuousHybridEngine, HybridEngine, HybridResult,

@@ -1,4 +1,5 @@
-"""Paged KV cache: a block-pool allocator over a shared device page pool.
+"""Paged serving state: a block-pool KV allocator over a shared device page
+pool, plus per-slot recurrent-state slabs for SSM/hybrid layers.
 
 Dense serving gives every request a (max_seq, K, Dh) slab per layer — memory
 scales with the *worst-case* context. The paged cache instead carves the
@@ -10,11 +11,19 @@ table as device arrays, so the step stays shape-stable while occupancy churns.
 
 Page 0 is reserved: inactive slots' writes and fully-masked reads land there,
 so the jitted step never needs a branch on slot liveness.
+
+SSM/hybrid layers carry state that is per-slot and CONSTANT-SIZE (an SSD
+state matrix plus a conv tail), not per-token — pages are the wrong shape
+for it. ``RecurrentStatePool`` holds those slabs beside the page pool, one
+row per slot plus a reserved scratch row 0 that mirrors the page pool's
+scratch page: packed-prefill padding rows read and write row 0, so the
+jitted step never branches on row liveness either.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -32,6 +41,45 @@ class CacheStats:
     @property
     def high_water_tokens(self) -> int:
         return self.high_water_pages * self.page_size
+
+
+class RecurrentStatePool:
+    """Per-slot recurrent-state slabs for SSM/hybrid serving.
+
+    ``bundle.init_recurrent_state(n_rows)`` builds the device pytree (every
+    leaf has a leading row axis of ``n_slots + 1``); the engine reassigns
+    ``self.state`` with the jit step's updated (donated) arrays each step,
+    exactly like ``PagedKVCache.pool``.
+
+    Row convention: row 0 is the reserved scratch row — packed-prefill
+    padding rows gather and scatter it so the jitted step needs no
+    liveness branch — and slot ``s`` owns row ``s + 1`` (``rows``). No
+    host-side reset exists or is needed on slot reuse: the model's chunked
+    prefill re-enters a row from zero state whenever its chunk starts at
+    position 0 (a fresh prompt), and the decode step freezes rows whose
+    slot is not active, so a retired slot's stale state is dead the moment
+    its successor admits.
+    """
+
+    def __init__(self, bundle, n_slots: int):
+        if bundle.init_recurrent_state is None:
+            raise ValueError(f"{bundle.cfg.name}: architecture keeps no "
+                             "recurrent serving state")
+        self.n_slots = n_slots
+        self.state = bundle.init_recurrent_state(n_slots + 1)
+
+    def rows(self, slots) -> np.ndarray:
+        """State-pool row ids for ``slots`` (np.int32); pad with 0 (the
+        scratch row) for packed-batch padding rows."""
+        return np.asarray(slots, np.int32) + 1
+
+    @property
+    def state_bytes(self) -> int:
+        """Device bytes held by the state slabs (all rows, scratch
+        included) — constant for the engine's lifetime, the recurrent
+        analogue of the KV pool's capacity."""
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(self.state))
 
 
 class PagedKVCache:
@@ -61,6 +109,8 @@ class PagedKVCache:
 
     # ------------------------------------------------------------- allocation
     def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` tokens (ceil division by
+        ``page_size``)."""
         return -(-n_tokens // self.page_size)
 
     def can_admit(self, n_tokens: int, reserve: int = 0) -> bool:
@@ -72,6 +122,7 @@ class PagedKVCache:
         return n <= len(self._free) - reserve and n <= self.max_pages_per_slot
 
     def owned_pages(self, slot: int) -> int:
+        """Pages currently allocated to ``slot`` (0 for a free slot)."""
         return len(self._owned[slot])
 
     def alloc_slot(self, slot: int, n_tokens: int):
@@ -171,12 +222,18 @@ class PagedKVCache:
 
     @property
     def bytes_per_page(self) -> int:
+        """Device bytes one page costs across every attention layer (K and
+        V both). 0 for attention-free stacks, whose pools have zero
+        layers."""
         k = self.pool["k_pages"]  # (L, P, ps, K, Dh) x2 for k and v
         per_token = k.shape[0] * k.shape[3] * k.shape[4] * 2 * k.dtype.itemsize
         return per_token * self.page_size
 
     @property
     def high_water_bytes(self) -> int:
+        """Worst-moment KV footprint of the session, in bytes (high-water
+        pages x bytes_per_page) — the column benchmarks compare against the
+        dense engine's slab."""
         return self.stats.high_water_pages * self.bytes_per_page
 
     @property

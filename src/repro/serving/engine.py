@@ -74,6 +74,18 @@ engine-wide static ``max_pages_per_slot`` width with masked scratch-page
 reads. ``walk_bound="static"`` restores the full-width walk (the parity
 baseline).
 
+Layer kinds beyond uniform-global attention (gemma3/jamba-style edge
+tiers): sliding-window layers mask the paged kernels by global position
+with a static per-layer ``window`` and additionally START their walk at
+the dispatch's first live window page (``window_start``, floored to a
+power of two — see _window_start), so window compute scales with the
+window, not the resident prefix. SSM/hybrid layers keep constant-size
+per-slot recurrent state (SSD matrix + conv tail) in a
+``RecurrentStatePool`` beside the page pool; it streams through chunked
+prefill (one-shot admission is refused), padding rows use the reserved
+scratch row 0, and decode freezes rows of inactive slots. All of it stays
+greedy-exact vs the dense engine (tests/test_window_ssm_serving.py).
+
 ``Engine.stats`` exposes compile counts and padding waste so bucket
 recompiles show up in benchmarks; ``ContinuousEngine.stats`` + its cache
 stats expose occupancy, admission stalls, prefill chunk/dispatch/compile
@@ -91,7 +103,7 @@ import numpy as np
 
 from repro.data import tokenizer as tok
 from repro.models.model import ModelBundle
-from .cache import PagedKVCache
+from .cache import PagedKVCache, RecurrentStatePool
 from .generate import build_generate_fn, _sample
 from .scheduler import (DECODING, PREFILLING, ContinuousScheduler, Request)
 
@@ -190,9 +202,10 @@ class Engine:
 def make_engine(bundle: ModelBundle, params, **kw):
     """Engine factory honouring the config's cache-layout flag:
     ``cfg.cache_layout == "paged"`` selects the continuous-batching paged
-    engine (when the architecture supports it — see
-    ArchConfig.supports_paged_kv), anything else the dense-batch engine.
-    Continuous-only kwargs (n_slots, max_seq, ...) are dropped for dense."""
+    engine (when the architecture supports it — decoder-only stacks of any
+    mixer mix; see ArchConfig.paged_unsupported_reason), anything else the
+    dense-batch engine. Continuous-only kwargs (n_slots, max_seq, ...) are
+    dropped for dense."""
     if bundle.cfg.cache_layout == "paged" and bundle.decode_step_paged:
         return ContinuousEngine(bundle, params, **kw)
     return Engine(bundle, params, **{k: v for k, v in kw.items()
@@ -216,9 +229,10 @@ class ContinuousStats:
     prefill_chunks: int = 0      # slot-chunks advanced (one slot, one chunk)
     prefill_dispatches: int = 0  # prefill kernel launches (packed: one per
                                  # (batch, width, bound) bucket, <= chunks)
-    prefill_compiles: int = 0    # distinct (batch, width, bound) prefill
-                                 # shapes traced
-    decode_compiles: int = 0     # distinct live decode page bounds traced
+    prefill_compiles: int = 0    # distinct (batch, width, bound, wstart)
+                                 # prefill shapes traced
+    decode_compiles: int = 0     # distinct (bound, wstart) decode page
+                                 # walks traced
     prefill_stalls: int = 0      # chunk extensions deferred for pool space
     occupancy_sum: int = 0       # busy slots (decoded + prefill-advanced)
                                  # summed over steps
@@ -231,12 +245,25 @@ class ContinuousStats:
 
 
 class ContinuousEngine:
-    """Step-driven continuous-batching engine over a paged KV cache.
+    """Step-driven continuous-batching engine over a paged KV cache (plus,
+    for SSM/hybrid stacks, a per-slot recurrent-state pool).
 
     ``submit`` enqueues a request (its own ``max_new_tokens`` cap allowed);
     ``step`` advances the world by one decode token per occupied slot,
     admitting and retiring as it goes; ``run`` drains the queue. ``serve``
     is the batch-API compatibility wrapper.
+
+    Units throughout: prompts/outputs are counted in TOKENS, cache
+    capacity/bounds in PAGES (``page_size`` tokens each), progress in
+    engine STEPS (one step = at most one decode token per live slot).
+
+    Greedy-exactness guarantee: at temperature 0, for any admission
+    interleaving, the engine emits per request exactly the tokens the
+    dense-batch ``Engine`` emits — chunked/packed prefill, live-bounded
+    and window-started page walks, and recurrent-state streaming are
+    dispatch optimisations, never semantic changes (parity tests:
+    tests/test_continuous_serving.py, tests/test_chunked_prefill.py,
+    tests/test_window_ssm_serving.py).
     """
 
     def __init__(self, bundle: ModelBundle, params, max_new_tokens: int = 16,
@@ -259,6 +286,10 @@ class ContinuousEngine:
         if num_pages is None:
             num_pages = 1 + n_slots * mp   # page 0 reserved
         self.cache = PagedKVCache(bundle, n_slots, num_pages, ps, mp)
+        # SSM/hybrid stacks keep constant-size per-slot recurrent state
+        # beside the page pool (serving.cache.RecurrentStatePool)
+        self.rstate = RecurrentStatePool(bundle, n_slots) \
+            if bundle.init_recurrent_state is not None else None
         self.sched = ContinuousScheduler(n_slots)
         self.stats = ContinuousStats()
         self.n_slots = n_slots
@@ -277,6 +308,13 @@ class ContinuousEngine:
                              "(0 disables chunking)")
         if bundle.prefill_paged_chunk is None or bundle.lm_head is None:
             prefill_chunk = 0
+        if self.rstate is not None and prefill_chunk == 0:
+            # one-shot admission scatters a dense KV cache into pages;
+            # recurrent state has no page-shaped form to scatter, so
+            # SSM/hybrid prompts must stream through chunked prefill
+            raise ValueError(f"{bundle.cfg.name}: recurrent-state stacks "
+                             "admit through chunked prefill; prefill_chunk "
+                             "must be > 0")
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget if prefill_budget is not None \
             else n_slots * prefill_chunk
@@ -297,8 +335,8 @@ class ContinuousEngine:
             raise ValueError(f"walk_bound={walk_bound!r}: expected 'live' "
                              "or 'static'")
         self.walk_bound = walk_bound
-        self._chunk_shapes: set = set()   # (batch, width, bound) traced
-        self._decode_bounds: set = set()  # live decode page bounds traced
+        self._chunk_shapes: set = set()   # (batch, width, bound, wstart)
+        self._decode_bounds: set = set()  # (bound, wstart) pairs traced
         self._next_in = np.full((n_slots,), tok.PAD, np.int32)
         self._seed = seed
         self._rng_salt = rng_salt
@@ -321,35 +359,45 @@ class ContinuousEngine:
     def _build_decode(self):
         bundle, temperature = self.bundle, self.temperature
 
-        def fn(params, k_pages, v_pages, token, page_table, seq_lens, active,
-               key, pages_bound):
+        def fn(params, k_pages, v_pages, rec, token, page_table, seq_lens,
+               active, key, pages_bound, window_start):
+            cache = {"k_pages": k_pages, "v_pages": v_pages}
+            if rec is not None:
+                cache["rec"] = rec
             logits, cache = bundle.decode_step_paged(
-                params, {"k_pages": k_pages, "v_pages": v_pages}, token,
-                page_table, seq_lens, active, pages_bound=pages_bound)
+                params, cache, token, page_table, seq_lens, active,
+                pages_bound=pages_bound, window_start=window_start)
             nxt = _sample(key, logits, temperature)
             nxt = jnp.where(active, nxt, jnp.int32(tok.PAD))
-            return nxt, cache["k_pages"], cache["v_pages"]
+            return nxt, cache["k_pages"], cache["v_pages"], cache.get("rec")
 
-        # donate the pools: the step updates them in place instead of
-        # copying the whole pool per decoded token (engine reassigns
-        # cache.pool from the outputs immediately). pages_bound is static:
-        # one trace per bucketed live bound
-        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(8,))
+        # donate the pools (and the recurrent-state slabs): the step
+        # updates them in place instead of copying per decoded token
+        # (engine reassigns cache.pool / rstate.state from the outputs
+        # immediately). pages_bound and window_start are static: one trace
+        # per bucketed (live bound, window start) pair
+        return jax.jit(fn, donate_argnums=(1, 2, 3), static_argnums=(9, 10))
 
     def _build_prefill_chunk(self):
         bundle = self.bundle
 
-        def fn(params, k_pages, v_pages, tokens, page_table, start, n_new,
-               pages_bound):
+        def fn(params, k_pages, v_pages, rec, tokens, page_table, start,
+               n_new, state_rows, pages_bound, window_start):
+            cache = {"k_pages": k_pages, "v_pages": v_pages}
+            if rec is not None:
+                cache["rec"] = rec
             x_last, cache = bundle.prefill_paged_chunk(
-                params, {"k_pages": k_pages, "v_pages": v_pages}, tokens,
-                page_table, start, n_new, pages_bound=pages_bound)
-            return x_last, cache["k_pages"], cache["v_pages"]
+                params, cache, tokens, page_table, start, n_new,
+                pages_bound=pages_bound, window_start=window_start,
+                state_rows=state_rows)
+            return x_last, cache["k_pages"], cache["v_pages"], \
+                cache.get("rec")
 
         # donated pools: the chunk's K/V are written into the pool pages in
-        # place — this is what retires the one-shot path's host _scatter.
-        # pages_bound is static: one trace per bucketed live bound
-        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(7,))
+        # place — this is what retires the one-shot path's host _scatter —
+        # and recurrent rows advance in place the same way. pages_bound and
+        # window_start are static: one trace per bucketed pair
+        return jax.jit(fn, donate_argnums=(1, 2, 3), static_argnums=(9, 10))
 
     def _pages_bound(self, max_tokens: int) -> int:
         """Static page bound for a dispatch whose live contexts reach at
@@ -361,6 +409,22 @@ class ContinuousEngine:
         if self.walk_bound != "live":
             return mp
         return min(_bucket(self.cache.pages_for(max(max_tokens, 1))), mp)
+
+    def _window_start(self, min_first_key: int) -> int:
+        """Static first page of the sliding-window layers' page walk, for a
+        dispatch whose earliest in-window key position (over the rows
+        actually dispatched) is ``min_first_key``: the containing page
+        FLOORED to a power of two, so distinct (bound, start) compiles stay
+        O(log^2 max_pages) and the walk always covers every row's window.
+        0 when the stack has no window layers or walks are static."""
+        if not self.bundle.cfg.has_window_layers \
+                or self.walk_bound != "live" or min_first_key <= 0:
+            return 0
+        page = min_first_key // self.cache.page_size
+        b = 1
+        while b * 2 <= page:
+            b *= 2
+        return b if page else 0
 
     @staticmethod
     def _scatter_impl(k_pool, v_pool, ks, vs, page_ids):
@@ -396,6 +460,12 @@ class ContinuousEngine:
     # -------------------------------------------------------------- requests
     def submit(self, tokens: np.ndarray, max_new_tokens: Optional[int] = None
                ) -> Request:
+        """Enqueue one request. ``tokens``: 1-d int32 prompt (no padding);
+        ``max_new_tokens``: per-request output cap in tokens (None = the
+        engine default). Rejects requests that could never complete: empty
+        prompts, prompts past the per-slot context cap
+        (max_pages_per_slot * page_size tokens), and prompts whose
+        worst-case page footprint exceeds the whole pool."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if len(tokens) == 0:
             raise ValueError("empty prompt: a request needs at least one "
@@ -515,10 +585,12 @@ class ContinuousEngine:
         """Launch ONE prefill kernel over the stacked chunks of ``group``
         ((req, n_new) rows sharing the bucketed chunk ``width``), the batch
         padded to a power of two so packed compiles stay bounded. Padding
-        rows carry n_new=0 and an all-zero page-table row, so their K/V
-        writes land on the reserved scratch page and their attention is
-        fully masked. The page walk is bounded by the group's live maximum
-        context (see _pages_bound)."""
+        rows carry n_new=0, an all-zero page-table row, and state row 0, so
+        their K/V writes land on the reserved scratch page, their attention
+        is fully masked, and their recurrent-state writes land on the
+        reserved scratch row. The page walk is bounded by the group's live
+        maximum context (see _pages_bound); sliding-window runs may start
+        it at the group's first live window page (see _window_start)."""
         B = _bucket(len(group))
         mp = self.cache.max_pages_per_slot
         chunk = np.full((B, width), tok.PAD, np.int32)
@@ -527,20 +599,31 @@ class ContinuousEngine:
         pt = np.zeros((B, mp), np.int32)
         start = np.zeros((B,), np.int32)
         n_new = np.zeros((B,), np.int32)
+        rows = np.zeros((B,), np.int32)          # 0 = scratch state row
         for i, (req, n) in enumerate(group):
             chunk[i, :n] = req.tokens[req.prefill_pos:req.prefill_pos + n]
             pt[i] = self.cache.page_table[req.slot]
             start[i] = req.prefill_pos
             n_new[i] = n
+            rows[i] = req.slot + 1
         bound = self._pages_bound(int((start + n_new).max()))
-        if (B, width, bound) not in self._chunk_shapes:
-            self._chunk_shapes.add((B, width, bound))
+        # earliest position any REAL row's first chunk query can see under
+        # the window: min(start) - (window - 1)
+        w = self.bundle.cfg.sliding_window
+        wstart = self._window_start(
+            int(start[:len(group)].min()) - max(w - 1, 0))
+        if (B, width, bound, wstart) not in self._chunk_shapes:
+            self._chunk_shapes.add((B, width, bound, wstart))
             self.stats.prefill_compiles += 1
-        x_last, kp, vp = self._prefill_chunk_fn(
+        rec = self.rstate.state if self.rstate is not None else None
+        x_last, kp, vp, rec = self._prefill_chunk_fn(
             self.params, self.cache.pool["k_pages"],
-            self.cache.pool["v_pages"], jnp.asarray(chunk), jnp.asarray(pt),
-            jnp.asarray(start), jnp.asarray(n_new), bound)
+            self.cache.pool["v_pages"], rec, jnp.asarray(chunk),
+            jnp.asarray(pt), jnp.asarray(start), jnp.asarray(n_new),
+            jnp.asarray(rows), bound, wstart)
         self.cache.pool = {"k_pages": kp, "v_pages": vp}
+        if self.rstate is not None:
+            self.rstate.state = rec
         self.stats.prefill_dispatches += 1
         finishing = []
         for i, (req, n) in enumerate(group):
@@ -661,17 +744,26 @@ class ContinuousEngine:
             # exceed the bound; their output is garbage the step masks
             bound = self._pages_bound(
                 int(self.cache.seq_lens[steppable].max()) + 1)
-            if bound not in self._decode_bounds:
-                self._decode_bounds.add(bound)
+            # sliding-window runs start their walk at the steppable slots'
+            # first live window page: the earliest in-window key of slot b
+            # is (seq_lens[b] + 1) - window
+            wstart = self._window_start(
+                int(self.cache.seq_lens[steppable].min()) + 1
+                - self.bundle.cfg.sliding_window)
+            if (bound, wstart) not in self._decode_bounds:
+                self._decode_bounds.add((bound, wstart))
                 self.stats.decode_compiles += 1
+            rec = self.rstate.state if self.rstate is not None else None
             # jnp.array (copy): _next_in is mutated below while the
             # dispatched step may still be reading it (CPU zero-copy alias)
-            nxt, kp, vp = self._decode(
+            nxt, kp, vp, rec = self._decode(
                 self.params, self.cache.pool["k_pages"],
-                self.cache.pool["v_pages"],
+                self.cache.pool["v_pages"], rec,
                 jnp.array(self._next_in[:, None]), pt, sl,
-                jnp.asarray(active), self._next_key(), bound)
+                jnp.asarray(active), self._next_key(), bound, wstart)
             self.cache.pool = {"k_pages": kp, "v_pages": vp}
+            if self.rstate is not None:
+                self.rstate.state = rec
             self.cache.seq_lens[steppable] += 1
             nxt = np.asarray(nxt)
             for slot in steppable:
@@ -714,8 +806,10 @@ class ContinuousEngine:
     # ----------------------------------------------------------- compat API
     def serve(self, query_tokens: np.ndarray, seed: int = 0
               ) -> tuple[np.ndarray, np.ndarray]:
-        """Batch-API wrapper: submit every row, drain, return
-        (responses (N, T), lengths (N,)) like ``Engine.serve``."""
+        """Batch-API wrapper: submit every row of ``query_tokens`` (N, L)
+        int32, drain, return (responses (N, T) int32 PAD-tailed, lengths
+        (N,) generated-token counts) like ``Engine.serve`` — elementwise
+        identical to it at temperature 0."""
         self.reseed(seed)
         reqs = [self.submit(row) for row in query_tokens]
         self.run()

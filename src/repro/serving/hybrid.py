@@ -121,8 +121,9 @@ class ContinuousHybridEngine:
         return reqs, tier_idx == 0, scores
 
     def step(self) -> List[Request]:
-        """Advance both engines by one decode step each (no cross-engine
-        join). Returns the requests retired this step."""
+        """Advance both engines by one full step each — admission, prefill
+        chunks, one decode token per live slot, retirement — with no
+        cross-engine join. Returns the requests retired this step."""
         return self.pool.step()
 
     def run(self) -> List[Request]:

@@ -144,8 +144,10 @@ class ContinuousPoolEngine:
         return out
 
     def step(self) -> List[Request]:
-        """Advance every engine by one decode step each, cheapest first (no
-        cross-engine join). Returns the requests retired this step."""
+        """Advance every engine by one full step each (admission, packed
+        prefill chunks, one decode token per DECODING slot, retirement —
+        see ContinuousEngine.step), cheapest tier first, with no
+        cross-engine join. Returns the requests retired this step."""
         retired: List[Request] = []
         for eng in self._distinct_engines():
             if eng.sched.has_work:

@@ -74,6 +74,7 @@ class ContinuousScheduler:
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0,1,..
 
     def submit(self, req: Request) -> Request:
+        """Enqueue ``req`` (FIFO) and stamp its submission wall time."""
         req.submit_t = time.time()
         self.pending.append(req)
         return req
@@ -84,9 +85,12 @@ class ContinuousScheduler:
 
     @property
     def has_work(self) -> bool:
+        """True while anything is queued or occupying a slot."""
         return bool(self.pending or self.running)
 
     def peek_pending(self) -> Optional[Request]:
+        """Head-of-queue request without dequeuing (admission control
+        inspects its prompt length first), or None."""
         return self.pending[0] if self.pending else None
 
     def admit(self) -> Request:

@@ -1,0 +1,67 @@
+"""Config-completeness matrix: every architecture in ``repro.configs``
+either serves through ``ContinuousEngine`` (admit, prefill, decode a few
+steps, retire) or is explicitly marked unsupported with a reason.
+
+This is the contract ISSUE/ROADMAP promise: no config silently falls off
+the continuous serving path. A new config that neither serves nor declares
+a ``paged_unsupported_reason`` fails here.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import tokenizer as tok
+from repro.models import build_model
+from repro.serving import ContinuousEngine
+
+# Architectures the continuous paged engine cannot serve, and why. Keyed by
+# registry id; the reason must match the config's own declaration.
+UNSUPPORTED = {
+    # encoder output is fixed cross-attention memory, not a per-token cache
+    "whisper-large-v3": "encoder-decoder",
+    # stub frontend prepends embeddings outside token accounting
+    "internvl2-26b": "frontend",
+}
+
+
+def _serve_cfg(name):
+    """Reduced CPU-runnable variant with the tiny test vocabulary and the
+    paged layout selected."""
+    return dataclasses.replace(
+        get_config(name).reduced(), vocab_size=tok.VOCAB_SIZE,
+        vocab_pad_multiple=16, cache_layout="paged")
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_every_config_serves_or_declares_unsupported(name):
+    cfg = _serve_cfg(name)
+    if name in UNSUPPORTED:
+        assert not cfg.supports_paged_kv
+        assert UNSUPPORTED[name].split("-")[0] in cfg.paged_unsupported_reason
+        assert build_model(cfg).decode_step_paged is None
+        return
+    assert cfg.supports_paged_kv, (name, cfg.paged_unsupported_reason)
+    bundle = build_model(cfg)
+    assert bundle.decode_step_paged is not None, name
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ContinuousEngine(bundle, params, max_new_tokens=4, n_slots=2,
+                           max_seq=32)
+    rng = np.random.default_rng(1)
+    q = rng.integers(4, tok.VOCAB_SIZE, (2, 7)).astype(np.int32)
+    out, lens = eng.serve(q)  # admit + chunked prefill + >= 4 decode steps
+    assert out.shape == (2, 4) and (lens >= 1).all(), (name, lens)
+    assert eng.stats.retired == 2
+    # recurrent families allocated their state pool; attention families
+    # must not pay for one
+    assert (eng.rstate is not None) == cfg.has_recurrent_layers, name
+
+
+def test_unsupported_list_matches_config_declarations():
+    """UNSUPPORTED must name exactly the configs that declare a reason —
+    keeping the marker list honest in both directions."""
+    declared = {n for n in ARCH_IDS
+                if _serve_cfg(n).paged_unsupported_reason is not None}
+    assert declared == set(UNSUPPORTED)

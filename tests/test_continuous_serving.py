@@ -135,13 +135,18 @@ def test_continuous_rejects_oversized_prompt_and_unsupported_family():
                            num_pages=2)               # 1 usable page
     with pytest.raises(ValueError):
         ce2.submit(np.full((12,), 5, np.int32))       # needs 2 pages
+    # ssm stacks serve continuously since the recurrent-state pool, but
+    # their state streams in through chunked prefill — one-shot admission
+    # has no page-shaped state to scatter
     scfg = tiny_cfg("ssm")
     sm = build_model(scfg)
-    assert sm.decode_step_paged is None
+    assert sm.decode_step_paged is not None
     with pytest.raises(ValueError):
-        ContinuousEngine(sm, sm.init(jax.random.PRNGKey(0)))
+        ContinuousEngine(sm, sm.init(jax.random.PRNGKey(0)),
+                         prefill_chunk=0)
     # vision-frontend configs need embeds the engine doesn't supply
     assert not tiny_cfg("vlm").supports_paged_kv
+    assert tiny_cfg("vlm").paged_unsupported_reason
     assert build_model(tiny_cfg("vlm")).decode_step_paged is None
     with pytest.raises(ValueError):
         ce.submit(np.array([5, 6], np.int32), max_new_tokens=0)
@@ -156,8 +161,14 @@ def test_make_engine_cache_layout_dispatch():
     mp_ = build_model(tiny_cfg("dense", cache_layout="paged"))
     assert isinstance(make_engine(mp_, p, max_new_tokens=4, n_slots=2,
                                   max_seq=32), ContinuousEngine)
+    # ssm serves continuously since the recurrent-state pool landed
     ms = build_model(tiny_cfg("ssm", cache_layout="paged"))
     eng = make_engine(ms, ms.init(jax.random.PRNGKey(0)), max_new_tokens=4,
+                      n_slots=2, max_seq=32)
+    assert isinstance(eng, ContinuousEngine) and eng.rstate is not None
+    # encoder-decoder still falls back to the dense engine
+    ma = build_model(tiny_cfg("audio", cache_layout="paged"))
+    eng = make_engine(ma, ma.init(jax.random.PRNGKey(0)), max_new_tokens=4,
                       n_slots=2, max_seq=32)
     assert isinstance(eng, Engine) and not isinstance(eng, ContinuousEngine)
 

@@ -1,0 +1,287 @@
+"""Sliding-window and SSM/hybrid continuous serving.
+
+Kernel level: the paged decode/prefill kernels' static per-layer ``window``
+(masking by global position) and window-aware ``pages_start`` walk must
+match a dense windowed oracle, with windows straddling page edges.
+Engine level: gemma3-style (5:1-ish local:global window), mamba2-style
+(attention-free SSD), and jamba-style (hybrid) stacks must serve
+greedy-exact vs the dense per-layer reference engine, including slot reuse
+after retirement (recurrent-state rows re-enter from zero state) and a
+mixed 3-tier pool stream.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.routing import CascadePolicy, HybridRouter
+from repro.data import tokenizer as tok
+from repro.kernels.paged_decode_attention.kernel import \
+    paged_decode_attention_gqa
+from repro.kernels.paged_decode_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_prefill_attention.kernel import \
+    paged_prefill_attention_gqa
+from repro.kernels.paged_prefill_attention.ref import \
+    paged_prefill_attention_ref
+from repro.models import RouterConfig, build_model, init_router_encoder
+from repro.serving import ContinuousEngine, ContinuousPoolEngine, Engine
+from conftest import tiny_cfg
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- kernels
+def _make_paged(rng, B, K, D, ps, MP, lens):
+    n_pages = 1 + sum(-(-int(l) // ps) for l in lens)
+    kp = jnp.asarray(rng.standard_normal((n_pages, ps, K, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, ps, K, D)), jnp.float32)
+    pt = np.zeros((B, MP), np.int32)
+    nxt = 1
+    for b in range(B):
+        for i in range(-(-int(lens[b]) // ps)):
+            pt[b, i] = nxt
+            nxt += 1
+    return kp, vp, jnp.asarray(pt)
+
+
+def _dense_window_decode(q, kp, vp, pt, lens, window):
+    """Dense windowed oracle: gather pages, mask by global position."""
+    B, K, G, D = q.shape
+    ps = kp.shape[1]
+    S = pt.shape[1] * ps
+    k = jnp.moveaxis(kp[pt], 3, 1).reshape(B, K, S, D)
+    v = jnp.moveaxis(vp[pt], 3, 1).reshape(B, K, S, D)
+    s = jnp.einsum("bkgd,bksd->bkgs", q, k).astype(jnp.float32)
+    kpos = jnp.arange(S)
+    valid = (kpos[None] < lens[:, None]) \
+        & (kpos[None] >= lens[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", w.astype(v.dtype), v)
+
+
+@pytest.mark.parametrize("window", [5, 8, 13])  # straddles ps=8 page edges
+def test_paged_decode_window_matches_dense_oracle(window):
+    rng = np.random.default_rng(window)
+    B, K, G, D, ps, MP = 3, 2, 2, 32, 8, 6
+    lens = jnp.asarray([5, 23, 41], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, K, G, D)), jnp.float32) \
+        * (D ** -0.5)
+    kp, vp, pt = _make_paged(rng, B, K, D, ps, MP, np.asarray(lens))
+    oracle = _dense_window_decode(q, kp, vp, pt, lens, window)
+    first = min(max(0, int(l) - window) for l in np.asarray(lens)) // ps
+    for pstart in sorted({0, first}):
+        out = paged_decode_attention_gqa(q, kp, vp, pt, lens, window=window,
+                                         pages_start=pstart, interpret=True)
+        ref = paged_decode_attention_ref(q, kp, vp, pt, lens,
+                                         pages_start=pstart, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(oracle),
+                                   rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("window", [3, 8, 11])
+def test_paged_prefill_window_matches_dense_oracle(window):
+    """Chunk queries at ragged starts: each row's window mask follows its
+    own global position, and a pages_start covering the earliest in-window
+    key must not change anything."""
+    rng = np.random.default_rng(100 + window)
+    B, K, G, D, ps, MP, C = 3, 2, 2, 32, 8, 6, 4
+    lens = [8, 24, 44]
+    kp, vp, pt = _make_paged(rng, B, K, D, ps, MP, lens)
+    start = jnp.asarray([l - C for l in lens], jnp.int32)
+    n_new = jnp.full((B,), C, jnp.int32)
+    total = start + n_new
+    q = jnp.asarray(rng.standard_normal((B, K, C, G, D)), jnp.float32) \
+        * (D ** -0.5)
+
+    S = MP * ps
+    k = jnp.moveaxis(kp[pt], 3, 1).reshape(B, K, S, D)
+    v = jnp.moveaxis(vp[pt], 3, 1).reshape(B, K, S, D)
+    s = jnp.einsum("bkcgd,bksd->bkcgs", q, k).astype(jnp.float32)
+    kpos = jnp.arange(S)
+    qpos = start[:, None] + jnp.arange(C)
+    valid = (kpos[None, None, :] <= qpos[:, :, None]) \
+        & (kpos[None, None, :] < total[:, None, None]) \
+        & ((qpos[:, :, None] - kpos[None, None, :]) < window)
+    sm = jnp.where(valid[:, None, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(sm, axis=-1)
+    oracle = jnp.einsum("bkcgs,bksd->bkcgd", w.astype(v.dtype), v)
+
+    first = min(max(0, int(s0) - window + 1)
+                for s0 in np.asarray(start)) // ps
+    for pstart in sorted({0, first}):
+        out = paged_prefill_attention_gqa(q, kp, vp, pt, start, total,
+                                          window=window, pages_start=pstart,
+                                          interpret=True)
+        ref = paged_prefill_attention_ref(q, kp, vp, pt, start, total,
+                                          pages_start=pstart, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(oracle),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_ssd_chunked_h0_streaming_and_pallas_parity():
+    """ssd_chunked with h0 is exact streaming: one full-sequence call ==
+    two sequential calls carrying final_state across, on both the jnp and
+    the Pallas (interpret) path."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(0)
+    b, S, H, P, N, chunk = 2, 32, 3, 8, 16, 8
+    x = jnp.asarray(rng.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, S, H)), jnp.float32) * 0.1
+    A = -jnp.asarray(rng.random((H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, S, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, S, N)), jnp.float32)
+    y_full, h_full = ssd_chunked(x, dt, A, B, C, chunk)
+    y1, h1 = ssd_chunked(x[:, :16], dt[:, :16], A, B[:, :16], C[:, :16],
+                         chunk)
+    y2, h2 = ssd_chunked(x[:, 16:], dt[:, 16:], A, B[:, 16:], C[:, 16:],
+                         chunk, h0=h1)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1),
+                               np.asarray(y_full), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=2e-5, atol=2e-5)
+    h0 = jnp.asarray(rng.standard_normal((b, H, P, N)), jnp.float32) * 0.1
+    yj, hj = ssd_chunked(x, dt, A, B, C, chunk, use_pallas=False, h0=h0)
+    yp, hp = ssd_chunked(x, dt, A, B, C, chunk, use_pallas=True, h0=h0)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yj), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hj), rtol=2e-4,
+                               atol=2e-4)
+
+
+# -------------------------------------------------------------------- engine
+def _parity(cfg, n=6, prompt_len=19, t_max=10, rng_seed=1, **engine_kw):
+    """Serve one uniform-length greedy stream through the dense reference
+    engine and the continuous paged engine; both must agree elementwise."""
+    rng = np.random.default_rng(rng_seed)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    q = rng.integers(4, 200, (n, prompt_len)).astype(np.int32)
+    rd, ld = Engine(m, p, max_new_tokens=t_max).serve(q)
+    ce = ContinuousEngine(m, p, max_new_tokens=t_max, n_slots=2, max_seq=64,
+                          page_size=4, **engine_kw)
+    rc, lc = ce.serve(q)
+    assert np.array_equal(rd, rc), (rd, rc)
+    assert np.array_equal(ld, lc)
+    return ce
+
+
+def test_window_engine_parity_across_page_edges():
+    """gemma3-style 2:1 local:global stack, window=6 over 4-token pages:
+    every decode step's window straddles a page edge somewhere in the
+    stream, and multi-chunk admission crosses window boundaries too."""
+    cfg = tiny_cfg("dense", n_layers=3, sliding_window=6,
+                   local_global_ratio=2, cache_layout="paged",
+                   prefill_chunk=8)
+    ce = _parity(cfg, prompt_len=23, t_max=12)
+    # the window-aware walk actually engaged: some decode dispatch started
+    # its window layers' page walk past page 0
+    assert any(ws > 0 for _, ws in ce._decode_bounds)
+
+
+def test_window_engine_parity_one_shot_admission():
+    cfg = tiny_cfg("dense", n_layers=3, sliding_window=6,
+                   local_global_ratio=2, cache_layout="paged")
+    _parity(cfg, prompt_len=15, t_max=8, prefill_chunk=0)
+
+
+def test_window_engine_static_walk_baseline():
+    cfg = tiny_cfg("dense", n_layers=3, sliding_window=6,
+                   local_global_ratio=2, cache_layout="paged",
+                   prefill_chunk=8)
+    ce = _parity(cfg, prompt_len=23, t_max=12, walk_bound="static")
+    assert ce._decode_bounds == {(ce.cache.max_pages_per_slot, 0)}
+
+
+def test_ssm_engine_parity_and_slot_reuse():
+    """Attention-free SSD stack: 6 requests through 2 slots forces every
+    slot to be reused after retirement — recurrent-state rows must re-enter
+    from zero state with no host-side reset."""
+    cfg = tiny_cfg("ssm", cache_layout="paged", prefill_chunk=4)
+    ce = _parity(cfg, n=6, prompt_len=21, t_max=8)
+    assert ce.rstate is not None
+    assert ce.stats.retired == 6 and ce.cache.stats.allocs >= 6
+
+
+def test_hybrid_engine_parity_multi_chunk():
+    """Jamba-style block (7 mamba + 1 attn, MoE every other layer):
+    multi-chunk admission streams both the KV pages and the recurrent
+    state; interleaved decode must not corrupt mid-prefill slots."""
+    cfg = tiny_cfg("hybrid", cache_layout="paged", prefill_chunk=8)
+    _parity(cfg, n=4, prompt_len=27, t_max=8)
+
+
+def test_recurrent_state_rows_survive_sequential_serves():
+    """Two sequential serve() calls through one engine must match two fresh
+    engines — stale recurrent state from the first stream must never leak
+    into the second (slot rows re-enter from zero at admission)."""
+    cfg = tiny_cfg("ssm", cache_layout="paged", prefill_chunk=4)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    q1 = rng.integers(4, 200, (3, 9)).astype(np.int32)
+    q2 = rng.integers(4, 200, (3, 13)).astype(np.int32)
+    eng = ContinuousEngine(m, p, max_new_tokens=6, n_slots=2, max_seq=32,
+                           page_size=4)
+    r1, l1 = eng.serve(q1)
+    r2, l2 = eng.serve(q2)
+    f1, fl1 = ContinuousEngine(m, p, max_new_tokens=6, n_slots=2,
+                               max_seq=32, page_size=4).serve(q1)
+    f2, fl2 = ContinuousEngine(m, p, max_new_tokens=6, n_slots=2,
+                               max_seq=32, page_size=4).serve(q2)
+    assert np.array_equal(r1, f1) and np.array_equal(l1, fl1)
+    assert np.array_equal(r2, f2) and np.array_equal(l2, fl2)
+
+
+def test_ssm_rejects_one_shot_prefill():
+    cfg = tiny_cfg("ssm", cache_layout="paged")
+    m = build_model(cfg)
+    with pytest.raises(ValueError):
+        ContinuousEngine(m, m.init(jax.random.PRNGKey(0)), prefill_chunk=0)
+
+
+# ---------------------------------------------------------------------- pool
+def test_three_tier_pool_window_and_hybrid_greedy_exact():
+    """Acceptance: a 3-tier ContinuousPoolEngine with a plain tier, a
+    sliding-window tier, and an SSM/hybrid tier serves a mixed stream
+    greedy-exact vs each tier's dense per-layer reference engine."""
+    rng = np.random.default_rng(7)
+    cfgs = [
+        tiny_cfg("dense", cache_layout="paged"),
+        tiny_cfg("dense", name="window-tiny", n_layers=3, sliding_window=6,
+                 local_global_ratio=2, cache_layout="paged",
+                 prefill_chunk=8),
+        tiny_cfg("hybrid", cache_layout="paged", prefill_chunk=8),
+    ]
+    bundles = [build_model(c) for c in cfgs]
+    params = [b.init(jax.random.PRNGKey(i)) for i, b in enumerate(bundles)]
+    q = rng.integers(4, 200, (9, 15)).astype(np.int32)
+    mask = np.ones_like(q, np.float32)
+
+    rc = RouterConfig(vocab_size=tok.VOCAB_SIZE, n_layers=1, d_model=32,
+                      n_heads=2, d_ff=64)
+    router = HybridRouter(init_router_encoder(jax.random.PRNGKey(0), rc),
+                          rc, 0.5)
+    scores = np.asarray(router.scores(jnp.asarray(q), jnp.asarray(mask)))
+    policy = CascadePolicy(router, (float(np.quantile(scores, 2 / 3)),
+                                    float(np.quantile(scores, 1 / 3))))
+    engines = [ContinuousEngine(b, p, max_new_tokens=6, n_slots=2,
+                                max_seq=64, page_size=4)
+               for b, p in zip(bundles, params)]
+    pool = ContinuousPoolEngine(policy, [("plain", engines[0]),
+                                         ("window", engines[1]),
+                                         ("hybrid", engines[2])])
+    res = pool.serve(q, mask)
+    assert sorted(np.unique(res.tier_idx)) == [0, 1, 2]  # truly mixed
+
+    for t, (b, p) in enumerate(zip(bundles, params)):
+        sel = res.tier_idx == t
+        rd, ld = Engine(b, p, max_new_tokens=6).serve(q[sel])
+        assert np.array_equal(res.responses[sel], rd)
+        assert np.array_equal(res.lengths[sel], ld)
+    calls = pool.meter.calls
+    assert calls.sum() == len(q)
