@@ -40,9 +40,15 @@ per width bucket per step instead of one per PREFILLING slot;
 ``window_ssm`` serves the mixed stream through a 3-tier pool whose tiers
 are a plain uniform-global stack, a gemma3-style sliding-window stack, and
 a jamba-style SSM/hybrid stack — the two new layer kinds must stay
-greedy-exact vs their dense per-layer references. A ``padding_parity`` flag
-asserts the dense, continuous, and pool serve paths agree on responses
-including tok.PAD tails.
+greedy-exact vs their dense per-layer references; ``preemption`` runs a
+deterministic priority burst against a tight bounded-queue engine, so the
+robustness layer's counters (preemptions, re-prefill tokens, sheds,
+deadline misses) and its invariants (every request retired with a valid
+finish reason, zero leaked pages, preempted outputs greedy-exact vs
+uncontended runs) land in the JSON for CI to assert. Streaming rows also
+report queue-wait p50/p99 (submission to first admission). A
+``padding_parity`` flag asserts the dense, continuous, and pool serve
+paths agree on responses including tok.PAD tails.
 
 Both engines are warmed up (jit compiles excluded from the timed stream):
 the dense engine precompiles its buckets, and every continuous row replays
@@ -122,14 +128,23 @@ def _percentiles(lat):
 
 
 def _streaming_metrics(reqs):
-    """TTFT and inter-token percentiles from per-request token timestamps.
-    If no request ever emitted a second token, inter-token p99 is NaN — the
-    CI finiteness assertion then fails loudly instead of reading a
-    fabricated 0ms as an impossibly good result."""
-    ttft = [r.ttft for r in reqs]
+    """TTFT, queue-wait, and inter-token percentiles from per-request
+    stamps. TTFT and queue percentiles skip requests that never reached a
+    token / a slot (load-shed ones have neither, by design); if NO request
+    qualifies, the column is NaN — the CI finiteness assertion then fails
+    loudly instead of reading a fabricated 0ms as an impossibly good
+    result. Same for inter-token p99 when no request emitted twice."""
+    ttft = [r.ttft for r in reqs if np.isfinite(r.ttft)]
+    queue = [r.queue_time for r in reqs if np.isfinite(r.queue_time)]
     gaps = [np.diff(r.token_t) for r in reqs if len(r.token_t) > 1]
-    return {"ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p99_s": float(np.percentile(ttft, 99)),
+    return {"ttft_p50_s": float(np.percentile(ttft, 50))
+            if ttft else float("nan"),
+            "ttft_p99_s": float(np.percentile(ttft, 99))
+            if ttft else float("nan"),
+            "queue_p50_s": float(np.percentile(queue, 50))
+            if queue else float("nan"),
+            "queue_p99_s": float(np.percentile(queue, 99))
+            if queue else float("nan"),
             "intertoken_p99_s": float(np.percentile(np.concatenate(gaps), 99))
             if gaps else float("nan")}
 
@@ -156,13 +171,13 @@ def run_dense(bundle, params, stream, t_max: int, batch: int):
     eng.warmup(toks.shape[1], batch)
     useful = 0
     latencies = []
-    t0 = time.time()
+    t0 = time.monotonic()
     for i in range(0, len(toks), batch):
         r, l = eng.serve(toks[i:i + batch])
-        done_t = time.time() - t0
+        done_t = time.monotonic() - t0
         useful += int(np.minimum(l, caps[i:i + batch]).sum())
         latencies += [done_t] * len(r)
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     return {
         "engine": "dense_batch",
         "requests": len(toks),
@@ -203,11 +218,11 @@ def _warm_then_timed(eng, prompts, caps):
     eng.run()
     eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
     pre = dataclasses.replace(eng.stats)
-    t0 = time.time()
+    t0 = time.monotonic()
     reqs = [eng.submit(p_, max_new_tokens=c)
             for p_, c in zip(prompts, caps)]
     eng.run()
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     delta = {f.name: getattr(eng.stats, f.name) - getattr(pre, f.name)
              for f in dataclasses.fields(eng.stats)
              if isinstance(getattr(eng.stats, f.name), int)}
@@ -292,13 +307,13 @@ def run_hybrid_dense(bundles, stream, t_max, batch):
     hy = HybridEngine(router, small, large)
     useful = 0
     latencies = []
-    t0 = time.time()
+    t0 = time.monotonic()
     for i in range(0, len(toks), batch):
         res = hy.serve(toks[i:i + batch], mask[i:i + batch])
-        done_t = time.time() - t0
+        done_t = time.monotonic() - t0
         useful += int(np.minimum(res.lengths, caps[i:i + batch]).sum())
         latencies += [done_t] * len(res.lengths)
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     return {
         "engine": "dense_batch_hybrid",
         "requests": len(toks),
@@ -335,10 +350,10 @@ def run_hybrid_continuous(bundles, stream, t_max, n_slots, rng,
     for eng in (small, large):
         eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
     hy.pool.meter.reset()
-    t0 = time.time()
+    t0 = time.monotonic()
     reqs, to_small, _ = hy.submit(toks, mask, max_new_tokens=caps)
     hy.run()
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     useful = sum(r.n_generated for r in reqs)
     latencies = [r.finish_t - t0 for r in reqs]
     bpp = small.cache.bytes_per_page
@@ -386,10 +401,10 @@ def _run_pool_stream(pool, names, engines, stream):
     for eng in engines:
         eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
     pool.meter.reset()
-    t0 = time.time()
+    t0 = time.monotonic()
     reqs, tier_idx, _ = pool.submit(toks, mask, max_new_tokens=caps)
     pool.run()
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     useful = sum(r.n_generated for r in reqs)
     latencies = [r.finish_t - t0 for r in reqs]
     per_tier = {}
@@ -545,6 +560,71 @@ def run_heavy_admission(bundle, params, rng, n, n_slots, smoke):
         == [r.out for r in reqs_u],
         **_percentiles(latencies),
         **_streaming_metrics(reqs_p),
+    }
+
+
+def run_preemption(bundle, params, rng, t_max, smoke):
+    """Preemption/robustness row: a tight bounded-queue engine takes a
+    low-priority base load, then a high-priority burst plus zero-deadline
+    stragglers — driving every degradation path at once (priority
+    preemption with recompute-from-pages, bounded-queue load shedding,
+    deterministic deadline cancellation). The step-indexed schedule is
+    deterministic, so the counters the CI smoke asserts (preemptions > 0,
+    sheds > 0, deadline misses > 0, zero leaked pages, preempted outputs
+    greedy-exact vs uncontended runs) cannot flake on machine speed."""
+    n_base, n_burst, n_doomed = (6, 5, 2) if smoke else (10, 8, 3)
+    mk = lambda n: [rng.integers(4, tok.VOCAB_SIZE,
+                                 (int(l),)).astype(np.int32)
+                    for l in rng.integers(6, 17, (n,))]
+    base_p, burst_p, doomed_p = mk(n_base), mk(n_burst), mk(n_doomed)
+    eng = ContinuousEngine(bundle, params, max_new_tokens=t_max, n_slots=2,
+                           max_seq=48, max_pending=4)
+    t0 = time.monotonic()
+    base = [eng.submit(p, priority=0) for p in base_p]
+    for _ in range(4):   # let the base load occupy the slots mid-decode
+        eng.step()
+    burst = [eng.submit(p, priority=5) for p in burst_p]
+    # outrank the burst so the bounded queue admits them (displacing burst
+    # members); their zero deadline then expires them deterministically
+    doomed = [eng.submit(p, priority=6, deadline_s=0.0) for p in doomed_p]
+    eng.run()
+    wall = time.monotonic() - t0
+    reqs = base + burst + doomed
+    served = [r for r in reqs if r.finish_reason in ("eos", "length",
+                                                     "context_cap")]
+    useful = sum(r.n_generated for r in served)
+    latencies = [r.finish_t - t0 for r in reqs]
+    # preempted requests must emit exactly what an uncontended engine emits
+    preempted = [r for r in served if r.preemptions > 0]
+    exact = True
+    for r in preempted:
+        ref_eng = ContinuousEngine(bundle, params,
+                                   max_new_tokens=r.max_new_tokens,
+                                   n_slots=1, max_seq=64)
+        ref = ref_eng.submit(r.tokens)
+        ref_eng.run()
+        exact = exact and r.out == ref.out
+    return {
+        "engine": "continuous_paged",
+        "requests": len(reqs),
+        "max_pending": eng.max_pending,
+        "useful_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "preemptions": eng.stats.preemptions,
+        "reprefill_tokens": eng.stats.reprefill_tokens,
+        "sheds": eng.stats.sheds,
+        "deadline_misses": eng.stats.deadline_misses,
+        "admission_stalls": eng.stats.admission_stalls,
+        "preempted_requests": len(preempted),
+        "greedy_exact_preempted": bool(exact and preempted),
+        "pages_leaked": int(eng.cache.stats.pages_in_use),
+        "all_retired": all(r.done for r in reqs),
+        "kv_high_water_bytes": int(eng.cache.stats.high_water_pages
+                                   * eng.cache.bytes_per_page),
+        "finish_reasons": _finish_reasons(reqs),
+        **_percentiles(latencies),
+        **_streaming_metrics(served),
     }
 
 
@@ -774,6 +854,18 @@ def main():
           f"{ha['prefill_chunks']} slot-chunks over "
           f"{ha['prefill_steps']} prefill steps "
           f"(per-slot baseline: {ha['prefill_dispatches_unpacked']})")
+
+    print("== preemption (priority burst on a tight bounded queue) ==")
+    pr = run_preemption(bundles[0][0], bundles[0][1],
+                        np.random.default_rng(17), t_max, args.smoke)
+    results["preemption"] = pr
+    report("preemption", pr)
+    print(f"    {pr['preemptions']} preemptions "
+          f"({pr['reprefill_tokens']} re-prefill tokens), "
+          f"{pr['sheds']} sheds, {pr['deadline_misses']} deadline misses; "
+          f"preempted greedy-exact {pr['greedy_exact_preempted']}, "
+          f"{pr['pages_leaked']} pages leaked, "
+          f"queue p99 {pr['queue_p99_s']:.2f}s")
 
     results["padding_parity"] = check_padding_parity(
         bundles[0][0], bundles[0][1], np.random.default_rng(19))

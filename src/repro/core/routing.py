@@ -242,6 +242,14 @@ class TierMeter:
         self.names: Tuple[str, ...] = tuple(names)
         self.calls = np.zeros(len(self.names), np.int64)
         self.tokens = np.zeros(len(self.names), np.int64)
+        # robustness counters (serving.engine's preemptive scheduler):
+        # sheds are load-rejected requests — NOT calls, they consumed no
+        # service; deadline misses ARE calls that also missed; preemptions /
+        # re-prefill tokens are the recompute overhead of eviction
+        self.sheds = np.zeros(len(self.names), np.int64)
+        self.deadline_misses = np.zeros(len(self.names), np.int64)
+        self.preemptions = np.zeros(len(self.names), np.int64)
+        self.reprefill_tokens = np.zeros(len(self.names), np.int64)
 
     @property
     def n_tiers(self) -> int:
@@ -262,11 +270,41 @@ class TierMeter:
         self.tokens += np.bincount(tier, weights=lens,
                                    minlength=self.n_tiers).astype(np.int64)
 
+    def _check_tier(self, tier: int) -> int:
+        tier = int(tier)
+        if not 0 <= tier < self.n_tiers:
+            raise ValueError(f"tier index out of range for {self.names}: "
+                             f"{tier}")
+        return tier
+
+    def record_shed(self, tier_idx: int):
+        """Record one load-shed request (finish reason "rejected") on its
+        assigned tier. Sheds are not calls: the request consumed no
+        service, so it must not dilute the §2.3 cost metrics."""
+        self.sheds[self._check_tier(tier_idx)] += 1
+
+    def record_robustness(self, tier_idx: int, preemptions: int = 0,
+                          reprefill_tokens: int = 0,
+                          deadline_miss: bool = False):
+        """Fold one served request's robustness tallies into its tier:
+        times it was preempted, tokens re-prefilled resuming it, and
+        whether it was cancelled for a missed deadline/timeout. Called
+        alongside ``record`` at retirement."""
+        t = self._check_tier(tier_idx)
+        self.preemptions[t] += preemptions
+        self.reprefill_tokens[t] += reprefill_tokens
+        if deadline_miss:
+            self.deadline_misses[t] += 1
+
     def reset(self):
         """Zero the counters — e.g. after a warmup pass whose traffic must
         not count toward a measured stream."""
         self.calls[:] = 0
         self.tokens[:] = 0
+        self.sheds[:] = 0
+        self.deadline_misses[:] = 0
+        self.preemptions[:] = 0
+        self.reprefill_tokens[:] = 0
 
     @property
     def total_calls(self) -> int:
@@ -291,9 +329,15 @@ class TierMeter:
         return 1.0 - int(self.tokens[-1]) / total if total else 0.0
 
     def summary(self) -> Dict[str, dict]:
-        """Per-tier calls/tokens, keyed by tier name (cheapest first)."""
-        return {name: {"calls": int(c), "gen_tokens": int(t)}
-                for name, c, t in zip(self.names, self.calls, self.tokens)}
+        """Per-tier calls/tokens plus robustness tallies, keyed by tier
+        name (cheapest first)."""
+        return {name: {"calls": int(c), "gen_tokens": int(t),
+                       "sheds": int(s), "deadline_misses": int(d),
+                       "preemptions": int(p), "reprefill_tokens": int(r)}
+                for name, c, t, s, d, p, r in zip(
+                    self.names, self.calls, self.tokens, self.sheds,
+                    self.deadline_misses, self.preemptions,
+                    self.reprefill_tokens)}
 
 
 class CostMeter:

@@ -155,6 +155,10 @@ def main():
                     help="bound the paged kernels' sequential page walk by "
                          "the bucketed live max context (live, default) or "
                          "walk the full static page-table width (static)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound each continuous tier's pending queue; "
+                         "overflow load-sheds with finish reason 'rejected' "
+                         "(default: unbounded)")
     args = ap.parse_args()
 
     cfgs = resolve_tiers(args.arch, args.tiers)
@@ -230,7 +234,8 @@ def main():
                                    n_slots=8, max_seq=64,
                                    prefill_chunk=args.prefill_chunk,
                                    prefill_pack=args.prefill_pack,
-                                   walk_bound=args.walk_bound))
+                                   walk_bound=args.walk_bound,
+                                   max_pending=args.max_pending))
     # K > 2 already guaranteed paged support before training
     continuous = all(isinstance(e, ContinuousEngine) for e in engines)
     if continuous:
@@ -254,8 +259,13 @@ def main():
     meter = hy.meter if isinstance(hy, ContinuousPoolEngine) \
         else hy.meter.tiers
     for name, row in meter.summary().items():
+        # robustness tallies only print when nonzero: the uncontended
+        # default stream should read exactly as before
+        rob = "".join(f"  {row[k]} {k.replace('_', ' ')}"
+                      for k in ("preemptions", "sheds", "deadline_misses",
+                                "reprefill_tokens") if row.get(k))
         print(f"  {name:<16} {row['calls']:>5} calls  "
-              f"{row['gen_tokens']:>6} tokens")
+              f"{row['gen_tokens']:>6} tokens{rob}")
     # §2.3 against the all-priciest baseline: per-request and per-token
     print(f"  cost advantage: {meter.cost_advantage:.0%} of calls, "
           f"{meter.token_cost_advantage:.0%} of generated tokens "

@@ -105,6 +105,7 @@ class PagedKVCache:
         self.seq_lens = np.zeros((n_slots,), np.int32)
         self._free = list(range(num_pages - 1, 0, -1))  # pop() -> 1, 2, ...
         self._owned: dict[int, list[int]] = {s: [] for s in range(n_slots)}
+        self.held_pages = 0      # pages held externally via hold_pages
         self.stats = CacheStats(num_pages=num_pages - 1, page_size=page_size)
 
     # ------------------------------------------------------------- allocation
@@ -203,6 +204,31 @@ class PagedKVCache:
         self._owned[slot] = []
         self.page_table[slot, :] = 0
         self.seq_lens[slot] = 0
+        self._mark_usage()
+
+    # ------------------------------------------------------- external holds
+    def hold_pages(self, n: int) -> np.ndarray:
+        """Take up to ``n`` free pages out of circulation — the
+        fault-injection / ops hook for page-pool pressure (a co-tenant, a
+        defrag pass, a shrinking quota). Held pages count as in use, shrink
+        every admission/extension decision, and must be given back with
+        ``release_pages``; the engine treats a stall with pages held
+        externally as transient back-pressure (it waits) rather than a
+        deadlock (it would otherwise preempt, shed, or raise). Returns the
+        held page ids."""
+        take = [self._free.pop() for _ in range(min(n, len(self._free)))]
+        self.held_pages += len(take)
+        self._mark_usage()
+        return np.asarray(take, np.int32)
+
+    def release_pages(self, pages) -> None:
+        """Return pages taken by ``hold_pages`` to the free list."""
+        pages = [int(p) for p in np.asarray(pages).reshape(-1)]
+        if len(pages) > self.held_pages:
+            raise ValueError(f"releasing {len(pages)} pages but only "
+                             f"{self.held_pages} are held")
+        self._free.extend(reversed(pages))
+        self.held_pages -= len(pages)
         self._mark_usage()
 
     # ------------------------------------------------------------------ views

@@ -86,10 +86,32 @@ prefill (one-shot admission is refused), padding rows use the reserved
 scratch row 0, and decode freezes rows of inactive slots. All of it stays
 greedy-exact vs the dense engine (tests/test_window_ssm_serving.py).
 
+Robustness layer (priorities, deadlines, preemption, shedding): requests
+carry a ``priority`` class (higher admits first, FIFO within a class), an
+optional ``deadline_s`` (from submission) and ``timeout_s`` (from first
+admission) — an expired request is cancelled with finish reason
+"deadline", mid-stream if necessary, and its slot reclaimed. Admission
+uses a bounded head-of-line lookahead (``admit_lookahead``): when the
+best-priority head cannot be admitted but a later pending request fits
+the pool now, the later one overtakes it. When the pool is exhausted and
+a strictly higher-priority request waits (``preempt_after_s`` past its
+submission), the lowest-priority DECODING slot is PREEMPTED: its pages
+are freed and its prompt *plus generated prefix* re-queues as one chunked
+prefill (recompute-from-pages — the resumed prefill's final logits yield
+the next token, so preemption stays greedy-exact). A per-request
+preemption cap (``max_preemptions``) makes much-evicted requests immune,
+so none starves. Overload degrades gracefully instead of wedging: the
+pending queue is bounded (``max_pending``) with load shedding (finish
+reason "rejected", lowest-priority latest-arrival first), prompts that
+could never fit the pool are rejected at submit rather than head-of-line
+blocking, and a zero-progress step with no externally held pages evicts
+its way out before declaring deadlock.
+
 ``Engine.stats`` exposes compile counts and padding waste so bucket
 recompiles show up in benchmarks; ``ContinuousEngine.stats`` + its cache
 stats expose occupancy, admission stalls, prefill chunk/dispatch/compile
-counts, decode bound compiles, and the KV high-water mark.
+counts, decode bound compiles, the KV high-water mark, and the robustness
+counters (preemptions, re-prefill tokens, sheds, deadline misses).
 """
 from __future__ import annotations
 
@@ -105,7 +127,8 @@ from repro.data import tokenizer as tok
 from repro.models.model import ModelBundle
 from .cache import PagedKVCache, RecurrentStatePool
 from .generate import build_generate_fn, _sample
-from .scheduler import (DECODING, PREFILLING, ContinuousScheduler, Request)
+from .scheduler import (DECODING, DONE as SCHED_DONE, PREFILLING,
+                        ContinuousScheduler, Request)
 
 
 def _bucket(n: int) -> int:
@@ -184,14 +207,14 @@ class Engine:
         if (b, Lq) not in self._shapes:   # jit compiles on first use
             self._shapes.add((b, Lq))
             self.stats.compiles += 1
-        t0 = time.time()
+        t0 = time.monotonic()
         toks, lens = self._gen(self.params, {"tokens": jnp.asarray(padded)},
                                jax.random.PRNGKey(seed))
         toks, lens = np.asarray(toks)[:n], np.asarray(lens)[:n]
         self.stats.requests += n
         self.stats.batches += 1
         self.stats.gen_tokens += int(lens.sum())
-        self.stats.wall_s += time.time() - t0
+        self.stats.wall_s += time.monotonic() - t0
         self.stats.pad_slots += b - n
         self.stats.slot_count += b
         self.stats.kv_high_water_bytes = max(
@@ -237,6 +260,15 @@ class ContinuousStats:
     occupancy_sum: int = 0       # busy slots (decoded + prefill-advanced)
                                  # summed over steps
     admission_stalls: int = 0    # admissions deferred for page-pool space
+    preemptions: int = 0         # DECODING slots evicted (recompute-from-
+                                 # pages: prompt + prefix re-queued)
+    reprefill_tokens: int = 0    # tokens queued for re-prefill by evictions
+                                 # (the compute cost of preemption)
+    sheds: int = 0               # requests load-shed with reason "rejected"
+                                 # (bounded-queue overflow or never-fits)
+    deadline_misses: int = 0     # requests cancelled with reason "deadline"
+    stall_steps: int = 0         # zero-progress steps waited out because
+                                 # pages were held externally (hold_pages)
     wall_s: float = 0.0
 
     @property
@@ -273,7 +305,11 @@ class ContinuousEngine:
                  rng_salt: int = 0, prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
                  prefill_pack: Optional[int] = None,
-                 walk_bound: str = "live"):
+                 walk_bound: str = "live",
+                 max_pending: Optional[int] = None,
+                 max_preemptions: int = 3,
+                 preempt_after_s: float = 0.0,
+                 admit_lookahead: Optional[int] = None):
         if bundle.decode_step_paged is None:
             raise ValueError(f"{bundle.cfg.name}: no paged decode path "
                              "(ArchConfig.supports_paged_kv is False)")
@@ -335,6 +371,27 @@ class ContinuousEngine:
             raise ValueError(f"walk_bound={walk_bound!r}: expected 'live' "
                              "or 'static'")
         self.walk_bound = walk_bound
+        # robustness knobs: bounded pending queue with load shedding
+        # (max_pending=None keeps the queue unbounded), per-request
+        # preemption cap (an evicted-this-often request becomes immune, so
+        # preemption can't starve anyone), minimum wait before a
+        # higher-priority arrival may evict (0 = preempt on demand), and
+        # the head-of-line admission lookahead window (None = n_slots)
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending={max_pending}: a bounded queue "
+                             "needs room for at least one request")
+        if max_preemptions < 0 or preempt_after_s < 0:
+            raise ValueError(f"max_preemptions={max_preemptions} / "
+                             f"preempt_after_s={preempt_after_s}: "
+                             "preemption limits must be non-negative")
+        self.max_pending = max_pending
+        self.max_preemptions = max_preemptions
+        self.preempt_after_s = preempt_after_s
+        self.admit_lookahead = n_slots if admit_lookahead is None \
+            else max(1, admit_lookahead)
+        self._shed_buf: List[Request] = []   # retired outside step(),
+                                             # drained into the next
+                                             # step/run result
         self._chunk_shapes: set = set()   # (batch, width, bound, wstart)
         self._decode_bounds: set = set()  # (bound, wstart) pairs traced
         self._next_in = np.full((n_slots,), tok.PAD, np.int32)
@@ -458,40 +515,80 @@ class ContinuousEngine:
         self._serve_calls += 1
 
     # -------------------------------------------------------------- requests
-    def submit(self, tokens: np.ndarray, max_new_tokens: Optional[int] = None
-               ) -> Request:
+    def submit(self, tokens: np.ndarray, max_new_tokens: Optional[int] = None,
+               *, priority: int = 0, deadline_s: Optional[float] = None,
+               timeout_s: Optional[float] = None) -> Request:
         """Enqueue one request. ``tokens``: 1-d int32 prompt (no padding);
         ``max_new_tokens``: per-request output cap in tokens (None = the
-        engine default). Rejects requests that could never complete: empty
-        prompts, prompts past the per-slot context cap
-        (max_pages_per_slot * page_size tokens), and prompts whose
-        worst-case page footprint exceeds the whole pool."""
+        engine default); ``priority``: admission class (higher first);
+        ``deadline_s`` / ``timeout_s``: completion deadline from submission
+        / in-flight cap from first admission, in seconds.
+
+        Malformed requests (empty prompt, max_new < 1) raise — they are
+        caller bugs. Well-formed requests that could never complete —
+        prompts past the per-slot context cap (max_pages_per_slot *
+        page_size tokens) or whose worst-case page footprint exceeds the
+        whole pool — and bounded-queue overflow are *load-shed*: the
+        request comes back already done with finish reason "rejected"
+        instead of head-of-line blocking or wedging the queue."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if len(tokens) == 0:
             raise ValueError("empty prompt: a request needs at least one "
                              "token to prefill")
-        cap = self.cache.max_pages_per_slot * self.cache.page_size
-        if len(tokens) + 1 > cap:
-            raise ValueError(f"prompt of {len(tokens)} tokens + 1 exceeds the "
-                             f"engine context capacity {cap}")
         max_new = self.max_new_tokens if max_new_tokens is None \
             else max_new_tokens
         if max_new < 1:
             raise ValueError(f"max_new_tokens={max_new}: a request must be "
                              "allowed at least one output token")
+        req = Request(tokens=tokens, max_new_tokens=max_new,
+                      priority=priority, deadline_s=deadline_s,
+                      timeout_s=timeout_s)
+        req.submit_t = time.monotonic()
+        cap = self.cache.max_pages_per_slot * self.cache.page_size
         # worst-case cache footprint if this request runs alone: prompt plus
         # every generated token but the last (which is sampled, not written),
         # bounded by the per-slot context cap. Beyond the pool it can never
         # finish even after every other slot retires.
         peak = self.cache.pages_for(min(len(tokens) + max_new - 1, cap))
-        if peak > self.cache.stats.num_pages:
-            raise ValueError(f"prompt of {len(tokens)} tokens with "
-                             f"max_new_tokens={max_new} needs {peak} pages "
-                             f"but the pool only has "
-                             f"{self.cache.stats.num_pages}; it could never "
-                             "complete")
-        req = Request(tokens=tokens, max_new_tokens=max_new)
+        if len(tokens) + 1 > cap or peak > self.cache.stats.num_pages:
+            return self._shed(req)
+        if self.max_pending is not None \
+                and len(self.sched.pending) >= self.max_pending:
+            # bounded queue overflow: shed the least urgent of (new arrival,
+            # worst queued) — lowest priority, latest arrival loses, so a
+            # high-priority burst displaces stale low-priority backlog
+            # rather than bouncing off it
+            victim = min(self.sched.pending,
+                         key=lambda r: (r.priority, -r.rid))
+            if (victim.priority, -victim.rid) < (req.priority, -req.rid):
+                self.sched.drop_pending(victim)
+                self._shed(victim)
+            else:
+                return self._shed(req)
         return self.sched.submit(req)
+
+    def _finish_unslotted(self, req: Request, reason: str,
+                          sink: Optional[List[Request]] = None) -> Request:
+        """Retire a request that holds no slot (shed at submit, dropped from
+        the queue). Lands in ``sink`` when the caller is mid-step, else in
+        the shed buffer for the next step()/run() result."""
+        req.done = True
+        req.state = SCHED_DONE
+        req.finish_reason = reason
+        req.finish_t = time.monotonic()
+        (self._shed_buf if sink is None else sink).append(req)
+        return req
+
+    def _shed(self, req: Request) -> Request:
+        self.stats.sheds += 1
+        return self._finish_unslotted(req, "rejected")
+
+    def drain_shed(self) -> List[Request]:
+        """Requests retired outside a step (load-shed at submit, expired in
+        the queue) since the last drain. step()/run() fold these into their
+        returns; pool engines drain after every submit for accounting."""
+        out, self._shed_buf = self._shed_buf, []
+        return out
 
     def _retire(self, slot: int, reason: str) -> Request:
         self.cache.free_slot(slot)
@@ -499,12 +596,96 @@ class ContinuousEngine:
         self.stats.retired += 1
         req = self.sched.retire(slot)
         req.finish_reason = reason
+        if reason == "deadline":
+            self.stats.deadline_misses += 1
         return req
+
+    def _preempt(self, slot: int) -> Request:
+        """Evict ``slot`` mid-decode (recompute-from-pages): free its pages
+        and re-queue the request with prompt + everything generated so far
+        as its new prefill source. The resumed prefill's final-chunk logits
+        sample the token decode would have emitted next, so the output
+        stream is greedy-exact across any number of evictions. Fit is
+        guaranteed: a live slot has seq_lens + 1 <= context cap and at
+        most max_new - 1 generated tokens (the cap-th retires it), so
+        serve_tokens never outgrows the admission bounds submit checked."""
+        req = self.sched.running[slot]
+        self.cache.free_slot(slot)
+        self._next_in[slot] = tok.PAD
+        req.serve_tokens = np.concatenate(
+            [req.tokens, np.asarray(req.out, np.int32)])
+        req.prefill_pos = 0
+        req.preemptions += 1
+        req.reprefill_tokens += len(req.serve_tokens)
+        self.stats.preemptions += 1
+        self.stats.reprefill_tokens += len(req.serve_tokens)
+        return self.sched.preempt(slot)
+
+    def _preemptible(self, floor_priority: Optional[int] = None) -> List[int]:
+        """DECODING slots eligible for eviction: under the per-request
+        preemption cap and (when ``floor_priority`` is given) strictly
+        lower priority than the contender. Mid-prefill slots are never
+        victims — evicting one reclaims pages a re-admission immediately
+        re-needs, pure waste."""
+        out = []
+        for slot, req in self.sched.running.items():
+            if req.state != DECODING \
+                    or req.preemptions >= self.max_preemptions:
+                continue
+            if floor_priority is not None \
+                    and req.priority >= floor_priority:
+                continue
+            out.append(slot)
+        return out
+
+    def _try_preempt(self, incoming: Request) -> bool:
+        """Evict the lowest-priority latest-arrival eligible DECODING slot
+        to make room for ``incoming`` (strictly higher priority, waiting at
+        least ``preempt_after_s``). Returns whether a slot was freed."""
+        if time.monotonic() - incoming.submit_t < self.preempt_after_s:
+            return False
+        victims = self._preemptible(floor_priority=incoming.priority)
+        if not victims:
+            return False
+        slot = min(victims, key=lambda s: (self.sched.running[s].priority,
+                                           -self.sched.running[s].rid))
+        self._preempt(slot)
+        return True
+
+    def _resolve_stall(self) -> bool:
+        """Zero-progress escape hatch: evict one running slot so its pages
+        unwedge the rest. Only fires when eviction can help — someone else
+        is waiting for the pages (pending work, or at least two occupied
+        slots mutually stuck); a lone request that cannot step will never
+        benefit from evicting itself. Ignores priority: any slot under the
+        preemption cap is fair game, lowest priority first."""
+        if not self.sched.pending and len(self.sched.running) < 2:
+            return False
+        victims = self._preemptible()
+        if not victims:
+            return False
+        slot = min(victims, key=lambda s: (self.sched.running[s].priority,
+                                           -self.sched.running[s].rid))
+        self._preempt(slot)
+        return True
+
+    def _expire(self, retired: List[Request]) -> None:
+        """Cancel every request past its deadline/timeout — queued ones are
+        dropped, running ones reclaimed mid-stream (tokens already emitted
+        are kept). Finish reason "deadline" either way."""
+        now = time.monotonic()
+        for req in [r for r in self.sched.pending if r.expired(now)]:
+            self.sched.drop_pending(req)
+            self.stats.deadline_misses += 1
+            self._finish_unslotted(req, "deadline", sink=retired)
+        for slot in [s for s, r in self.sched.running.items()
+                     if r.expired(now)]:
+            retired.append(self._retire(slot, "deadline"))
 
     def _push_token(self, req: Request, token: int) -> Optional[Request]:
         """Record an emitted token; retire on EOS / request cap."""
         req.out.append(int(token))
-        req.token_t.append(time.time())
+        req.token_t.append(time.monotonic())
         if token == tok.EOS:
             return self._retire(req.slot, "eos")
         if req.n_generated >= req.max_new_tokens:
@@ -520,32 +701,52 @@ class ContinuousEngine:
         r = 0
         for slot in self.sched.prefilling_slots():
             req = self.sched.running[slot]
-            r += self.cache.pages_for(len(req.tokens)) \
+            r += self.cache.pages_for(len(req.serve_tokens)) \
                 - self.cache.owned_pages(slot)
         return r
 
     def _admit(self, retired: List[Request]) -> int:
-        """Claim free slots for pending requests. Chunked mode just assigns
-        the slot (chunks run in ``_prefill_step``); one-shot mode prefills
-        the whole prompt and scatters it into freshly allocated pages.
-        Returns the number of requests admitted."""
+        """Claim free slots for pending requests, priority-then-FIFO with a
+        bounded head-of-line lookahead: when the head doesn't fit the pool
+        right now, the first of the next ``admit_lookahead - 1`` queued
+        requests that does fit overtakes it (FIFO is preserved within
+        whatever fits — a skipped head stays ahead of everyone behind it
+        for the next attempt). When nothing in the window fits — or no
+        slot is free — and the head outranks a running request, the
+        lowest-priority DECODING slot is preempted to make room. Chunked
+        mode just assigns the slot (chunks run in ``_prefill_step``);
+        one-shot mode prefills the whole prompt and scatters it into
+        freshly allocated pages. Returns slots-worth of progress (admitted
+        + preempted-for-admission)."""
         admitted = 0
-        while self.sched.pending and self.sched.has_free_slot:
-            nxt = self.sched.peek_pending()
+        while self.sched.pending:
+            if not self.sched.has_free_slot:
+                if self._try_preempt(self.sched.pending[0]):
+                    admitted += 1   # progress: a slot was freed for the head
+                    continue
+                break
             reserve = self._reserved_prefill_pages() if self.prefill_chunk \
                 else 0
-            if not self.cache.can_admit(len(nxt.tokens), reserve=reserve):
+            idx = next(
+                (i for i, r in enumerate(
+                    self.sched.pending[:self.admit_lookahead])
+                 if self.cache.can_admit(len(r.serve_tokens),
+                                         reserve=reserve)), None)
+            if idx is None:
                 self.stats.admission_stalls += 1
+                if self._try_preempt(self.sched.pending[0]):
+                    continue   # freed pages: rescan the window
                 break
-            req = self.sched.admit()
+            req = self.sched.admit(idx)
             admitted += 1
             self.stats.admitted += 1
             if self.prefill_chunk:
                 continue   # state PREFILLING; chunks run this same step
-            n_tok = len(req.tokens)
+            n_tok = len(req.serve_tokens)
             spad = _round_up(n_tok, self.cache.page_size)
             logits, kv = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.tokens[None])}, spad)
+                self.params,
+                {"tokens": jnp.asarray(req.serve_tokens[None])}, spad)
             pages = self.cache.alloc_slot(req.slot, n_tok)
             kp, vp = self._scatter(self.cache.pool["k_pages"],
                                    self.cache.pool["v_pages"],
@@ -601,7 +802,8 @@ class ContinuousEngine:
         n_new = np.zeros((B,), np.int32)
         rows = np.zeros((B,), np.int32)          # 0 = scratch state row
         for i, (req, n) in enumerate(group):
-            chunk[i, :n] = req.tokens[req.prefill_pos:req.prefill_pos + n]
+            chunk[i, :n] = req.serve_tokens[req.prefill_pos:
+                                            req.prefill_pos + n]
             pt[i] = self.cache.page_table[req.slot]
             start[i] = req.prefill_pos
             n_new[i] = n
@@ -630,7 +832,7 @@ class ContinuousEngine:
             req.prefill_pos += n
             self.stats.prefill_tokens += n
             self.stats.prefill_chunks += 1
-            if req.prefill_pos == len(req.tokens):
+            if req.prefill_pos == len(req.serve_tokens):
                 finishing.append((i, req))
         if finishing:
             # one vocab projection per dispatch, and only when a prompt
@@ -665,7 +867,7 @@ class ContinuousEngine:
             skipped: List[int] = []
             for slot in pending:
                 req = self.sched.running[slot]
-                remaining = len(req.tokens) - req.prefill_pos
+                remaining = len(req.serve_tokens) - req.prefill_pos
                 width = self._chunk_width(remaining)
                 # the budget is charged at the bucketed dispatch width —
                 # the shape actually launched, which is what per-step
@@ -714,11 +916,13 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[Request]:
-        """Admit, advance prefill chunks under the step budget, decode one
-        token per DECODING slot, retire. Returns the requests completed
-        during this step."""
-        t0 = time.time()
-        retired: List[Request] = []
+        """Cancel expired requests, admit (preempting if priority demands),
+        advance prefill chunks under the step budget, decode one token per
+        DECODING slot, retire. Returns the requests completed during this
+        step, including any shed at submit since the last step."""
+        t0 = time.monotonic()
+        retired: List[Request] = self.drain_shed()
+        self._expire(retired)
         progressed = self._admit(retired)
         prefilled: List[int] = []
         if self.prefill_chunk:
@@ -776,12 +980,21 @@ class ContinuousEngine:
         elif not progressed and not retired \
                 and (self.sched.running or self.sched.pending):
             # nothing decoded, no prefill advanced, nothing admitted or
-            # retired, yet work remains: occupied slots all stalled on
-            # pages, or a pending request can't admit into an otherwise
-            # idle pool — neither can ever resolve
-            raise RuntimeError(
-                "page pool deadlock: no slot could step and no request "
-                "could admit or retire; provision more pages")
+            # retired, yet work remains. Resolution ladder: (1) pages held
+            # externally (hold_pages pressure) make the stall transient
+            # back-pressure — wait it out; (2) else evict a running slot
+            # if that can unwedge anyone (_resolve_stall); (3) otherwise
+            # occupied slots all stalled on pages, or a pending request
+            # can't admit into an otherwise idle pool — neither can ever
+            # resolve
+            if self.cache.held_pages:
+                self.stats.stall_steps += 1
+            elif self._resolve_stall():
+                progressed += 1
+            else:
+                raise RuntimeError(
+                    "page pool deadlock: no slot could step and no request "
+                    "could admit or retire; provision more pages")
         if steppable or progressed or retired:
             # prefill-only steps count too: they accrue wall_s, so leaving
             # them out of ``steps`` would overstate mean occupancy under
@@ -793,12 +1006,13 @@ class ContinuousEngine:
                 self.stats.prefill_steps += 1
                 if not steppable:
                     self.stats.prefill_only_steps += 1
-        self.stats.wall_s += time.time() - t0
+        self.stats.wall_s += time.monotonic() - t0
         return retired
 
     def run(self) -> List[Request]:
-        """Drain the queue; returns all requests retired during the drain."""
-        done: List[Request] = []
+        """Drain the queue; returns all requests retired during the drain
+        (requests shed at submit included)."""
+        done: List[Request] = self.drain_shed()
         while self.sched.has_work:
             done.extend(self.step())
         return done

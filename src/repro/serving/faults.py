@@ -1,0 +1,372 @@
+"""Deterministic fault injection for the continuous serving stack.
+
+Robustness claims are worthless untested, and wall-clock fault tests flake.
+Every fault here is *step-indexed* — it fires at an engine step number, not
+a timestamp — so a scenario replays bit-identically on any machine:
+
+* ``TierStall``     — a tier stops stepping for a step range (wedged
+                      device, GC pause, driver hiccup). Its queue holds;
+                      every other tier keeps streaming.
+* ``PagePressure``  — pages vanish from a tier's pool for a step range
+                      (``PagedKVCache.hold_pages``: a co-tenant, a defrag
+                      pass, a shrinking quota) and come back at the end.
+                      The engine must degrade — wait, preempt, or shed —
+                      never crash or leak.
+* ``AdmissionBurst``— a batch of prompts lands at one step, optionally
+                      high-priority / deadline-carrying, driving the
+                      preemption and load-shedding paths.
+
+``FaultHarness`` replays a fault schedule against a ``ContinuousPoolEngine``
+(or a bare ``ContinuousEngine``) and then audits the wreckage:
+``check_invariants`` demands every submitted request retired with a valid
+finish reason, every page back in the free pool (zero leaks), zero
+fragmentation, and empty queues. The module doubles as the CI chaos smoke:
+
+  PYTHONPATH=src python -m repro.serving.faults --smoke
+
+runs a stall, a pressure, and a burst scenario on tiny models and asserts
+the invariants plus greedy-exactness of preempted requests against
+uncontended reference runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .engine import ContinuousEngine
+from .pool import ContinuousPoolEngine
+from .scheduler import FINISH_REASONS, Request
+
+# the bare-engine harness registers its single engine under this tier name
+SOLO = "engine"
+
+
+@dataclasses.dataclass(frozen=True)
+class TierStall:
+    """Tier ``tier`` does not step during [start, start + steps): a wedged
+    device. Pending and running requests hold their state; deadlines keep
+    ticking (they expire when the tier resumes)."""
+    tier: str
+    start: int
+    steps: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PagePressure:
+    """``pages`` free pages leave tier ``tier``'s pool at step ``start``
+    (``hold_pages``; capped at what is actually free) and return at step
+    ``start + steps``. Held pages count as in use, so every admission and
+    extension decision feels the squeeze."""
+    tier: str
+    start: int
+    steps: int
+    pages: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionBurst:
+    """``prompts`` all submitted at step ``step`` on ``tier`` with shared
+    robustness attributes — the overload / priority-traffic generator."""
+    step: int
+    prompts: Tuple[np.ndarray, ...]
+    tier: str = SOLO
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    timeout_s: Optional[float] = None
+    max_new_tokens: Optional[int] = None
+
+
+Fault = Union[TierStall, PagePressure, AdmissionBurst]
+
+
+class FaultHarness:
+    """Steps a pool (or bare engine) while injecting a step-indexed fault
+    schedule, recording every request it submits plus every retirement."""
+
+    def __init__(self, target: Union[ContinuousPoolEngine, ContinuousEngine],
+                 faults: Sequence[Fault] = (), max_steps: int = 10_000):
+        if isinstance(target, ContinuousPoolEngine):
+            self.pool: Optional[ContinuousPoolEngine] = target
+            self.engines: Dict[str, ContinuousEngine] = dict(
+                zip(target.names, target.engines))
+        else:
+            self.pool = None
+            self.engines = {SOLO: target}
+        self.faults: List[Fault] = list(faults)
+        for f in self.faults:
+            if f.tier not in self.engines:
+                raise ValueError(f"fault {f} names tier {f.tier!r}; harness "
+                                 f"serves {tuple(self.engines)}")
+        self.max_steps = max_steps
+        self.requests: List[Request] = []
+        self.retired: List[Request] = []
+        self._held: Dict[PagePressure, np.ndarray] = {}
+
+    # ------------------------------------------------------------- injection
+    def submit(self, tier: str, prompt: np.ndarray,
+               max_new_tokens: Optional[int] = None, *, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               timeout_s: Optional[float] = None) -> Request:
+        """Submit one tracked request outside the fault schedule (base
+        load). Tracked requests are what ``check_invariants`` audits."""
+        if self.pool is not None:
+            req = self.pool.submit_to(tier, prompt, max_new_tokens,
+                                      priority=priority, deadline_s=deadline_s,
+                                      timeout_s=timeout_s)
+        else:
+            req = self.engines[tier].submit(prompt, max_new_tokens,
+                                            priority=priority,
+                                            deadline_s=deadline_s,
+                                            timeout_s=timeout_s)
+        self.requests.append(req)
+        return req
+
+    def _inject(self, step_i: int):
+        for f in self.faults:
+            if isinstance(f, PagePressure):
+                cache = self.engines[f.tier].cache
+                if f.start == step_i:
+                    self._held[f] = cache.hold_pages(f.pages)
+                elif f.start + f.steps == step_i and f in self._held:
+                    cache.release_pages(self._held.pop(f))
+            elif isinstance(f, AdmissionBurst) and f.step == step_i:
+                for p in f.prompts:
+                    self.submit(f.tier, p, f.max_new_tokens,
+                                priority=f.priority, deadline_s=f.deadline_s,
+                                timeout_s=f.timeout_s)
+
+    def _stalled(self, step_i: int) -> List[str]:
+        return [f.tier for f in self.faults if isinstance(f, TierStall)
+                and f.start <= step_i < f.start + f.steps]
+
+    # --------------------------------------------------------------- driving
+    def run(self) -> List[Request]:
+        """Step until the fault schedule is exhausted AND every queue is
+        drained; returns (and records) every retirement. Raises past
+        ``max_steps`` — a scenario that never drains is itself a failed
+        robustness test."""
+        horizon = max((f.start + f.steps if not isinstance(f, AdmissionBurst)
+                       else f.step for f in self.faults), default=0)
+        step_i = 0
+        while True:
+            self._inject(step_i)
+            stalled = self._stalled(step_i)
+            if self.pool is not None:
+                self.retired.extend(self.pool.step(stalled=stalled))
+            else:
+                eng = self.engines[SOLO]
+                if SOLO not in stalled and eng.sched.has_work:
+                    self.retired.extend(eng.step())
+                else:
+                    self.retired.extend(eng.drain_shed())
+            step_i += 1
+            if step_i > self.max_steps:
+                raise RuntimeError(f"fault scenario did not drain within "
+                                   f"{self.max_steps} steps")
+            if step_i > horizon \
+                    and not any(e.sched.has_work or e._shed_buf
+                                for e in self.engines.values()):
+                self._inject(step_i)   # releases pressure ending exactly here
+                break
+        return self.retired
+
+    # ---------------------------------------------------------------- audits
+    def check_invariants(self) -> List[str]:
+        """Post-drain audit; returns human-readable violations (empty =
+        healthy). The contract after any fault schedule: every tracked
+        request retired with a valid finish reason, queues empty, every
+        page back in the free pool, no external holds left, zero
+        fragmentation."""
+        bad: List[str] = []
+        for r in self.requests:
+            if not r.done:
+                bad.append(f"request {r.rid} never retired (state {r.state})")
+            elif r.finish_reason not in FINISH_REASONS:
+                bad.append(f"request {r.rid} retired with invalid "
+                           f"finish_reason {r.finish_reason!r}")
+        for name, eng in self.engines.items():
+            c = eng.cache
+            if eng.sched.pending or eng.sched.running:
+                bad.append(f"{name}: queue not drained "
+                           f"({len(eng.sched.pending)} pending, "
+                           f"{len(eng.sched.running)} running)")
+            if c.stats.pages_in_use != 0:
+                bad.append(f"{name}: {c.stats.pages_in_use} pages leaked")
+            if len(c._free) != c.num_pages - 1:
+                bad.append(f"{name}: free list holds {len(c._free)} of "
+                           f"{c.num_pages - 1} pages")
+            if c.held_pages != 0:
+                bad.append(f"{name}: {c.held_pages} pages still held")
+            if c.fragmentation != 0.0:
+                bad.append(f"{name}: fragmentation {c.fragmentation:.3f} "
+                           "after drain")
+        return bad
+
+
+# ------------------------------------------------------------ CLI chaos smoke
+@dataclasses.dataclass
+class StaticPolicy:
+    """Fixed-tier dispatch for harness scenarios (the routing policy is not
+    under test here): every query to tier ``tier``."""
+    n_tiers: int
+    tier: int = 0
+
+    def decide(self, tokens, mask):
+        n = len(tokens)
+        return (np.full((n,), self.tier, np.int64),
+                np.zeros((n,), np.float64))
+
+
+def _tiny_pool(n_slots: int = 2, max_seq: int = 48, max_new: int = 6,
+               **engine_kw):
+    """Two-tier pool of tiny dense paged models for the smoke scenarios.
+    Returns (pool, bundles) — bundles kept for uncontended reference runs."""
+    import jax
+    from repro.data import tokenizer as tok
+    from repro.models import build_model
+    from repro.models.config import ArchConfig
+
+    base = dict(family="dense", vocab_size=tok.VOCAB_SIZE,
+                vocab_pad_multiple=16, n_layers=2, d_model=32, n_heads=2,
+                n_kv_heads=2, d_ff=64, head_dim=16, attn_chunk=16,
+                cache_layout="paged", kv_page_size=8)
+    bundles = []
+    for name, seed in (("fault-a", 1), ("fault-b", 2)):
+        b = build_model(ArchConfig(name=name, **base))
+        bundles.append((b, b.init(jax.random.PRNGKey(seed))))
+    engines = [ContinuousEngine(b, p, max_new_tokens=max_new,
+                                n_slots=n_slots, max_seq=max_seq,
+                                **engine_kw)
+               for b, p in bundles]
+    pool = ContinuousPoolEngine(StaticPolicy(2), [("a", engines[0]),
+                                                  ("b", engines[1])])
+    return pool, bundles
+
+
+def _prompts(rng, n: int, lo: int = 4, hi: int = 16):
+    from repro.data import tokenizer as tok
+    return tuple(rng.integers(4, tok.VOCAB_SIZE,
+                              (int(l),)).astype(np.int32)
+                 for l in rng.integers(lo, hi, (n,)))
+
+
+def scenario_stall(verbose: bool = True) -> FaultHarness:
+    """Tier b wedges for a step range mid-stream; tier a must keep
+    retiring, and b's queue must survive the stall and drain after."""
+    rng = np.random.default_rng(0)
+    pool, _ = _tiny_pool()
+    h = FaultHarness(pool, [
+        TierStall("b", start=2, steps=12),
+        AdmissionBurst(step=0, prompts=_prompts(rng, 3), tier="a"),
+        AdmissionBurst(step=0, prompts=_prompts(rng, 3), tier="b"),
+    ])
+    h.run()
+    bad = h.check_invariants()
+    assert not bad, bad
+    a_done = max(r.finish_t for r in h.requests[:3])
+    b_done = min(r.finish_t for r in h.requests[3:])
+    assert a_done <= b_done, "stalled tier b retired before healthy tier a"
+    if verbose:
+        print(f"stall: {len(h.retired)} retired, tier a drained during "
+              f"tier b's stall, no leaks")
+    return h
+
+
+def scenario_pressure(verbose: bool = True) -> FaultHarness:
+    """Tier a's entire free pool vanishes before its stream arrives; the
+    engine must wait the squeeze out (stall_steps, not a deadlock crash)
+    and drain clean once the pages return."""
+    rng = np.random.default_rng(1)
+    pool, _ = _tiny_pool(n_slots=2, max_seq=32)
+    eng = pool.engine("a")
+    squeeze = eng.cache.stats.num_pages   # hold EVERY free page
+    h = FaultHarness(pool, [
+        # listed first: the hold lands before the same-step burst submits
+        PagePressure("a", start=0, steps=8, pages=squeeze),
+        AdmissionBurst(step=0, prompts=_prompts(rng, 4, lo=6, hi=12),
+                       tier="a"),
+    ])
+    h.run()
+    bad = h.check_invariants()
+    assert not bad, bad
+    assert eng.stats.stall_steps > 0, \
+        "a fully-held pool never put the engine in its wait state"
+    if verbose:
+        print(f"pressure: {len(h.retired)} retired under a "
+              f"{squeeze}-page squeeze "
+              f"({eng.stats.stall_steps} waited steps, "
+              f"{eng.stats.preemptions} preemptions), no leaks")
+    return h
+
+
+def scenario_burst(verbose: bool = True) -> FaultHarness:
+    """Overload: a bounded-queue tier takes a low-priority base load, then
+    a high-priority burst bigger than the queue — forcing preemptions,
+    sheds, and (deadline_s=0) deterministic deadline misses — and every
+    request must still retire with a valid reason, with preempted
+    requests' outputs greedy-exact vs uncontended runs."""
+    rng = np.random.default_rng(2)
+    pool, bundles = _tiny_pool(n_slots=1, max_seq=48, max_pending=3)
+    base = _prompts(rng, 4, lo=5, hi=10)
+    burst = _prompts(rng, 5, lo=5, hi=10)
+    doomed = _prompts(rng, 2, lo=5, hi=10)
+    h = FaultHarness(pool, [
+        AdmissionBurst(step=0, prompts=base, tier="a", priority=0),
+        AdmissionBurst(step=4, prompts=burst, tier="a", priority=5),
+        # outranks the burst so the bounded queue admits them (displacing
+        # burst members) instead of shedding them as mere overflow — their
+        # zero deadline then expires them deterministically
+        AdmissionBurst(step=4, prompts=doomed, tier="a", priority=6,
+                       deadline_s=0.0),
+    ])
+    h.run()
+    bad = h.check_invariants()
+    assert not bad, bad
+    eng = pool.engine("a")
+    assert eng.stats.preemptions > 0, "burst never forced a preemption"
+    assert eng.stats.sheds > 0, "overload never shed a request"
+    assert eng.stats.deadline_misses >= len(doomed), \
+        "deadline_s=0 requests did not all miss"
+    # preempted requests must be greedy-exact vs uncontended runs
+    import jax  # noqa: F401  (bundles built above; engine reuse only)
+    b, p = bundles[0]
+    preempted = [r for r in h.requests if r.preemptions > 0
+                 and r.finish_reason in ("eos", "length")]
+    assert preempted, "no preempted request survived to compare"
+    for r in preempted:
+        ref_eng = ContinuousEngine(b, p, max_new_tokens=r.max_new_tokens,
+                                   n_slots=1, max_seq=64)
+        ref = ref_eng.submit(r.tokens)
+        ref_eng.run()
+        assert r.out == ref.out, (r.rid, r.out, ref.out)
+    if verbose:
+        print(f"burst: {len(h.retired)} retired "
+              f"({eng.stats.preemptions} preemptions, {eng.stats.sheds} "
+              f"sheds, {eng.stats.deadline_misses} deadline misses), "
+              f"{len(preempted)} preempted requests greedy-exact, no leaks")
+    return h
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the three chaos scenarios and assert "
+                         "invariants (the CI chaos job)")
+    ap.add_argument("--scenario", choices=("stall", "pressure", "burst"),
+                    help="run one scenario")
+    args = ap.parse_args(argv)
+    scenarios = {"stall": scenario_stall, "pressure": scenario_pressure,
+                 "burst": scenario_burst}
+    names = [args.scenario] if args.scenario else list(scenarios)
+    if not (args.smoke or args.scenario):
+        ap.error("pick --smoke or --scenario")
+    for name in names:
+        scenarios[name]()
+    print(f"chaos smoke OK: {', '.join(names)}")
+
+
+if __name__ == "__main__":
+    main()

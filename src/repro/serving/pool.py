@@ -92,19 +92,28 @@ class ContinuousPoolEngine:
 
     @property
     def has_work(self) -> bool:
-        return any(e.sched.has_work for e in self.engines)
+        # shed buffers count: a request rejected at submit still needs one
+        # step() to surface and hit the meter
+        return any(e.sched.has_work or e._shed_buf for e in self.engines)
 
     # -------------------------------------------------------------- requests
     def submit(self, query_tokens: np.ndarray, query_mask: np.ndarray,
                max_new_tokens: Optional[np.ndarray] = None,
-               trim_padding: bool = True
+               trim_padding: bool = True, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               timeout_s: Optional[float] = None
                ) -> Tuple[List[Request], np.ndarray, np.ndarray]:
         """Score and enqueue a batch of queries. Returns (requests,
-        tier_idx, scores); requests retire later via step()/run().
+        tier_idx, scores); requests retire later via step()/run() — except
+        load-shed ones (finish reason "rejected"), which come back already
+        done and hit the meter at the next step().
 
         ``max_new_tokens``: optional per-request output caps (N,).
         ``trim_padding``: drop each row's PAD tail (from ``query_mask``)
-        before enqueueing — paged prefill only pays for real tokens."""
+        before enqueueing — paged prefill only pays for real tokens.
+        ``priority`` / ``deadline_s`` / ``timeout_s`` apply to the whole
+        batch (see ContinuousEngine.submit); use ``submit_to`` for
+        per-request robustness attributes."""
         tier_idx, scores = self.policy.decide(query_tokens, query_mask)
         tier_idx = np.asarray(tier_idx, np.int64)
         if tier_idx.size and (tier_idx.min() < 0
@@ -123,16 +132,43 @@ class ContinuousPoolEngine:
                 nz = np.flatnonzero(np.asarray(query_mask[i]))
                 row = row[:int(nz[-1]) + 1] if len(nz) else row[:1]
             cap = int(max_new_tokens[i]) if max_new_tokens is not None else None
-            req = eng.submit(row, max_new_tokens=cap)
+            req = eng.submit(row, max_new_tokens=cap, priority=priority,
+                             deadline_s=deadline_s, timeout_s=timeout_s)
             self._tier_of[req.rid] = int(tier)
             reqs.append(req)
         return reqs, tier_idx, scores
 
+    def submit_to(self, tier: Union[int, str], tokens: np.ndarray,
+                  max_new_tokens: Optional[int] = None, *,
+                  priority: int = 0, deadline_s: Optional[float] = None,
+                  timeout_s: Optional[float] = None) -> Request:
+        """Enqueue one request directly on a named (or indexed) tier,
+        bypassing the routing policy — the ops/fault-injection entry point
+        (targeted bursts, health probes). Accounting is identical to
+        policy-routed traffic."""
+        t = self.names.index(tier) if isinstance(tier, str) else int(tier)
+        if not 0 <= t < self.n_tiers:
+            raise ValueError(f"tier {tier!r} not in pool {self.names}")
+        req = self.engines[t].submit(tokens, max_new_tokens=max_new_tokens,
+                                     priority=priority, deadline_s=deadline_s,
+                                     timeout_s=timeout_s)
+        self._tier_of[req.rid] = t
+        return req
+
     def _account(self, retired: List[Request]):
         for req in retired:
             # pop: the registry must not grow for the life of the process
-            self.meter.record(np.array([self._tier_of.pop(req.rid)]),
-                              req.n_generated)
+            tier = self._tier_of.pop(req.rid)
+            if req.finish_reason == "rejected":
+                # shed, not served: no call/token record, or the §2.3 cost
+                # metrics would dilute with traffic no tier ran
+                self.meter.record_shed(tier)
+                continue
+            self.meter.record(np.array([tier]), req.n_generated)
+            self.meter.record_robustness(
+                tier, preemptions=req.preemptions,
+                reprefill_tokens=req.reprefill_tokens,
+                deadline_miss=req.finish_reason == "deadline")
 
     def _distinct_engines(self) -> List[ContinuousEngine]:
         """Engines deduped by identity, cheapest-tier-first: a tier may
@@ -143,14 +179,21 @@ class ContinuousPoolEngine:
                 out.append(eng)
         return out
 
-    def step(self) -> List[Request]:
+    def step(self, stalled: Sequence[str] = ()) -> List[Request]:
         """Advance every engine by one full step each (admission, packed
         prefill chunks, one decode token per DECODING slot, retirement —
         see ContinuousEngine.step), cheapest tier first, with no
-        cross-engine join. Returns the requests retired this step."""
+        cross-engine join. ``stalled`` names tiers to skip this step — the
+        fault-injection hook for a wedged device: its queue holds, the
+        other tiers keep streaming. Returns the requests retired this
+        step."""
+        skip = [self.engine(n) for n in stalled]
         retired: List[Request] = []
         for eng in self._distinct_engines():
-            if eng.sched.has_work:
+            # submit-time sheds drain even from a stalled tier: rejection
+            # happens host-side at the front door, not on the device
+            retired.extend(eng.drain_shed())
+            if eng.sched.has_work and not any(eng is s for s in skip):
                 retired.extend(eng.step())
         self._account(retired)
         return retired

@@ -1,9 +1,10 @@
-"""Slot-based continuous-batching scheduler.
+"""Slot-based continuous-batching scheduler with priority classes.
 
 The engine decodes a fixed number of *slots* every step (jit-stable shapes).
-Requests queue in submission order; whenever a slot frees up (EOS /
-length-cap retirement) the scheduler admits the next pending request into it
-— no batch barrier, so short requests never wait for stragglers that merely
+Requests queue by priority class — higher ``priority`` admits first, FIFO
+within a class — and whenever a slot frees up (EOS / length-cap retirement,
+deadline cancellation, or preemption) the scheduler admits the best pending
+request into it, so short requests never wait for stragglers that merely
 shared their admission batch. Page-pool admission control lives with the
 engine (a request is only admitted when ``PagedKVCache.can_admit`` holds).
 
@@ -11,14 +12,24 @@ Slot states: an occupied slot is either PREFILLING (its prompt is still
 streaming into the pool chunk-by-chunk — see ContinuousEngine's chunked
 admission) or DECODING (prompt resident, one token emitted per step). The
 one-shot prefill path moves a slot straight to DECODING at admission.
+A DECODING slot may be PREEMPTED: its pages are reclaimed and the request
+re-enters the pending queue at its original (priority, arrival) position,
+with its prompt *plus everything it already generated* as the new prefill
+source (``serve_tokens``) — resumption is one chunked prefill, not a
+restart, and stays greedy-exact.
+
+All lifecycle stamps (``submit_t`` / ``start_t`` / ``finish_t`` /
+``token_t``) are ``time.monotonic()`` — wall-clock jumps must not corrupt
+latency, TTFT, queue-time, or deadline arithmetic. They are only meaningful
+relative to other monotonic stamps from the same process.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import itertools
 import math
 import time
-from collections import deque
 from typing import List, Optional
 
 import numpy as np
@@ -29,25 +40,62 @@ _RID = itertools.count()
 QUEUED = "queued"            # submitted, waiting for a slot
 PREFILLING = "prefilling"    # slot assigned, prompt streaming in chunks
 DECODING = "decoding"        # prompt resident, emitting one token per step
+PREEMPTED = "preempted"      # evicted mid-decode, re-queued for re-prefill
 DONE = "done"                # retired
 
+# The only values ``Request.finish_reason`` may take once ``done``:
+#   eos         — the model emitted tok.EOS
+#   length      — the request hit its own max_new_tokens cap
+#   context_cap — the slot hit the engine's per-slot context capacity
+#   rejected    — load-shed: bounded-queue overflow, or a prompt that could
+#                 never fit the pool (reject-at-submit)
+#   deadline    — cancelled for missing its deadline/timeout, possibly
+#                 mid-stream (tokens already emitted are kept)
+FINISH_REASONS = ("eos", "length", "context_cap", "rejected", "deadline")
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One serving request's lifecycle record."""
+    """One serving request's lifecycle record.
+
+    ``priority`` is an arbitrary int, higher = more urgent (default 0); it
+    orders admission and selects preemption victims, never changes decoding.
+    ``deadline_s`` is a completion deadline in seconds from submission;
+    ``timeout_s`` an in-flight cap from (first) admission. Either expiring
+    cancels the request with finish reason "deadline".
+    """
     tokens: np.ndarray                     # prompt (1-d int32)
     max_new_tokens: int
     rid: int = dataclasses.field(default_factory=lambda: next(_RID))
-    submit_t: float = 0.0                  # wall time enqueued
-    start_t: float = 0.0                   # wall time admitted to a slot
-    finish_t: float = 0.0                  # wall time retired
+    priority: int = 0                      # higher admits first
+    deadline_s: Optional[float] = None     # seconds from submit_t
+    timeout_s: Optional[float] = None      # seconds from start_t
+    submit_t: float = 0.0                  # monotonic time enqueued
+    start_t: float = 0.0                   # monotonic time first admitted
+    finish_t: float = 0.0                  # monotonic time retired
     slot: Optional[int] = None
     out: list = dataclasses.field(default_factory=list)  # emitted token ids
-    token_t: list = dataclasses.field(default_factory=list)  # emit wall times
+    token_t: list = dataclasses.field(default_factory=list)  # emit times
     done: bool = False
     state: str = QUEUED
-    prefill_pos: int = 0                   # prompt tokens already prefilled
-    finish_reason: str = ""                # eos | length | context_cap
+    prefill_pos: int = 0                   # serve_tokens already prefilled
+    finish_reason: str = ""                # see FINISH_REASONS
+    preemptions: int = 0                   # times evicted mid-decode
+    reprefill_tokens: int = 0              # tokens re-prefilled after evictions
+    # what admission actually prefills: the prompt, extended at every
+    # preemption with the tokens generated so far, so resumption is one
+    # chunked prefill whose final-chunk logits yield the NEXT token
+    serve_tokens: np.ndarray = None
+
+    def __post_init__(self):
+        if self.serve_tokens is None:
+            self.serve_tokens = self.tokens
+
+    def __lt__(self, other: "Request") -> bool:
+        """Priority-then-FIFO queue order: higher priority first, earlier
+        arrival (smaller rid) within a class. Preempted requests keep their
+        original rid, so re-queueing restores their position."""
+        return (-self.priority, self.rid) < (-other.priority, other.rid)
 
     @property
     def n_generated(self) -> int:
@@ -55,7 +103,7 @@ class Request:
 
     @property
     def latency(self) -> float:
-        """Submission-to-retirement wall time; NaN while still in flight."""
+        """Submission-to-retirement time; NaN while still in flight."""
         return self.finish_t - self.submit_t if self.done else math.nan
 
     @property
@@ -63,20 +111,39 @@ class Request:
         """Time to first token from submission; NaN before the first token."""
         return self.token_t[0] - self.submit_t if self.token_t else math.nan
 
+    @property
+    def queue_time(self) -> float:
+        """Submission-to-first-admission wait; NaN while still queued (or
+        shed before ever reaching a slot). Preemptions do not reset it."""
+        return self.start_t - self.submit_t if self.start_t else math.nan
+
+    def expired(self, now: float) -> bool:
+        """True once the deadline (from submission) or timeout (from first
+        admission) has passed — the engine then cancels the request with
+        finish reason "deadline", reclaiming its slot mid-stream if needed."""
+        if self.deadline_s is not None \
+                and now - self.submit_t >= self.deadline_s:
+            return True
+        return self.timeout_s is not None and bool(self.start_t) \
+            and now - self.start_t >= self.timeout_s
+
 
 class ContinuousScheduler:
-    """Tracks pending queue and the slot -> request assignment."""
+    """Tracks the priority-ordered pending queue and the slot -> request
+    assignment."""
 
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
-        self.pending: deque[Request] = deque()
+        # kept sorted by Request.__lt__: (priority desc, arrival asc)
+        self.pending: List[Request] = []
         self.running: dict[int, Request] = {}
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0,1,..
 
     def submit(self, req: Request) -> Request:
-        """Enqueue ``req`` (FIFO) and stamp its submission wall time."""
-        req.submit_t = time.time()
-        self.pending.append(req)
+        """Enqueue ``req`` at its (priority, arrival) position and stamp its
+        submission time."""
+        req.submit_t = time.monotonic()
+        bisect.insort(self.pending, req)
         return req
 
     @property
@@ -89,16 +156,20 @@ class ContinuousScheduler:
         return bool(self.pending or self.running)
 
     def peek_pending(self) -> Optional[Request]:
-        """Head-of-queue request without dequeuing (admission control
-        inspects its prompt length first), or None."""
+        """Head-of-queue request — highest priority, earliest arrival —
+        without dequeuing (admission control inspects its prompt length
+        first), or None."""
         return self.pending[0] if self.pending else None
 
-    def admit(self) -> Request:
-        """Move the head-of-queue request into a free slot (caller has
-        already secured its cache pages)."""
-        req = self.pending.popleft()
+    def admit(self, idx: int = 0) -> Request:
+        """Move ``pending[idx]`` into a free slot (caller has already
+        secured its cache pages). ``idx > 0`` is the engine's bounded
+        head-of-line lookahead: a later request that fits now may overtake
+        a head that doesn't."""
+        req = self.pending.pop(idx)
         req.slot = self._free_slots.pop()
-        req.start_t = time.time()
+        if not req.start_t:   # preempted re-admissions keep the first stamp
+            req.start_t = time.monotonic()
         req.state = PREFILLING
         self.running[req.slot] = req
         return req
@@ -107,9 +178,27 @@ class ContinuousScheduler:
         req = self.running.pop(slot)
         req.done = True
         req.state = DONE
-        req.finish_t = time.time()
+        req.finish_t = time.monotonic()
         req.slot = None
         self._free_slots.append(slot)
+        return req
+
+    def preempt(self, slot: int) -> Request:
+        """Evict the request occupying ``slot`` back into the pending queue
+        (state PREEMPTED) and free the slot. The caller reclaims its cache
+        pages and rebuilds ``serve_tokens``; the original rid keeps its
+        FIFO position within its priority class."""
+        req = self.running.pop(slot)
+        req.slot = None
+        req.state = PREEMPTED
+        self._free_slots.append(slot)
+        bisect.insort(self.pending, req)
+        return req
+
+    def drop_pending(self, req: Request) -> Request:
+        """Remove a queued request (deadline expiry / load shedding). The
+        caller stamps its finish state."""
+        self.pending.remove(req)
         return req
 
     def prefilling_slots(self) -> List[int]:

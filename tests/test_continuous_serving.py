@@ -126,15 +126,20 @@ def test_continuous_admission_stall_then_progress():
 def test_continuous_rejects_oversized_prompt_and_unsupported_family():
     cfg, m, p = _bundle()
     ce = ContinuousEngine(m, p, n_slots=1, page_size=8, max_seq=16)
+    # prompts that can never be served are load-shed, not raised: the
+    # request comes back already done with finish reason "rejected" and
+    # surfaces through the next step() for accounting
+    r = ce.submit(np.arange(16, dtype=np.int32) + 4)  # 16 + 1 > 16 cap
+    assert r.done and r.finish_reason == "rejected" and r.n_generated == 0
+    assert [q is r for q in ce.step()] == [True]
     with pytest.raises(ValueError):
-        ce.submit(np.arange(16, dtype=np.int32) + 4)  # 16 + 1 > 16 cap
-    with pytest.raises(ValueError):
-        ce.submit(np.array([], np.int32))             # empty prompt
+        ce.submit(np.array([], np.int32))             # empty prompt: caller bug
     # a prompt needing more pages than the whole pool can never admit
     ce2 = ContinuousEngine(m, p, n_slots=2, page_size=8, max_seq=32,
                            num_pages=2)               # 1 usable page
-    with pytest.raises(ValueError):
-        ce2.submit(np.full((12,), 5, np.int32))       # needs 2 pages
+    r2 = ce2.submit(np.full((12,), 5, np.int32))      # needs 2 pages
+    assert r2.done and r2.finish_reason == "rejected"
+    assert ce2.run() == [r2]
     # ssm stacks serve continuously since the recurrent-state pool, but
     # their state streams in through chunked prefill — one-shot admission
     # has no page-shaped state to scatter

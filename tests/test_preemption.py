@@ -1,0 +1,204 @@
+"""Preemptive scheduling, deadlines, and graceful degradation: preemption
+greedy-exactness (recompute-from-pages), priority admission, bounded-queue
+load shedding, deadline/timeout cancellation, the starvation backstop, and
+the fault-injection harness's zero-leak invariants."""
+import numpy as np
+import jax
+import pytest
+
+from repro.models import build_model
+from repro.serving import (AdmissionBurst, ContinuousEngine, FaultHarness,
+                           PagePressure)
+from repro.serving.faults import SOLO
+from repro.serving.scheduler import DECODING, PREEMPTED, QUEUED
+from conftest import tiny_cfg
+
+
+def _bundle(seed=0, **kw):
+    cfg = tiny_cfg("dense", **kw)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(seed))
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(4, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _engine(m, p, **kw):
+    kw.setdefault("max_new_tokens", 6)
+    kw.setdefault("n_slots", 1)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq", 48)
+    return ContinuousEngine(m, p, **kw)
+
+
+def _assert_clean(ce):
+    """Every page returned, nothing held, queues drained."""
+    assert ce.cache.stats.pages_in_use == 0
+    assert ce.cache.held_pages == 0
+    assert not ce.sched.has_work and not ce._shed_buf
+
+
+# ----------------------------------------------------------------- preemption
+def test_preempt_resume_is_greedy_exact():
+    """A request evicted mid-decode and resumed via one chunked re-prefill
+    of prompt + generated prefix must emit the same tokens as an
+    uncontended run — recompute-from-pages loses nothing."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(0)
+    lo_prompt = _prompt(rng, cfg, 12)
+    hi_prompt = _prompt(rng, cfg, 10)
+
+    ce = _engine(m, p)
+    lo = ce.submit(lo_prompt, priority=0)
+    for _ in range(3):          # admit + prefill + a couple of decode steps
+        ce.step()
+    assert lo.state == DECODING and lo.n_generated >= 1
+    g = lo.n_generated
+
+    hi = ce.submit(hi_prompt, priority=5)
+    ce.step()                   # strictly-higher priority evicts lo
+    assert lo.state in (PREEMPTED, QUEUED) and lo.slot is None
+    assert lo.preemptions == 1
+    assert len(lo.serve_tokens) == len(lo_prompt) + g
+    assert hi.slot is not None
+
+    retired = ce.run()
+    assert {r.rid for r in retired} >= {lo.rid, hi.rid} or \
+        all(r.done for r in (lo, hi))
+    assert hi.finish_t <= lo.finish_t          # hi never waited on lo
+    assert lo.done and lo.finish_reason in ("eos", "length")
+    assert lo.reprefill_tokens >= len(lo_prompt) + g
+    assert ce.stats.preemptions == 1
+    assert ce.stats.reprefill_tokens == lo.reprefill_tokens
+
+    # uncontended reference: same prompt, empty engine, greedy decode
+    ref = _engine(m, p)
+    r = ref.submit(lo_prompt)
+    ref.run()
+    assert r.out == lo.out
+    _assert_clean(ce)
+
+
+def test_preemption_backstop_grants_immunity():
+    """max_preemptions=0 makes every running request immune — a
+    higher-priority arrival waits instead of starving the victim."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(1)
+    ce = _engine(m, p, max_preemptions=0)
+    lo = ce.submit(_prompt(rng, cfg, 10), priority=0)
+    for _ in range(2):
+        ce.step()
+    assert lo.state == DECODING
+    hi = ce.submit(_prompt(rng, cfg, 8), priority=9)
+    ce.step()
+    assert lo.slot is not None and hi.slot is None   # no eviction
+    ce.run()
+    assert lo.preemptions == 0 and ce.stats.preemptions == 0
+    assert lo.done and hi.done
+    assert hi.finish_reason in ("eos", "length")
+    _assert_clean(ce)
+
+
+def test_priority_orders_admission():
+    """With the slot busy and preemption disabled, a late high-priority
+    arrival overtakes earlier low-priority queue entries."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(2)
+    ce = _engine(m, p, max_preemptions=0, max_new_tokens=4)
+    first = ce.submit(_prompt(rng, cfg, 8))
+    ce.step()
+    low = ce.submit(_prompt(rng, cfg, 8), priority=0)
+    high = ce.submit(_prompt(rng, cfg, 8), priority=3)
+    assert ce.sched.pending[0] is high   # priority-then-FIFO queue order
+    ce.run()
+    assert first.done and low.done and high.done
+    assert high.start_t <= low.start_t
+    assert low.queue_time >= high.queue_time >= 0.0
+    _assert_clean(ce)
+
+
+# ------------------------------------------------------------- load shedding
+def test_bounded_queue_sheds_lowest_priority():
+    """Overflow on a bounded queue sheds the worst (priority, latest) of
+    queue + arrival with finish reason "rejected"; the shed request
+    surfaces through the next step() exactly once."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(3)
+    ce = _engine(m, p, max_pending=1, max_preemptions=0)
+    busy = ce.submit(_prompt(rng, cfg, 8))
+    ce.step()                                        # slot occupied
+    queued = ce.submit(_prompt(rng, cfg, 8), priority=0)
+    assert not queued.done
+    vip = ce.submit(_prompt(rng, cfg, 8), priority=5)
+    # displacement: the queued pri-0 request is shed, the VIP takes its seat
+    assert queued.done and queued.finish_reason == "rejected"
+    assert queued.n_generated == 0 and not vip.done
+    assert ce.sched.pending == [vip]
+    # an arrival no better than the resident VIP sheds itself
+    walkin = ce.submit(_prompt(rng, cfg, 8), priority=0)
+    assert walkin.done and walkin.finish_reason == "rejected"
+    retired = ce.step()
+    assert queued in retired and walkin in retired   # surfaced for accounting
+    ce.run()
+    assert ce.stats.sheds == 2
+    assert busy.done and vip.done
+    assert vip.finish_reason in ("eos", "length")
+    _assert_clean(ce)
+
+
+# ------------------------------------------------------------------ deadlines
+def test_deadline_and_timeout_cancel():
+    """deadline_s counts from submission (can expire while queued, zero
+    tokens kept); timeout_s from first admission (cancels mid-stream,
+    emitted tokens kept). Both finish as "deadline"."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(4)
+    ce = _engine(m, p, max_preemptions=0)
+    busy = ce.submit(_prompt(rng, cfg, 8))
+    ce.step()
+    doomed = ce.submit(_prompt(rng, cfg, 8), deadline_s=0.0)
+    retired = ce.step()                  # expires at step start, still queued
+    assert doomed in retired
+    assert doomed.done and doomed.finish_reason == "deadline"
+    assert doomed.n_generated == 0 and np.isnan(doomed.queue_time)
+    ce.run()
+    assert busy.done and busy.finish_reason in ("eos", "length")
+
+    slow = ce.submit(_prompt(rng, cfg, 8), timeout_s=0.0)
+    ce.step()                            # admitted (timeout runs from here)
+    assert slow.start_t > 0
+    ce.run()
+    assert slow.done and slow.finish_reason == "deadline"
+    assert slow.out == slow.out[:slow.n_generated]   # kept, not truncated
+    assert ce.stats.deadline_misses == 2
+    _assert_clean(ce)
+
+
+# -------------------------------------------------------------------- harness
+def test_fault_harness_invariants_on_bare_engine():
+    """A burst through page pressure on a single engine retires every
+    request with a valid finish reason and leaks nothing."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(5)
+    ce = _engine(m, p, n_slots=2, max_pending=3, max_new_tokens=4)
+    prompts = tuple(_prompt(rng, cfg, int(n)) for n in (8, 10, 6, 9, 7))
+    harness = FaultHarness(ce, faults=[
+        PagePressure(tier=SOLO, start=0, steps=4, pages=3),
+        AdmissionBurst(step=0, prompts=prompts, priority=1),
+        AdmissionBurst(step=3, prompts=prompts[:2], priority=4),
+    ])
+    harness.run()
+    assert harness.check_invariants() == []
+    assert len(harness.retired) == len(harness.requests) == 7
+    reasons = {r.finish_reason for r in harness.retired}
+    assert reasons <= {"eos", "length", "context_cap", "rejected"}
+    _assert_clean(ce)
+
+
+def test_fault_harness_rejects_unknown_tier():
+    cfg, m, p = _bundle()
+    ce = _engine(m, p)
+    with pytest.raises(ValueError):
+        FaultHarness(ce, faults=[PagePressure(tier="nope", start=0, steps=1,
+                                              pages=1)])

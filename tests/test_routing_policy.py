@@ -122,7 +122,9 @@ def test_tier_meter_accounting_and_advantages():
     assert list(m.tokens) == [10, 15, 10] and m.total_tokens == 35
     assert abs(m.cost_advantage - 4 / 6) < 1e-9
     assert abs(m.token_cost_advantage - 25 / 35) < 1e-9
-    assert m.summary()["small"] == {"calls": 2, "gen_tokens": 15}
+    assert m.summary()["small"] == {"calls": 2, "gen_tokens": 15, "sheds": 0,
+                                    "deadline_misses": 0, "preemptions": 0,
+                                    "reprefill_tokens": 0}
     with pytest.raises(ValueError):
         m.record(np.array([3]), 1)
     with pytest.raises(ValueError):
