@@ -45,7 +45,12 @@ deterministic priority burst against a tight bounded-queue engine, so the
 robustness layer's counters (preemptions, re-prefill tokens, sheds,
 deadline misses) and its invariants (every request retired with a valid
 finish reason, zero leaked pages, preempted outputs greedy-exact vs
-uncontended runs) land in the JSON for CI to assert. Streaming rows also
+uncontended runs) land in the JSON for CI to assert; ``speculative`` runs
+the pool's cross-tier speculative step plane with a self-speculation draft
+(same weights as the target — the deterministic high-acceptance canary)
+and reports acceptance rate, target-tier steps per emitted token
+(asserted < 1.0 by the CI smoke), and greedy-exactness vs the identical
+non-speculative pool. Streaming rows also
 report queue-wait p50/p99 (submission to first admission). A
 ``padding_parity`` flag asserts the dense, continuous, and pool serve
 paths agree on responses including tok.PAD tails.
@@ -701,6 +706,93 @@ def run_window_ssm(stream, t_max, n_slots, smoke,
     return row
 
 
+def run_speculative(bundle, params, stream, t_max, n_slots, gamma=2,
+                    prefill_chunk=None, prefill_pack=None,
+                    walk_bound="live"):
+    """speculative row: cross-tier speculative decoding on the pool's step
+    plane, against the identical non-speculative pool. The draft tier runs
+    the SAME weights as the target (self-speculation) — the deterministic
+    high-acceptance canary, so the row's acceptance rate and the
+    target-steps-per-token < 1 assertion cannot flake on how two random
+    tiny models happen to disagree. ``greedy_exact`` asserts byte-identical
+    outputs vs the non-speculative pool (the temperature-0 contract)."""
+    from repro.serving.faults import StaticPolicy
+
+    toks, lens, caps = stream
+    prompts = [toks[i, :lens[i]] for i in range(len(toks))]
+
+    def serve(g):
+        engines = [("draft", _continuous(bundle, params, t_max, n_slots,
+                                         prefill_chunk, prefill_pack,
+                                         walk_bound)),
+                   ("target", _continuous(bundle, params, t_max, n_slots,
+                                          prefill_chunk, prefill_pack,
+                                          walk_bound))]
+        pool = ContinuousPoolEngine(StaticPolicy(2, tier=1), engines,
+                                    spec_gamma=g)
+        target = engines[1][1]
+        # warm pass: trace every draft/verify/decode shape the
+        # deterministic schedule needs (see _warm_then_timed)
+        for p_, c in zip(prompts, caps):
+            pool.submit_to("target", p_, int(c))
+        pool.run()
+        target.cache.stats.high_water_pages = target.cache.stats.pages_in_use
+        pool.meter.reset()
+        pre = dataclasses.replace(target.stats)
+        t0 = time.monotonic()
+        reqs = [pool.submit_to("target", p_, int(c))
+                for p_, c in zip(prompts, caps)]
+        pool.run()
+        wall = time.monotonic() - t0
+        delta = {f.name: getattr(target.stats, f.name) - getattr(pre, f.name)
+                 for f in dataclasses.fields(target.stats)
+                 if isinstance(getattr(target.stats, f.name), int)}
+        return pool, target, reqs, delta, wall, t0
+
+    pool, target, reqs, d, wall, t0 = serve(gamma)
+    _, _, base_reqs, d0, base_wall, _ = serve(0)
+    useful = sum(r.n_generated for r in reqs)
+    latencies = [r.finish_t - t0 for r in reqs]
+    # the acceptance criterion: launches the target tier paid per emitted
+    # token (plain decode steps + verify chunks, over the timed stream) —
+    # strictly < 1.0 is the whole point of drafting on the cheap tier
+    target_steps = d["decode_steps"] + d["verify_steps"]
+    meter = pool.meter.summary()
+    return {
+        "engine": "continuous_paged_pool_speculative",
+        "requests": len(reqs),
+        "gamma": gamma,
+        "useful_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "tokens_per_s_nonspec": round(
+            sum(r.n_generated for r in base_reqs) / base_wall, 2),
+        "spec_rounds": d["spec_rounds"],
+        "spec_fallbacks": d["spec_fallbacks"],
+        "drafted_tokens": d["drafted_tokens"],
+        "accepted_tokens": d["accepted_tokens"],
+        "rejected_tokens": d["rejected_tokens"],
+        "acceptance_rate": round(
+            d["accepted_tokens"] / max(d["drafted_tokens"], 1), 4),
+        "target_steps_per_token": round(
+            target_steps / max(d["decode_tokens"], 1), 4),
+        "draft_steps": d["draft_steps"],
+        "verify_steps": d["verify_steps"],
+        "decode_steps": d["decode_steps"],
+        "decode_steps_nonspec": d0["decode_steps"],
+        "meter_drafted_draft_tier": meter["draft"]["drafted"],
+        "meter_accepted_target_tier": meter["target"]["accepted"],
+        "meter_rejected_target_tier": meter["target"]["rejected"],
+        "greedy_exact": [r.out for r in reqs]
+        == [r.out for r in base_reqs],
+        "kv_high_water_bytes": int(target.cache.stats.high_water_pages
+                                   * target.cache.bytes_per_page),
+        "finish_reasons": _finish_reasons(reqs),
+        **_percentiles(latencies),
+        **_streaming_metrics(reqs),
+    }
+
+
 def check_padding_parity(bundle, params, rng):
     """Dense Engine.serve, ContinuousEngine.serve, and
     ContinuousPoolEngine.serve must agree elementwise on greedy responses —
@@ -866,6 +958,20 @@ def main():
           f"preempted greedy-exact {pr['greedy_exact_preempted']}, "
           f"{pr['pages_leaked']} pages leaked, "
           f"queue p99 {pr['queue_p99_s']:.2f}s")
+
+    print("== speculative (cross-tier drafting, self-spec canary) ==")
+    sp = run_speculative(bundles[1][0], bundles[1][1], stream, t_max,
+                         n_slots, 2, args.prefill_chunk, args.prefill_pack,
+                         args.walk_bound)
+    results["speculative"] = sp
+    report("speculative", sp)
+    print(f"    gamma={sp['gamma']}: {sp['acceptance_rate']:.0%} acceptance "
+          f"over {sp['drafted_tokens']} drafted "
+          f"({sp['spec_rounds']} rounds), "
+          f"{sp['target_steps_per_token']:.2f} target steps/token "
+          f"(non-spec baseline 1.0), greedy-exact {sp['greedy_exact']}; "
+          f"{sp['tokens_per_s']} vs {sp['tokens_per_s_nonspec']} tok/s "
+          "non-spec")
 
     results["padding_parity"] = check_padding_parity(
         bundles[0][0], bundles[0][1], np.random.default_rng(19))

@@ -12,6 +12,12 @@ twice over:
      recalibration: each query goes to the cheapest tier whose calibrated
      score->quality map clears the target.
 
+It then turns on the pool's speculative step plane (``spec_gamma=2``: each
+tier drafts on its next-cheaper sibling, the target verifies the chunk in
+one launch) and re-serves the same stream — byte-identical responses at
+temperature 0, with the pricier tiers running fewer launches than tokens
+emitted.
+
 Run: PYTHONPATH=src python examples/tiered_serving.py
 """
 import dataclasses
@@ -34,14 +40,18 @@ def main():
 
     # one engine per tier, cheapest -> priciest; the paged layout selects
     # the continuous-batching path (params are unchanged)
-    engines = []
-    for t in TIERS3:
-        lm = exp.lms[t]
-        bundle = build_model(dataclasses.replace(lm.cfg,
-                                                 cache_layout="paged"))
-        engines.append((t, ContinuousEngine(bundle, lm.params,
-                                            max_new_tokens=12, n_slots=8,
-                                            max_seq=64)))
+    def fresh_engines():
+        engs = []
+        for t in TIERS3:
+            lm = exp.lms[t]
+            bundle = build_model(dataclasses.replace(lm.cfg,
+                                                     cache_layout="paged"))
+            engs.append((t, ContinuousEngine(bundle, lm.params,
+                                             max_new_tokens=12, n_slots=8,
+                                             max_seq=64)))
+        return engs
+
+    engines = fresh_engines()
 
     def serve(policy):
         pool = ContinuousPoolEngine(policy, engines)
@@ -71,6 +81,29 @@ def main():
                         for c in meter.calls)
         print(f"{target:8.3f} {frac} {meter.cost_advantage:>10.0%} "
               f"{meter.token_cost_advantage:>11.0%}")
+
+    print("\n== speculative step plane (spec_gamma=2, same stream) ==")
+    # fresh engines per pool: attach_draft installs draft state on the
+    # target engines, and the baseline must stay truly non-speculative
+    results = {}
+    for gamma in (0, 2):
+        pool = ContinuousPoolEngine(cascade, fresh_engines(),
+                                    spec_gamma=gamma)
+        results[gamma] = pool.serve(ds.query[:64], ds.query_mask[:64])
+        if gamma:
+            for _, t in pool.plan.pairs:
+                st = pool.engines[t].stats
+                if not st.decode_tokens:
+                    continue
+                steps_per = (st.decode_steps + st.verify_steps) \
+                    / st.decode_tokens
+                print(f"  {TIERS3[t]:<6} {st.spec_rounds:>4} rounds "
+                      f"{st.acceptance_rate:>5.0%} accepted "
+                      f"{steps_per:>5.2f} target steps/token")
+    exact = bool(np.array_equal(results[0].responses, results[2].responses)
+                 and np.array_equal(results[0].lengths, results[2].lengths))
+    print(f"  greedy-exact vs non-speculative pool: {exact}")
+    assert exact, "speculation changed a temperature-0 response"
 
 
 if __name__ == "__main__":

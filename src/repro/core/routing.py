@@ -250,6 +250,15 @@ class TierMeter:
         self.deadline_misses = np.zeros(len(self.names), np.int64)
         self.preemptions = np.zeros(len(self.names), np.int64)
         self.reprefill_tokens = np.zeros(len(self.names), np.int64)
+        # cross-tier speculative decoding (serving.pool's step plane):
+        # drafted tokens bill to the CHEAP tier whose model proposed them,
+        # accepted/rejected to the TARGET tier that verified them. Side
+        # channels like the robustness counters — ``tokens`` keeps billing
+        # each emitted token to the tier that served the request, so the
+        # §2.3 cost metrics stay undiluted by speculation
+        self.drafted = np.zeros(len(self.names), np.int64)
+        self.accepted = np.zeros(len(self.names), np.int64)
+        self.rejected = np.zeros(len(self.names), np.int64)
 
     @property
     def n_tiers(self) -> int:
@@ -296,6 +305,22 @@ class TierMeter:
         if deadline_miss:
             self.deadline_misses[t] += 1
 
+    def record_spec(self, draft_tier: int, target_tier: int, *,
+                    drafted: int, accepted: int, rejected: int):
+        """Fold one served request's speculative-decoding ledger into the
+        meter: ``drafted`` candidate tokens ran on ``draft_tier``'s model
+        (that tier's compute bill), of which ``accepted`` were emitted
+        verbatim by ``target_tier`` and ``rejected`` rolled back. Called
+        alongside ``record`` at retirement for requests that speculated."""
+        d, t = self._check_tier(draft_tier), self._check_tier(target_tier)
+        if drafted != accepted + rejected:
+            raise ValueError(f"speculative ledger does not balance: "
+                             f"{drafted} drafted != {accepted} accepted + "
+                             f"{rejected} rejected")
+        self.drafted[d] += drafted
+        self.accepted[t] += accepted
+        self.rejected[t] += rejected
+
     def reset(self):
         """Zero the counters — e.g. after a warmup pass whose traffic must
         not count toward a measured stream."""
@@ -305,6 +330,9 @@ class TierMeter:
         self.deadline_misses[:] = 0
         self.preemptions[:] = 0
         self.reprefill_tokens[:] = 0
+        self.drafted[:] = 0
+        self.accepted[:] = 0
+        self.rejected[:] = 0
 
     @property
     def total_calls(self) -> int:
@@ -329,15 +357,18 @@ class TierMeter:
         return 1.0 - int(self.tokens[-1]) / total if total else 0.0
 
     def summary(self) -> Dict[str, dict]:
-        """Per-tier calls/tokens plus robustness tallies, keyed by tier
-        name (cheapest first)."""
+        """Per-tier calls/tokens plus robustness and speculative tallies,
+        keyed by tier name (cheapest first)."""
         return {name: {"calls": int(c), "gen_tokens": int(t),
                        "sheds": int(s), "deadline_misses": int(d),
-                       "preemptions": int(p), "reprefill_tokens": int(r)}
-                for name, c, t, s, d, p, r in zip(
+                       "preemptions": int(p), "reprefill_tokens": int(r),
+                       "drafted": int(dr), "accepted": int(ac),
+                       "rejected": int(rj)}
+                for name, c, t, s, d, p, r, dr, ac, rj in zip(
                     self.names, self.calls, self.tokens, self.sheds,
                     self.deadline_misses, self.preemptions,
-                    self.reprefill_tokens)}
+                    self.reprefill_tokens, self.drafted, self.accepted,
+                    self.rejected)}
 
 
 class CostMeter:

@@ -4,6 +4,15 @@ Model layout in: q (B, C, H, D) pre-scaled (one chunk of C query tokens per
 request), the shared page pool (P, ps, K, D), the request's page-table row(s)
 (B, MP), and the per-request start/total lengths. Regroups q to the kernel's
 (B, K, C, G, D) GQA layout (heads grouped per KV head).
+
+This chunked-prefill shape doubles as the speculative *verify* shape: a
+draft chunk of gamma+1 candidate tokens scored by the target model is
+exactly one prefill chunk with explicit (start, n_new) — causal over the
+chunk, attending to everything the page table already holds — so cross-tier
+speculative decoding (serving.engine.attach_draft) reuses this launch
+verbatim and needs no third kernel. The explicit ``start`` operand (rather
+than reading seq_lens) is what lets the engine pre-advance its length
+bookkeeping before dispatch and roll a rejected suffix back afterwards.
 """
 from __future__ import annotations
 

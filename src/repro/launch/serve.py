@@ -159,7 +159,16 @@ def main():
                     help="bound each continuous tier's pending queue; "
                          "overflow load-sheds with finish reason 'rejected' "
                          "(default: unbounded)")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="cross-tier speculative decoding for --continuous: "
+                         "each tier t >= 1 drafts this many tokens per round "
+                         "on tier t-1 and verifies the chunk in one launch "
+                         "(greedy-exact; 0 = off, the default). Tiers the "
+                         "capability check refuses serve plainly.")
     args = ap.parse_args()
+    if args.spec_gamma and not args.continuous:
+        raise SystemExit("--spec-gamma rides the continuous pool's step "
+                         "plane; pass --continuous")
 
     cfgs = resolve_tiers(args.arch, args.tiers)
     K = len(cfgs)
@@ -242,8 +251,15 @@ def main():
         policy = ThresholdPolicy(router) if K == 2 \
             else CascadePolicy(router, thresholds)
         hy = ContinuousPoolEngine(policy,
-                                  list(zip((c.name for c in cfgs), engines)))
+                                  list(zip((c.name for c in cfgs), engines)),
+                                  spec_gamma=args.spec_gamma)
+        for t, reason in hy.plan.skipped:
+            print(f"  (tier {cfgs[t].name}: serving non-speculatively — "
+                  f"{reason})")
     else:
+        if args.spec_gamma:
+            raise SystemExit("--spec-gamma needs every tier on the "
+                             "continuous paged path")
         if args.continuous:
             no_paged = [c.name for c, e in zip(cfgs, engines)
                         if not isinstance(e, ContinuousEngine)]
@@ -261,11 +277,23 @@ def main():
     for name, row in meter.summary().items():
         # robustness tallies only print when nonzero: the uncontended
         # default stream should read exactly as before
+        # robustness and speculative tallies only print when nonzero: the
+        # uncontended non-speculative stream should read exactly as before
         rob = "".join(f"  {row[k]} {k.replace('_', ' ')}"
                       for k in ("preemptions", "sheds", "deadline_misses",
-                                "reprefill_tokens") if row.get(k))
+                                "reprefill_tokens", "drafted", "accepted",
+                                "rejected") if row.get(k))
         print(f"  {name:<16} {row['calls']:>5} calls  "
               f"{row['gen_tokens']:>6} tokens{rob}")
+    if isinstance(hy, ContinuousPoolEngine) and hy.plan.gamma:
+        for _, t in hy.plan.pairs:
+            st = hy.engines[t].stats
+            if st.spec_rounds and st.decode_tokens:
+                steps_per = (st.decode_steps + st.verify_steps) \
+                    / st.decode_tokens
+                print(f"  {cfgs[t].name}: {st.spec_rounds} spec rounds, "
+                      f"{st.acceptance_rate:.0%} acceptance, "
+                      f"{steps_per:.2f} target steps/token")
     # §2.3 against the all-priciest baseline: per-request and per-token
     print(f"  cost advantage: {meter.cost_advantage:.0%} of calls, "
           f"{meter.token_cost_advantage:.0%} of generated tokens "

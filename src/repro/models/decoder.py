@@ -303,6 +303,23 @@ def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
         x_last = x[jnp.arange(B), last][:, None]              # (B, 1, D)
         return x_last, {**cache, "rec": rec}
 
+    x, kps, vps = _paged_chunk_attn_hidden(params, cache, x, page_table,
+                                           start, n_new, cfg, pages_bound,
+                                           window_start)
+    last = jnp.clip(n_new - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last][:, None]                  # (B, 1, D)
+    return x_last, {**cache, "k_pages": kps, "v_pages": vps}
+
+
+def _paged_chunk_attn_hidden(params, cache, x, page_table, start, n_new, cfg,
+                             pages_bound, window_start):
+    """Shared attention-family chunk body: run every same-window layer run
+    over the embedded chunk ``x`` (B, C, D) — each layer writing the
+    chunk's K/V straight into the pool pages and attending causally to
+    resident context + in-chunk keys — then the final norm. Returns
+    (x (B, C, D) post-norm hidden states for EVERY chunk position, kps,
+    vps). ``decoder_prefill_paged_chunk`` keeps only the carry position;
+    ``decoder_verify_paged_chunk`` returns all of them."""
     def make_body(window):
         def body(x, xs):
             layer_p, kp, vp = xs
@@ -331,9 +348,34 @@ def decoder_prefill_paged_chunk(params, cache, tokens, page_table, start,
     kps = seg_k[0] if len(seg_k) == 1 else jnp.concatenate(seg_k)
     vps = seg_v[0] if len(seg_v) == 1 else jnp.concatenate(seg_v)
     x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    last = jnp.clip(n_new - 1, 0, C - 1)
-    x_last = x[jnp.arange(B), last][:, None]                  # (B, 1, D)
-    return x_last, {**cache, "k_pages": kps, "v_pages": vps}
+    return x, kps, vps
+
+
+def decoder_verify_paged_chunk(params, cache, tokens, page_table, start,
+                               n_new, cfg, pages_bound=None, window_start=0):
+    """Speculative-verify chunk: the same compute as the chunked paged
+    prefill — the chunk's K/V land in the pool pages, every position
+    attends causally to resident context + in-chunk keys — but returning
+    the FULL post-norm hidden states (B, C, D) instead of just the carry.
+    Row c scores the model's next-token distribution after token
+    ``start + c`` (apply ``ModelBundle.lm_head`` for (B, C, V) logits),
+    which is exactly the shape verifying a γ-token draft chunk needs: one
+    launch replaces γ+1 sequential decode steps. Positions past
+    ``n_new[b]`` are PAD garbage the caller must ignore.
+
+    Only rollback-capable stacks verify: a rejected suffix is undone by
+    ``PagedKVCache.truncate_slot`` (pages freed, ``seq_lens`` rewound),
+    which has no analogue for recurrent state — SSM/hybrid stacks (and,
+    by engine policy, sliding-window stacks) serve non-speculatively and
+    keep ``ModelBundle.verify_paged_chunk = None``."""
+    if cfg.family == "ssm":
+        raise ValueError(f"{cfg.name}: recurrent state cannot roll back a "
+                         "rejected draft suffix; ssm stacks do not verify")
+    x = embed(params["embed"], tokens)
+    x, kps, vps = _paged_chunk_attn_hidden(params, cache, x, page_table,
+                                           start, n_new, cfg, pages_bound,
+                                           window_start)
+    return x, {**cache, "k_pages": kps, "v_pages": vps}
 
 
 def decoder_decode_step_paged(params, cache, token, page_table, seq_lens,

@@ -49,6 +49,16 @@ class ModelBundle:
     prefill_paged_chunk: Optional[Callable] = None
     # lm_head(params, x (B, S, D)) -> logits (B, S, V)
     lm_head: Optional[Callable] = None
+    # Speculative-verify chunk: verify_paged_chunk(params, cache, tokens,
+    # page_table, start, n_new, pages_bound=None, window_start=0) ->
+    # (x (B, C, D) post-norm hidden states for EVERY chunk position, cache).
+    # Same compute + K/V side effects as prefill_paged_chunk but keeps all
+    # positions, so one launch scores a γ-token draft chunk (apply lm_head
+    # for per-position logits). None for stacks that cannot roll back a
+    # rejected suffix (recurrent state) or whose windowed masking the
+    # engine's verify path doesn't drive (sliding-window layers) — those
+    # tiers serve non-speculatively.
+    verify_paged_chunk: Optional[Callable] = None
     # init_recurrent_state(n_rows) -> pytree with leading row axis: per-slot
     # SSD/conv state slabs for ssm/hybrid serving (row 0 reserved as
     # scratch); None for pure-attention stacks.
@@ -121,6 +131,12 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
                                                     state_rows),
             lm_head=lambda p, x: decoder._unembed(p, x, cfg),
         )
+        if cfg.family != "ssm" and not cfg.has_window_layers:
+            paged["verify_paged_chunk"] = lambda p, c, t, page_table, start, \
+                n_new, pages_bound=None, window_start=0: \
+                decoder.decoder_verify_paged_chunk(p, c, t, page_table,
+                                                   start, n_new, cfg,
+                                                   pages_bound, window_start)
         if cfg.family == "ssm":
             paged["init_recurrent_state"] = lambda n_rows: \
                 decoder.init_decoder_recurrent_state(cfg, n_rows)

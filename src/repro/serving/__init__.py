@@ -3,7 +3,8 @@ from .engine import (ContinuousEngine, ContinuousStats, Engine, ServeStats,
                      make_engine)
 from .cache import CacheStats, PagedKVCache, RecurrentStatePool
 from .scheduler import ContinuousScheduler, Request
-from .pool import ContinuousPoolEngine, PoolResult, build_fused_pool_step
+from .pool import (ContinuousPoolEngine, PoolResult, StepPlan,
+                   build_fused_pool_step)
 from .faults import (AdmissionBurst, FaultHarness, PagePressure, TierStall)
 from .hybrid import (ContinuousHybridEngine, HybridEngine, HybridResult,
                      build_fused_hybrid_step)

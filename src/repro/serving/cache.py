@@ -37,6 +37,7 @@ class CacheStats:
     allocs: int = 0               # slot admissions
     appends: int = 0              # decode-time page extensions
     oom_denials: int = 0          # admissions/extensions refused for space
+    truncations: int = 0          # pages freed by truncate_slot (rollback)
 
     @property
     def high_water_tokens(self) -> int:
@@ -126,6 +127,13 @@ class PagedKVCache:
         """Pages currently allocated to ``slot`` (0 for a free slot)."""
         return len(self._owned[slot])
 
+    @property
+    def free_pages(self) -> int:
+        """Pages currently on the free list. The engine's speculative-round
+        selection budgets several slots' growth against one pool snapshot
+        (cumulative arithmetic ``can_admit`` can't express)."""
+        return len(self._free)
+
     def alloc_slot(self, slot: int, n_tokens: int):
         """Allocate pages covering ``n_tokens`` for an empty slot. Returns the
         page ids (np.int32) or None if the pool can't satisfy the request."""
@@ -175,6 +183,30 @@ class PagedKVCache:
         Returns a list aligned with ``slots`` of fresh page-id arrays
         (possibly empty) or None per stalled row."""
         return [self.extend_slot(s, n) for s, n in zip(slots, n_news)]
+
+    def truncate_slot(self, slot: int, n_tokens: int):
+        """Roll ``slot`` back to ``n_tokens`` resident tokens — the inverse
+        of ``extend_slot``, for speculative-decoding rollback: a rejected
+        draft suffix rewinds ``seq_lens`` and frees the tail pages past
+        ``pages_for(n_tokens)`` (their table entries return to 0, the
+        reserved scratch page). A no-op when the slot already sits at or
+        below the page boundary ``n_tokens`` needs. Returns the freed page
+        ids (np.int32, possibly empty)."""
+        cur = int(self.seq_lens[slot])
+        if not 0 <= n_tokens <= cur:
+            raise ValueError(f"truncate_slot(slot={slot}, "
+                             f"n_tokens={n_tokens}): slot holds {cur} tokens"
+                             f" — truncation can only rewind, never extend")
+        owned = self._owned[slot]
+        keep = self.pages_for(n_tokens)
+        tail = owned[keep:]
+        self._free.extend(reversed(tail))
+        del owned[keep:]
+        self.page_table[slot, keep:] = 0
+        self.seq_lens[slot] = n_tokens
+        self.stats.truncations += len(tail)
+        self._mark_usage()
+        return np.asarray(tail, np.int32)
 
     def ensure_append(self, slot: int, reserve: int = 0) -> bool:
         """Guarantee room for one more token in ``slot`` (the next decode

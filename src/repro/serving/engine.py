@@ -126,9 +126,9 @@ import numpy as np
 from repro.data import tokenizer as tok
 from repro.models.model import ModelBundle
 from .cache import PagedKVCache, RecurrentStatePool
-from .generate import build_generate_fn, _sample
-from .scheduler import (DECODING, DONE as SCHED_DONE, PREFILLING,
-                        ContinuousScheduler, Request)
+from .generate import build_generate_fn, _sample, _sample_rows
+from .scheduler import (DECODING, DONE as SCHED_DONE, DRAFTING, PREFILLING,
+                        VERIFYING, ContinuousScheduler, Request)
 
 
 def _bucket(n: int) -> int:
@@ -269,11 +269,30 @@ class ContinuousStats:
     deadline_misses: int = 0     # requests cancelled with reason "deadline"
     stall_steps: int = 0         # zero-progress steps waited out because
                                  # pages were held externally (hold_pages)
+    # cross-tier speculative decoding (attach_draft; all zero otherwise)
+    spec_rounds: int = 0         # speculative rounds run (draft + verify)
+    draft_steps: int = 0         # draft-model micro-step kernel launches
+    verify_steps: int = 0        # target verify-chunk kernel launches
+    drafted_tokens: int = 0      # candidate tokens the draft proposed
+    accepted_tokens: int = 0     # draft tokens the target emitted verbatim
+    rejected_tokens: int = 0     # draft tokens rolled back (truncate_slot)
+    spec_fallbacks: int = 0      # steps where a spec-configured engine
+                                 # plain-decoded at least one slot (draft
+                                 # tier stalled, page pressure, context cap)
     wall_s: float = 0.0
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target accepted verbatim — the
+        number that decides whether speculation pays (expected emitted
+        tokens per verify launch is 1 + acceptance_rate * gamma at the
+        deterministic limit)."""
+        return self.accepted_tokens / self.drafted_tokens \
+            if self.drafted_tokens else 0.0
 
 
 class ContinuousEngine:
@@ -411,20 +430,38 @@ class ContinuousEngine:
             else None
         # donated pools: scatter updates in place rather than copying
         self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
+        # per-slot sampling temperature: a request's own temperature (or the
+        # engine default) lands here at admission, so one decode trace
+        # serves any greedy/sampled mix (see generate._sample_rows)
+        self._temps = np.full((n_slots,), temperature, np.float32)
+        # cross-tier speculative decoding: attach_draft installs a cheap
+        # sibling whose paged cache mirrors this engine's slot geometry
+        self.draft_bundle: Optional[ModelBundle] = None
+        self.draft_params = None
+        self.draft_cache: Optional[PagedKVCache] = None
+        self.spec_gamma = 0
+        self._draft_prefill_fn = None
+        self._draft_decode_fn = None
+        self._verify_fn = None
+        self._draft_bounds: set = set()
+        self._verify_shapes: set = set()
 
     # ------------------------------------------------------------ jit pieces
     def _build_decode(self):
-        bundle, temperature = self.bundle, self.temperature
+        bundle = self.bundle
 
         def fn(params, k_pages, v_pages, rec, token, page_table, seq_lens,
-               active, key, pages_bound, window_start):
+               active, key, temps, pages_bound, window_start):
             cache = {"k_pages": k_pages, "v_pages": v_pages}
             if rec is not None:
                 cache["rec"] = rec
             logits, cache = bundle.decode_step_paged(
                 params, cache, token, page_table, seq_lens, active,
                 pages_bound=pages_bound, window_start=window_start)
-            nxt = _sample(key, logits, temperature)
+            # per-slot temperatures (engine default unless the request set
+            # its own): greedy rows take the argmax, sampled rows draw at
+            # their own temperature — one trace for any mix
+            nxt = _sample_rows(key, logits, temps)
             nxt = jnp.where(active, nxt, jnp.int32(tok.PAD))
             return nxt, cache["k_pages"], cache["v_pages"], cache.get("rec")
 
@@ -433,7 +470,7 @@ class ContinuousEngine:
         # (engine reassigns cache.pool / rstate.state from the outputs
         # immediately). pages_bound and window_start are static: one trace
         # per bucketed (live bound, window start) pair
-        return jax.jit(fn, donate_argnums=(1, 2, 3), static_argnums=(9, 10))
+        return jax.jit(fn, donate_argnums=(1, 2, 3), static_argnums=(10, 11))
 
     def _build_prefill_chunk(self):
         bundle = self.bundle
@@ -456,16 +493,129 @@ class ContinuousEngine:
         # window_start are static: one trace per bucketed pair
         return jax.jit(fn, donate_argnums=(1, 2, 3), static_argnums=(9, 10))
 
-    def _pages_bound(self, max_tokens: int) -> int:
+    def _build_draft_prefill(self):
+        """Jit the draft sibling's chunked prefill (the draft-cache mirror
+        of every admitted chunk). x_last is discarded — the draft never
+        samples a request's first token, the target does."""
+        bundle = self.draft_bundle
+
+        def fn(params, k_pages, v_pages, tokens, page_table, start, n_new,
+               pages_bound, window_start):
+            cache = {"k_pages": k_pages, "v_pages": v_pages}
+            _, cache = bundle.prefill_paged_chunk(
+                params, cache, tokens, page_table, start, n_new,
+                pages_bound=pages_bound, window_start=window_start)
+            return cache["k_pages"], cache["v_pages"]
+
+        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(7, 8))
+
+    def _build_draft_decode(self):
+        """Jit one draft micro-step: decode + per-slot-temperature sample,
+        returning the sampled candidates AND the full logits row (standard
+        speculative acceptance needs the draft's proposal distribution)."""
+        bundle = self.draft_bundle
+
+        def fn(params, k_pages, v_pages, token, page_table, seq_lens,
+               active, key, temps, pages_bound):
+            cache = {"k_pages": k_pages, "v_pages": v_pages}
+            logits, cache = bundle.decode_step_paged(
+                params, cache, token, page_table, seq_lens, active,
+                pages_bound=pages_bound, window_start=0)
+            nxt = _sample_rows(key, logits, temps)
+            nxt = jnp.where(active, nxt, jnp.int32(tok.PAD))
+            return nxt, logits, cache["k_pages"], cache["v_pages"]
+
+        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(9,))
+
+    def _build_verify(self):
+        """Jit the target's verify chunk: per-position logits for the whole
+        drafted chunk in ONE launch (the chunked-prefill shape), K/V landing
+        in the pool pages exactly as a prefill chunk's would — rejected
+        suffixes roll back via truncate_slot."""
+        bundle = self.bundle
+
+        def fn(params, k_pages, v_pages, tokens, page_table, start, n_new,
+               pages_bound, window_start):
+            cache = {"k_pages": k_pages, "v_pages": v_pages}
+            x, cache = bundle.verify_paged_chunk(
+                params, cache, tokens, page_table, start, n_new,
+                pages_bound=pages_bound, window_start=window_start)
+            logits = bundle.lm_head(params, x)
+            return logits, cache["k_pages"], cache["v_pages"]
+
+        return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(7, 8))
+
+    def attach_draft(self, bundle: ModelBundle, params,
+                     gamma: int = 2) -> "ContinuousEngine":
+        """Host a cheap *draft* sibling inside this engine for cross-tier
+        speculative decoding. The draft gets a second ``PagedKVCache`` over
+        the SAME slot geometry (slot s of the target is slot s of the
+        draft), kept in lockstep: admission chunks mirror into it, retire /
+        preempt free both, and rejected suffixes truncate both. Each
+        ``step()`` then runs a speculative round over eligible DECODING
+        slots — the draft streams ``gamma`` candidate tokens per slot, the
+        target scores the whole chunk in one verify launch, and standard
+        speculative sampling accepts a prefix (greedy-exact at
+        temperature 0: byte-identical output to the non-speculative
+        engine, just fewer target launches).
+
+        The draft may trail the target (a full accept leaves the last
+        emitted token unseen by the draft; a draft-tier stall leaves whole
+        plain-decoded steps unseen) — the next round runs that many
+        catch-up micro-steps first, feeding the already-known tokens, so
+        speculation degrades and recovers without any cache rebuild.
+
+        Requires a rollback-capable target (``verify_paged_chunk``: pure
+        global attention) and a pure-global-attention paged draft, both on
+        the chunked-prefill path."""
+        if gamma < 1:
+            raise ValueError(f"gamma={gamma}: a speculative round needs at "
+                             "least one drafted token")
+        if self.bundle.verify_paged_chunk is None:
+            raise ValueError(
+                f"{self.bundle.cfg.name}: no verify path — recurrent state "
+                "or sliding-window layers cannot roll back a rejected "
+                "suffix; this tier serves non-speculatively")
+        if self.prefill_chunk == 0:
+            raise ValueError("speculative decoding rides the chunked-"
+                             "prefill machinery (the verify chunk IS a "
+                             "prefill-shaped chunk and the draft cache "
+                             "mirrors admission chunk-by-chunk); "
+                             "prefill_chunk must be > 0")
+        if bundle.decode_step_paged is None \
+                or bundle.prefill_paged_chunk is None:
+            raise ValueError(f"{bundle.cfg.name}: a draft model must serve "
+                             "paged (decode + chunked prefill)")
+        if bundle.init_recurrent_state is not None \
+                or bundle.cfg.has_window_layers:
+            raise ValueError(f"{bundle.cfg.name}: draft stacks must be pure "
+                             "global attention — the draft cache mirrors "
+                             "the target's page geometry and rolls back "
+                             "with it")
+        self.draft_bundle, self.draft_params = bundle, params
+        self.spec_gamma = gamma
+        self.draft_cache = PagedKVCache(bundle, self.n_slots,
+                                        self.cache.num_pages,
+                                        self.cache.page_size,
+                                        self.cache.max_pages_per_slot)
+        self._draft_prefill_fn = self._build_draft_prefill()
+        self._draft_decode_fn = self._build_draft_decode()
+        self._verify_fn = self._build_verify()
+        return self
+
+    def _pages_bound(self, max_tokens: int,
+                     cache: Optional[PagedKVCache] = None) -> int:
         """Static page bound for a dispatch whose live contexts reach at
         most ``max_tokens``: the live page count rounded up to a power of
         two (distinct compiles stay O(log max_pages)), capped at the static
         table width. ``walk_bound="static"`` always returns the full
-        width."""
-        mp = self.cache.max_pages_per_slot
+        width. ``cache`` defaults to the target's; pass ``draft_cache``
+        for draft dispatches."""
+        cache = cache or self.cache
+        mp = cache.max_pages_per_slot
         if self.walk_bound != "live":
             return mp
-        return min(_bucket(self.cache.pages_for(max(max_tokens, 1))), mp)
+        return min(_bucket(cache.pages_for(max(max_tokens, 1))), mp)
 
     def _window_start(self, min_first_key: int) -> int:
         """Static first page of the sliding-window layers' page walk, for a
@@ -515,14 +665,25 @@ class ContinuousEngine:
         self._serve_calls += 1
 
     # -------------------------------------------------------------- requests
+    def _req_temp(self, req: Request) -> float:
+        """A request's effective sampling temperature: its own override, or
+        the engine default."""
+        return self.temperature if req.temperature is None \
+            else req.temperature
+
     def submit(self, tokens: np.ndarray, max_new_tokens: Optional[int] = None,
                *, priority: int = 0, deadline_s: Optional[float] = None,
-               timeout_s: Optional[float] = None) -> Request:
+               timeout_s: Optional[float] = None,
+               temperature: Optional[float] = None) -> Request:
         """Enqueue one request. ``tokens``: 1-d int32 prompt (no padding);
         ``max_new_tokens``: per-request output cap in tokens (None = the
         engine default); ``priority``: admission class (higher first);
         ``deadline_s`` / ``timeout_s``: completion deadline from submission
-        / in-flight cap from first admission, in seconds.
+        / in-flight cap from first admission, in seconds; ``temperature``:
+        per-request sampling temperature (None = the engine default, 0 =
+        greedy) — greedy and sampled streams coexist in one batch, and the
+        speculative accept/reject rule follows each request's own
+        temperature.
 
         Malformed requests (empty prompt, max_new < 1) raise — they are
         caller bugs. Well-formed requests that could never complete —
@@ -540,9 +701,12 @@ class ContinuousEngine:
         if max_new < 1:
             raise ValueError(f"max_new_tokens={max_new}: a request must be "
                              "allowed at least one output token")
+        if temperature is not None and temperature < 0:
+            raise ValueError(f"temperature={temperature}: negative "
+                             "temperatures are meaningless (0 = greedy)")
         req = Request(tokens=tokens, max_new_tokens=max_new,
                       priority=priority, deadline_s=deadline_s,
-                      timeout_s=timeout_s)
+                      timeout_s=timeout_s, temperature=temperature)
         req.submit_t = time.monotonic()
         cap = self.cache.max_pages_per_slot * self.cache.page_size
         # worst-case cache footprint if this request runs alone: prompt plus
@@ -592,7 +756,10 @@ class ContinuousEngine:
 
     def _retire(self, slot: int, reason: str) -> Request:
         self.cache.free_slot(slot)
+        if self.draft_cache is not None:
+            self.draft_cache.free_slot(slot)   # lockstep: draft mirror too
         self._next_in[slot] = tok.PAD
+        self._temps[slot] = self.temperature
         self.stats.retired += 1
         req = self.sched.retire(slot)
         req.finish_reason = reason
@@ -611,7 +778,10 @@ class ContinuousEngine:
         serve_tokens never outgrows the admission bounds submit checked."""
         req = self.sched.running[slot]
         self.cache.free_slot(slot)
+        if self.draft_cache is not None:
+            self.draft_cache.free_slot(slot)   # resumption re-mirrors both
         self._next_in[slot] = tok.PAD
+        self._temps[slot] = self.temperature
         req.serve_tokens = np.concatenate(
             [req.tokens, np.asarray(req.out, np.int32)])
         req.prefill_pos = 0
@@ -693,16 +863,19 @@ class ContinuousEngine:
         self._next_in[req.slot] = token
         return None
 
-    def _reserved_prefill_pages(self) -> int:
+    def _reserved_prefill_pages(
+            self, cache: Optional[PagedKVCache] = None) -> int:
         """Pages the mid-prefill slots still need for the rest of their
         prompts. Chunked admission allocates incrementally, so these pages
         are not in the pool's in-use count yet; admission control must not
-        hand them to a new request."""
+        hand them to a new request. ``cache`` defaults to the target's;
+        the draft mirror owes its pool the same promise."""
+        cache = cache or self.cache
         r = 0
         for slot in self.sched.prefilling_slots():
             req = self.sched.running[slot]
-            r += self.cache.pages_for(len(req.serve_tokens)) \
-                - self.cache.owned_pages(slot)
+            r += cache.pages_for(len(req.serve_tokens)) \
+                - cache.owned_pages(slot)
         return r
 
     def _admit(self, retired: List[Request]) -> int:
@@ -727,17 +900,28 @@ class ContinuousEngine:
                 break
             reserve = self._reserved_prefill_pages() if self.prefill_chunk \
                 else 0
+            d_reserve = self._reserved_prefill_pages(self.draft_cache) \
+                if self.draft_cache is not None else 0
+
+            def fits(r):
+                # a spec engine admits only what BOTH pools can hold — the
+                # draft mirror grows chunk-for-chunk with the target
+                return self.cache.can_admit(len(r.serve_tokens),
+                                            reserve=reserve) \
+                    and (self.draft_cache is None
+                         or self.draft_cache.can_admit(len(r.serve_tokens),
+                                                       reserve=d_reserve))
             idx = next(
                 (i for i, r in enumerate(
                     self.sched.pending[:self.admit_lookahead])
-                 if self.cache.can_admit(len(r.serve_tokens),
-                                         reserve=reserve)), None)
+                 if fits(r)), None)
             if idx is None:
                 self.stats.admission_stalls += 1
                 if self._try_preempt(self.sched.pending[0]):
                     continue   # freed pages: rescan the window
                 break
             req = self.sched.admit(idx)
+            self._temps[req.slot] = self._req_temp(req)
             admitted += 1
             self.stats.admitted += 1
             if self.prefill_chunk:
@@ -756,7 +940,7 @@ class ContinuousEngine:
             req.prefill_pos = n_tok
             req.state = DECODING
             first = int(_sample(self._next_key(), logits,
-                                self.temperature)[0])
+                                self._req_temp(req))[0])
             done = self._push_token(req, first)
             if done is not None:
                 retired.append(done)
@@ -826,6 +1010,23 @@ class ContinuousEngine:
         self.cache.pool = {"k_pages": kp, "v_pages": vp}
         if self.rstate is not None:
             self.rstate.state = rec
+        if self.draft_cache is not None:
+            # mirror the same chunk rows into the draft sibling's cache so
+            # every DECODING slot's draft context is ready to speculate the
+            # moment its prompt lands (draft pages were extended alongside
+            # the target's in _prefill_step). Draft stacks are pure global
+            # attention, so window_start is always 0
+            dpt = np.zeros((B, mp), np.int32)
+            for i, (req, n) in enumerate(group):
+                dpt[i] = self.draft_cache.page_table[req.slot]
+            d_bound = self._pages_bound(int((start + n_new).max()),
+                                        cache=self.draft_cache)
+            kp, vp = self._draft_prefill_fn(
+                self.draft_params, self.draft_cache.pool["k_pages"],
+                self.draft_cache.pool["v_pages"], jnp.asarray(chunk),
+                jnp.asarray(dpt), jnp.asarray(start), jnp.asarray(n_new),
+                d_bound, 0)
+            self.draft_cache.pool = {"k_pages": kp, "v_pages": vp}
         self.stats.prefill_dispatches += 1
         finishing = []
         for i, (req, n) in enumerate(group):
@@ -841,7 +1042,7 @@ class ContinuousEngine:
             for i, req in finishing:
                 req.state = DECODING
                 first = int(_sample(self._next_key(), logits[i:i + 1],
-                                    self.temperature)[0])
+                                    self._req_temp(req))[0])
                 done = self._push_token(req, first)
                 if done is not None:
                     retired.append(done)
@@ -889,6 +1090,12 @@ class ContinuousEngine:
                                           [n for _, n, _ in cand])
             refunded = False
             for slot, (req, n, width), pages in zip(cand_slots, cand, got):
+                if pages is not None and self.draft_cache is not None \
+                        and self.draft_cache.extend_slot(slot, n) is None:
+                    # draft pool stalled: undo the target extension so the
+                    # mirrors stay in lockstep, and stall the row
+                    self.cache.truncate_slot(slot, req.prefill_pos)
+                    pages = None
                 if pages is None:     # page stall: row drops out, rest run
                     self.stats.prefill_stalls += 1
                     # the chunk never dispatches, so its budget goes back —
@@ -914,11 +1121,241 @@ class ContinuousEngine:
                                            width, retired)
         return advanced
 
+    # ----------------------------------------------------------- speculative
+    def _spec_accept_sampled(self, row: np.ndarray, cand: List[int],
+                             dlog: np.ndarray, tau: float
+                             ) -> tuple[List[int], int]:
+        """Standard speculative sampling over one slot's drafted chunk:
+        accept draft token d_i with probability min(1, p_t(d_i)/p_d(d_i));
+        at the first rejection resample from the residual
+        norm(max(p_t - p_d, 0)); after a full acceptance draw the bonus
+        token from the target's last-position distribution. The emitted
+        stream is distributed exactly as target-only sampling. ``row``
+        (gamma+1, V) target logits, ``dlog`` (gamma, V) draft logits, both
+        softmaxed at ``tau``. Returns (tokens to emit, accepted count)."""
+        gamma = len(cand)
+        u = np.asarray(jax.random.uniform(self._next_key(), (gamma + 1,)),
+                       np.float64)
+
+        def softmax(z):
+            z = np.asarray(z, np.float64) / max(tau, 1e-6)
+            z = z - z.max(axis=-1, keepdims=True)
+            e = np.exp(z)
+            return e / e.sum(axis=-1, keepdims=True)
+
+        def draw(p, uu):
+            return int(min(np.searchsorted(np.cumsum(p), uu), len(p) - 1))
+
+        p_t, p_d = softmax(row), softmax(dlog)
+        n = 0
+        while n < gamma:
+            d = cand[n]
+            if u[n] < min(1.0, p_t[n, d] / max(p_d[n, d], 1e-30)):
+                n += 1
+            else:
+                break
+        if n < gamma:
+            res = np.maximum(p_t[n] - p_d[n], 0.0)
+            tot = res.sum()
+            probs = res / tot if tot > 0 else p_t[n]
+        else:
+            probs = p_t[gamma]
+        return cand[:n] + [draw(probs, u[gamma])], n
+
+    def _spec_round(self, retired: List[Request]) -> List[int]:
+        """One cross-tier speculative round: the draft sibling streams
+        ``spec_gamma`` candidate tokens for every eligible DECODING slot
+        (batched micro-steps over the draft cache), then ONE target verify
+        launch scores all the chunks and each slot emits its accepted
+        prefix plus the target's correction/bonus token. Rejected suffixes
+        roll back both caches via ``truncate_slot``. Returns the slots the
+        round emitted for (they are done decoding this step).
+
+        Eligibility is per-slot and conservative: the round must fit the
+        slot's context cap (target grows by gamma+1 tokens) and BOTH pools'
+        free pages, budgeted cumulatively across the selected slots against
+        one snapshot — so the mid-round ``ensure_append``/``extend_slot``
+        calls can never fail. An ineligible slot simply falls back to plain
+        decode this step.
+
+        Lag bookkeeping: the draft may trail the target by any number of
+        tokens (1 after a full accept — the bonus token's K/V was never
+        drafted; more after plain-decoded fallback steps). A slot with lag
+        ℓ runs ℓ catch-up micro-steps first, feeding the already-known
+        tokens (outputs discarded), so every slot always produces exactly
+        gamma candidates and speculation recovers from degradation without
+        any cache rebuild."""
+        gamma = self.spec_gamma
+        cap = self.cache.max_pages_per_slot * self.cache.page_size
+        t_reserve = self._reserved_prefill_pages()
+        d_reserve = self._reserved_prefill_pages(self.draft_cache)
+        t_avail = self.cache.free_pages - t_reserve
+        d_avail = self.draft_cache.free_pages - d_reserve
+        slots: List[int] = []
+        lags: Dict[int, int] = {}
+        for slot in self.sched.decoding_slots():
+            Lt = int(self.cache.seq_lens[slot])
+            Ld = int(self.draft_cache.seq_lens[slot])
+            if Lt + gamma + 1 > cap:
+                continue   # the round would overrun the slot's context cap
+            t_need = self.cache.pages_for(Lt + gamma + 1) \
+                - self.cache.owned_pages(slot)
+            d_need = self.draft_cache.pages_for(Lt + gamma) \
+                - self.draft_cache.owned_pages(slot)
+            if t_need > t_avail or d_need > d_avail:
+                continue   # page pressure: plain decode this step instead
+            t_avail -= t_need
+            d_avail -= d_need
+            slots.append(slot)
+            lags[slot] = Lt - Ld
+        if not slots:
+            return []
+        for s in slots:
+            self.sched.running[s].state = DRAFTING
+        # ---- draft phase: gamma + max_lag batched micro-steps. A slot
+        # with lag ℓ joins at micro-step max_lag - ℓ (catch-up first), so
+        # all slots finish together with gamma candidates each and the
+        # draft cache resident exactly through the last candidate's
+        # predecessor (L_target + gamma tokens).
+        max_lag = max(lags.values())
+        full: Dict[int, np.ndarray] = {}    # prompt+output, for catch-up
+        cand: Dict[int, List[int]] = {s: [] for s in slots}
+        dlog: Dict[int, List[np.ndarray]] = {s: [] for s in slots}
+        inputs = np.full((self.n_slots,), tok.PAD, np.int32)
+        for j in range(gamma + max_lag):
+            act = [s for s in slots if j >= max_lag - lags[s]]
+            if not act:
+                continue
+            for s in act:
+                rel = j - (max_lag - lags[s])
+                if rel < lags[s]:          # catch-up: feed the known token
+                    if s not in full:
+                        req = self.sched.running[s]
+                        full[s] = np.concatenate(
+                            [req.serve_tokens,
+                             np.asarray(req.out, np.int32)])
+                    inputs[s] = full[s][int(self.draft_cache.seq_lens[s])]
+                elif rel == lags[s]:       # first candidate: feed next_in
+                    inputs[s] = self._next_in[s]
+                # else: inputs[s] already holds the previous draw
+                ok = self.draft_cache.ensure_append(s, reserve=d_reserve)
+                assert ok, "spec pre-check under-counted draft pages"
+            active = np.zeros((self.n_slots,), bool)
+            active[act] = True
+            pt, sl = self.draft_cache.device_tables()
+            bound = self._pages_bound(
+                int(self.draft_cache.seq_lens[act].max()) + 1,
+                cache=self.draft_cache)
+            if bound not in self._draft_bounds:
+                self._draft_bounds.add(bound)
+                self.stats.decode_compiles += 1
+            nxt, logits, kp, vp = self._draft_decode_fn(
+                self.draft_params, self.draft_cache.pool["k_pages"],
+                self.draft_cache.pool["v_pages"],
+                jnp.array(inputs[:, None]), pt, sl, jnp.asarray(active),
+                self._next_key(), jnp.array(self._temps), bound)
+            self.draft_cache.pool = {"k_pages": kp, "v_pages": vp}
+            self.draft_cache.seq_lens[act] += 1
+            self.stats.draft_steps += 1
+            nxt, logits = np.asarray(nxt), np.asarray(logits)
+            for s in act:
+                if j - (max_lag - lags[s]) >= lags[s]:
+                    cand[s].append(int(nxt[s]))
+                    dlog[s].append(logits[s])
+                inputs[s] = nxt[s]
+        # ---- verify phase: one prefill-shaped launch scores every slot's
+        # chunk [next_in, d_1..d_gamma] at positions Lt..Lt+gamma; position
+        # c's logits give the target's next-token distribution after chunk
+        # token c. extend_slot pre-advances seq_lens — safe, the chunk
+        # kernel takes explicit start/n_new — and rollback truncates.
+        for s in slots:
+            self.sched.running[s].state = VERIFYING
+        W = gamma + 1
+        B = _bucket(len(slots))
+        mp = self.cache.max_pages_per_slot
+        chunk = np.full((B, W), tok.PAD, np.int32)
+        pt = np.zeros((B, mp), np.int32)
+        start = np.zeros((B,), np.int32)
+        n_new = np.zeros((B,), np.int32)
+        base: Dict[int, int] = {}
+        for i, s in enumerate(slots):
+            base[s] = int(self.cache.seq_lens[s])
+            got = self.cache.extend_slot(s, W)
+            assert got is not None, "spec pre-check under-counted pages"
+            chunk[i, 0] = self._next_in[s]
+            chunk[i, 1:] = cand[s]
+            pt[i] = self.cache.page_table[s]
+            start[i] = base[s]
+            n_new[i] = W
+        bound = self._pages_bound(int((start + n_new).max()))
+        if (B, bound) not in self._verify_shapes:
+            self._verify_shapes.add((B, bound))
+            self.stats.prefill_compiles += 1
+        logits, kp, vp = self._verify_fn(
+            self.params, self.cache.pool["k_pages"],
+            self.cache.pool["v_pages"], jnp.asarray(chunk),
+            jnp.asarray(pt), jnp.asarray(start), jnp.asarray(n_new),
+            bound, 0)
+        self.cache.pool = {"k_pages": kp, "v_pages": vp}
+        self.stats.verify_steps += 1
+        logits = np.asarray(logits, np.float32)
+        # ---- accept / emit / roll back, per slot (host-side)
+        stepped: List[int] = []
+        for i, s in enumerate(slots):
+            req = self.sched.running[s]
+            req.state = DECODING
+            tau = float(self._temps[s])
+            row = logits[i]
+            if tau <= 0.0:
+                # greedy-exact contract: accept the longest prefix matching
+                # the target argmax, then emit the target's own pick —
+                # byte-identical to non-speculative greedy decoding
+                tgt = row.argmax(axis=-1).astype(np.int32)
+                n = 0
+                while n < gamma and cand[s][n] == int(tgt[n]):
+                    n += 1
+                emit = cand[s][:n] + [int(tgt[min(n, gamma)])]
+            else:
+                emit, n = self._spec_accept_sampled(
+                    row, cand[s], np.stack(dlog[s]), tau)
+            req.drafted_tokens += gamma
+            self.stats.drafted_tokens += gamma
+            done, k = None, 0
+            for t, token in enumerate(emit):
+                if t < n:
+                    k += 1      # draft tokens actually emitted
+                self.stats.decode_tokens += 1
+                done = self._push_token(req, int(token))
+                if done is not None:
+                    retired.append(done)   # EOS / cap mid-chunk: slot freed
+                    break
+            req.accepted_tokens += k
+            req.rejected_tokens += gamma - k
+            self.stats.accepted_tokens += k
+            self.stats.rejected_tokens += gamma - k
+            if done is None:
+                # roll the rejected suffix back: target keeps the accepted
+                # prefix + the chunk token it was conditioned on; the draft
+                # trails at min (full accept leaves it one behind — the
+                # bonus token — which next round's catch-up repays)
+                keep = base[s] + n + 1
+                self.cache.truncate_slot(s, keep)
+                self.draft_cache.truncate_slot(
+                    s, min(int(self.draft_cache.seq_lens[s]), keep))
+            stepped.append(s)
+        self.stats.spec_rounds += 1
+        return stepped
+
     # ------------------------------------------------------------------ step
-    def step(self) -> List[Request]:
+    def step(self, spec: bool = True) -> List[Request]:
         """Cancel expired requests, admit (preempting if priority demands),
-        advance prefill chunks under the step budget, decode one token per
-        DECODING slot, retire. Returns the requests completed during this
+        advance prefill chunks under the step budget, decode — one
+        speculative round over eligible slots when a draft is attached
+        (draft gamma candidates, one target verify, emit the accepted
+        prefix + correction/bonus), one token per remaining DECODING slot
+        otherwise — and retire. ``spec=False`` forces every slot onto the
+        plain decode path this step (the pool's degradation hook while a
+        draft tier is stalled). Returns the requests completed during this
         step, including any shed at submit since the last step."""
         t0 = time.monotonic()
         retired: List[Request] = self.drain_shed()
@@ -928,15 +1365,25 @@ class ContinuousEngine:
         if self.prefill_chunk:
             prefilled = self._prefill_step(retired)
             progressed += len(prefilled)
+        spec_slots: List[int] = []
+        if self.spec_gamma and spec:
+            spec_slots = self._spec_round(retired)
         cap = self.cache.max_pages_per_slot * self.cache.page_size
         # decode growth must not eat pages promised to mid-prefill slots
         reserve = self._reserved_prefill_pages() if self.prefill_chunk else 0
         steppable = []
         for slot in self.sched.decoding_slots():
+            if slot in spec_slots:
+                continue          # already emitted this step's token(s)
             if int(self.cache.seq_lens[slot]) + 1 > cap:
                 retired.append(self._retire(slot, "context_cap"))
             elif self.cache.ensure_append(slot, reserve=reserve):
                 steppable.append(slot)
+        if self.spec_gamma and steppable:
+            # spec was configured but at least one slot plain-decodes this
+            # step — disabled (draft tier stalled), page pressure, or the
+            # round would overrun its context cap
+            self.stats.spec_fallbacks += 1
         if steppable:
             active = np.zeros((self.n_slots,), bool)
             active[steppable] = True
@@ -964,7 +1411,8 @@ class ContinuousEngine:
                 self.params, self.cache.pool["k_pages"],
                 self.cache.pool["v_pages"], rec,
                 jnp.array(self._next_in[:, None]), pt, sl,
-                jnp.asarray(active), self._next_key(), bound, wstart)
+                jnp.asarray(active), self._next_key(),
+                jnp.array(self._temps), bound, wstart)
             self.cache.pool = {"k_pages": kp, "v_pages": vp}
             if self.rstate is not None:
                 self.rstate.state = rec
@@ -977,7 +1425,7 @@ class ContinuousEngine:
                 if done is not None:
                     retired.append(done)
             self.stats.decode_steps += 1
-        elif not progressed and not retired \
+        elif not spec_slots and not progressed and not retired \
                 and (self.sched.running or self.sched.pending):
             # nothing decoded, no prefill advanced, nothing admitted or
             # retired, yet work remains. Resolution ladder: (1) pages held
@@ -995,16 +1443,17 @@ class ContinuousEngine:
                 raise RuntimeError(
                     "page pool deadlock: no slot could step and no request "
                     "could admit or retire; provision more pages")
-        if steppable or progressed or retired:
+        if steppable or spec_slots or progressed or retired:
             # prefill-only steps count too: they accrue wall_s, so leaving
             # them out of ``steps`` would overstate mean occupancy under
             # heavy admission. Union, not sum: a slot whose final chunk
             # landed this step decodes this same step and is busy once
             self.stats.steps += 1
-            self.stats.occupancy_sum += len(set(steppable) | set(prefilled))
+            self.stats.occupancy_sum += len(set(steppable) | set(prefilled)
+                                            | set(spec_slots))
             if prefilled:
                 self.stats.prefill_steps += 1
-                if not steppable:
+                if not steppable and not spec_slots:
                     self.stats.prefill_only_steps += 1
         self.stats.wall_s += time.monotonic() - t0
         return retired

@@ -24,9 +24,13 @@ fragmentation, and empty queues. The module doubles as the CI chaos smoke:
 
   PYTHONPATH=src python -m repro.serving.faults --smoke
 
-runs a stall, a pressure, and a burst scenario on tiny models and asserts
-the invariants plus greedy-exactness of preempted requests against
-uncontended reference runs.
+runs a stall, a pressure, a burst, and a spec-stall scenario on tiny
+models and asserts the invariants plus greedy-exactness of preempted (and
+speculatively decoded) requests against uncontended reference runs. The
+spec-stall scenario wedges a DRAFT tier mid-speculation: its target must
+degrade to plain decode (spec_fallbacks), never deadlock, resume
+speculating when the stall lifts, and leak zero pages in either the
+serving pool or the mirrored draft pool.
 """
 from __future__ import annotations
 
@@ -202,6 +206,20 @@ class FaultHarness:
             if c.fragmentation != 0.0:
                 bad.append(f"{name}: fragmentation {c.fragmentation:.3f} "
                            "after drain")
+            # a speculative engine hosts a mirrored draft pool whose pages
+            # are allocated/truncated in lockstep with the serving pool —
+            # it must drain just as clean
+            dc = getattr(eng, "draft_cache", None)
+            if dc is not None:
+                if dc.stats.pages_in_use != 0:
+                    bad.append(f"{name}: {dc.stats.pages_in_use} draft "
+                               "pages leaked")
+                if len(dc._free) != dc.num_pages - 1:
+                    bad.append(f"{name}: draft free list holds "
+                               f"{len(dc._free)} of {dc.num_pages - 1} pages")
+                if dc.fragmentation != 0.0:
+                    bad.append(f"{name}: draft fragmentation "
+                               f"{dc.fragmentation:.3f} after drain")
         return bad
 
 
@@ -220,9 +238,11 @@ class StaticPolicy:
 
 
 def _tiny_pool(n_slots: int = 2, max_seq: int = 48, max_new: int = 6,
-               **engine_kw):
+               spec_gamma: int = 0, **engine_kw):
     """Two-tier pool of tiny dense paged models for the smoke scenarios.
-    Returns (pool, bundles) — bundles kept for uncontended reference runs."""
+    Returns (pool, bundles) — bundles kept for uncontended reference runs.
+    ``spec_gamma > 0`` turns on cross-tier speculation (tier "a" drafts for
+    tier "b")."""
     import jax
     from repro.data import tokenizer as tok
     from repro.models import build_model
@@ -241,7 +261,8 @@ def _tiny_pool(n_slots: int = 2, max_seq: int = 48, max_new: int = 6,
                                 **engine_kw)
                for b, p in bundles]
     pool = ContinuousPoolEngine(StaticPolicy(2), [("a", engines[0]),
-                                                  ("b", engines[1])])
+                                                  ("b", engines[1])],
+                                spec_gamma=spec_gamma)
     return pool, bundles
 
 
@@ -349,17 +370,63 @@ def scenario_burst(verbose: bool = True) -> FaultHarness:
     return h
 
 
+def scenario_spec_stall(verbose: bool = True) -> FaultHarness:
+    """The DRAFT tier wedges mid-speculation: tier a drafts for tier b
+    (spec_gamma=2), then stalls for a step range while b is mid-stream.
+    Tier b must degrade to plain decode for the stall (spec_fallbacks),
+    never deadlock, resume speculating when a recovers, leak zero pages in
+    either the serving or the mirrored draft pool, and stay greedy-exact
+    vs uncontended non-speculative reference runs."""
+    rng = np.random.default_rng(3)
+    pool, bundles = _tiny_pool(max_new=10, spec_gamma=2)
+    assert pool.plan.pairs == ((0, 1),), pool.plan
+    eng = pool.engine("b")
+    h = FaultHarness(pool, [
+        TierStall("a", start=2, steps=10),
+        AdmissionBurst(step=0, prompts=_prompts(rng, 4), tier="b"),
+        # a's own queue must also hold through its stall and drain after
+        AdmissionBurst(step=0, prompts=_prompts(rng, 2), tier="a"),
+    ])
+    h.run()
+    bad = h.check_invariants()
+    assert not bad, bad
+    assert eng.stats.spec_fallbacks > 0, \
+        "the stalled draft tier never degraded its target to plain decode"
+    assert eng.stats.spec_rounds > 0 and eng.stats.drafted_tokens > 0, \
+        "speculation never ran around the stall"
+    assert eng.stats.drafted_tokens == \
+        eng.stats.accepted_tokens + eng.stats.rejected_tokens, \
+        "speculative ledger does not balance"
+    # degrade-and-recover must not change a single emitted byte
+    b, p = bundles[1]
+    for r in h.requests[:4]:
+        ref_eng = ContinuousEngine(b, p, max_new_tokens=10, n_slots=2,
+                                   max_seq=48)
+        ref = ref_eng.submit(r.tokens)
+        ref_eng.run()
+        assert r.out == ref.out, (r.rid, r.out, ref.out)
+    if verbose:
+        print(f"spec-stall: {len(h.retired)} retired "
+              f"({eng.stats.spec_rounds} spec rounds, "
+              f"{eng.stats.spec_fallbacks} plain-decode fallbacks, "
+              f"{eng.stats.drafted_tokens} drafted / "
+              f"{eng.stats.accepted_tokens} accepted), greedy-exact "
+              "through the draft stall, no leaks in either pool")
+    return h
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="run the three chaos scenarios and assert "
+                    help="run the four chaos scenarios and assert "
                          "invariants (the CI chaos job)")
-    ap.add_argument("--scenario", choices=("stall", "pressure", "burst"),
+    ap.add_argument("--scenario",
+                    choices=("stall", "pressure", "burst", "spec-stall"),
                     help="run one scenario")
     args = ap.parse_args(argv)
     scenarios = {"stall": scenario_stall, "pressure": scenario_pressure,
-                 "burst": scenario_burst}
+                 "burst": scenario_burst, "spec-stall": scenario_spec_stall}
     names = [args.scenario] if args.scenario else list(scenarios)
     if not (args.smoke or args.scenario):
         ap.error("pick --smoke or --scenario")

@@ -21,6 +21,18 @@ def _sample(key, logits, temperature: float):
         .astype(jnp.int32)
 
 
+def _sample_rows(key, logits, temperatures):
+    """Per-row temperature sampling for mixed greedy/sampled batches: row b
+    is argmax when ``temperatures[b] <= 0``, else a categorical draw at its
+    own temperature — one trace serves any per-request temperature mix
+    (the continuous engines' per-slot sampling path). ``logits`` (B, V),
+    ``temperatures`` (B,) float."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperatures, 1e-6)[:, None]
+    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures > 0.0, drawn, greedy)
+
+
 def build_generate_fn(bundle: ModelBundle, max_new_tokens: int,
                       temperature: float, windowed: bool = False):
     """Returns a jit'd fn(params, inputs, key) -> (tokens (B, T), lengths)."""

@@ -10,6 +10,16 @@ generalized from one small/large pair to K tiers. In a real deployment each
 engine is a separate device (or device group) and ``step`` is its event
 loop.
 
+With ``spec_gamma > 0`` the pool becomes a coordinated *step plane*: a
+``StepPlan`` links each expensive tier to its next-cheaper sibling as a
+draft model (cross-tier speculative decoding — the token-level
+generalization of the paper's per-query routing: the cheap tier drafts
+gamma tokens, the expensive tier verifies the whole chunk in one launch,
+greedy-exact at temperature 0). Tiers the capability check refuses
+(window/SSM/hybrid stacks, one-shot prefill) keep the plain single-step
+path, recorded in ``plan.skipped``; a stalled draft tier degrades its
+target to plain decode for the stall's duration rather than wedging it.
+
 Cost accounting is a ``TierMeter`` (core.routing): per-tier calls and
 generated tokens, with calls- and token-weighted cost advantage against the
 all-priciest baseline. Engines built with the same default seed get
@@ -47,6 +57,83 @@ Engines = Union[Mapping[str, ContinuousEngine],
                 Sequence[Tuple[str, ContinuousEngine]]]
 
 
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """The pool's coordinated step plane for cross-tier speculative
+    decoding: which expensive tier drafts on which cheap sibling.
+
+    ``gamma`` is the draft-chunk length per speculative round (0 disables
+    speculation entirely — the pool steps each engine independently,
+    exactly the pre-speculative behavior). ``pairs`` holds (draft_tier,
+    target_tier) index pairs; the default plan links every tier t >= 1 to
+    its next-cheaper sibling t-1. ``skipped`` records every wanted pair
+    the capability check refused, with the reason — window/SSM/hybrid
+    tiers cannot roll back a rejected suffix and keep the plain
+    single-step path, visibly rather than silently."""
+    gamma: int = 0
+    pairs: Tuple[Tuple[int, int], ...] = ()
+    skipped: Tuple[Tuple[int, str], ...] = ()
+
+    @property
+    def draft_of(self) -> Dict[int, int]:
+        """target tier index -> its draft tier index."""
+        return {t: d for d, t in self.pairs}
+
+    @staticmethod
+    def _refusal(draft: ContinuousEngine, target: ContinuousEngine) -> str:
+        """Why (draft, target) cannot speculate — "" when they can. The
+        same contract ``ContinuousEngine.attach_draft`` enforces by
+        raising; the plan pre-filters so refusals degrade to the plain
+        step path instead of failing pool construction."""
+        if draft is target:
+            return "draft and target tiers share one engine"
+        tb, db = target.bundle, draft.bundle
+        if tb.verify_paged_chunk is None:
+            return (f"{tb.cfg.name}: recurrent state or sliding-window "
+                    "layers cannot roll back a rejected draft suffix")
+        if target.prefill_chunk == 0:
+            return (f"{tb.cfg.name}: one-shot prefill — the verify chunk "
+                    "rides the chunked-prefill machinery")
+        if db.decode_step_paged is None or db.prefill_paged_chunk is None:
+            return (f"{db.cfg.name}: a draft must serve paged with "
+                    "chunked prefill")
+        if db.init_recurrent_state is not None or db.cfg.has_window_layers:
+            return (f"{db.cfg.name}: a draft must be pure global "
+                    "attention (its cache mirrors the target's pages)")
+        return ""
+
+    @classmethod
+    def build(cls, engines: Sequence[ContinuousEngine], gamma: int,
+              pairs: Optional[Sequence[Tuple[int, int]]] = None
+              ) -> "StepPlan":
+        """Pair each target tier with its draft (default: tier t drafts on
+        tier t-1), keeping only capability-approved pairs."""
+        if gamma < 0:
+            raise ValueError(f"spec_gamma={gamma}: the draft-chunk length "
+                             "cannot be negative (0 disables speculation)")
+        if gamma == 0:
+            return cls()
+        wanted = [(t - 1, t) for t in range(1, len(engines))] \
+            if pairs is None else [(int(d), int(t)) for d, t in pairs]
+        ok: List[Tuple[int, int]] = []
+        skipped: List[Tuple[int, str]] = []
+        targets: set = set()
+        for d, t in wanted:
+            if not (0 <= d < len(engines) and 0 <= t < len(engines)) \
+                    or d == t:
+                raise ValueError(f"spec pair ({d}, {t}) is not two distinct "
+                                 f"tiers of a {len(engines)}-tier pool")
+            if t in targets:
+                raise ValueError(f"tier {t} named as target twice")
+            targets.add(t)
+            reason = cls._refusal(engines[d], engines[t])
+            if reason:
+                skipped.append((t, reason))
+            else:
+                ok.append((d, t))
+        return cls(gamma=gamma, pairs=tuple(ok), skipped=tuple(skipped))
+
+
 @dataclasses.dataclass
 class PoolResult:
     """Batch-API result: responses/lengths row-aligned with the submitted
@@ -61,7 +148,9 @@ class ContinuousPoolEngine:
     """Admission-time policy-routed serving over K independently-stepping
     continuous engines. No tier's stream ever barriers on another."""
 
-    def __init__(self, policy: RoutingPolicy, engines: Engines):
+    def __init__(self, policy: RoutingPolicy, engines: Engines, *,
+                 spec_gamma: int = 0,
+                 spec_pairs: Optional[Sequence[Tuple[int, int]]] = None):
         items = list(engines.items()) if isinstance(engines, Mapping) \
             else list(engines)
         if len(items) != policy.n_tiers:
@@ -71,6 +160,17 @@ class ContinuousPoolEngine:
         self.policy = policy
         self.names: Tuple[str, ...] = tuple(n for n, _ in items)
         self.engines: List[ContinuousEngine] = [e for _, e in items]
+        # cross-tier speculative decoding: spec_gamma > 0 builds the step
+        # plane (StepPlan) and hosts each draft tier's model inside its
+        # target engine (attach_draft). Tiers a capability check refuses
+        # (window/SSM/hybrid, one-shot prefill) stay on the plain path,
+        # recorded in plan.skipped. spec_gamma=0 restores today's
+        # independent stepping exactly.
+        self.plan = StepPlan.build(self.engines, spec_gamma, spec_pairs)
+        for d, t in self.plan.pairs:
+            de = self.engines[d]
+            self.engines[t].attach_draft(de.bundle, de.params,
+                                         self.plan.gamma)
         # engines are typically built with the same default seed; distinct
         # salts keep their temperature>0 sample streams uncorrelated. Only
         # distinct engine objects are bumped (a tier may legitimately alias
@@ -101,7 +201,8 @@ class ContinuousPoolEngine:
                max_new_tokens: Optional[np.ndarray] = None,
                trim_padding: bool = True, priority: int = 0,
                deadline_s: Optional[float] = None,
-               timeout_s: Optional[float] = None
+               timeout_s: Optional[float] = None,
+               temperature: Optional[Union[float, np.ndarray]] = None
                ) -> Tuple[List[Request], np.ndarray, np.ndarray]:
         """Score and enqueue a batch of queries. Returns (requests,
         tier_idx, scores); requests retire later via step()/run() — except
@@ -113,7 +214,10 @@ class ContinuousPoolEngine:
         before enqueueing — paged prefill only pays for real tokens.
         ``priority`` / ``deadline_s`` / ``timeout_s`` apply to the whole
         batch (see ContinuousEngine.submit); use ``submit_to`` for
-        per-request robustness attributes."""
+        per-request robustness attributes. ``temperature``: per-request
+        sampling temperatures — a scalar for the whole batch or an (N,)
+        array (None = each engine's default, 0 = greedy) — so greedy and
+        sampled streams coexist in one pool."""
         tier_idx, scores = self.policy.decide(query_tokens, query_mask)
         tier_idx = np.asarray(tier_idx, np.int64)
         if tier_idx.size and (tier_idx.min() < 0
@@ -132,8 +236,11 @@ class ContinuousPoolEngine:
                 nz = np.flatnonzero(np.asarray(query_mask[i]))
                 row = row[:int(nz[-1]) + 1] if len(nz) else row[:1]
             cap = int(max_new_tokens[i]) if max_new_tokens is not None else None
+            temp = None if temperature is None else \
+                float(temperature[i] if np.ndim(temperature) else temperature)
             req = eng.submit(row, max_new_tokens=cap, priority=priority,
-                             deadline_s=deadline_s, timeout_s=timeout_s)
+                             deadline_s=deadline_s, timeout_s=timeout_s,
+                             temperature=temp)
             self._tier_of[req.rid] = int(tier)
             reqs.append(req)
         return reqs, tier_idx, scores
@@ -141,7 +248,8 @@ class ContinuousPoolEngine:
     def submit_to(self, tier: Union[int, str], tokens: np.ndarray,
                   max_new_tokens: Optional[int] = None, *,
                   priority: int = 0, deadline_s: Optional[float] = None,
-                  timeout_s: Optional[float] = None) -> Request:
+                  timeout_s: Optional[float] = None,
+                  temperature: Optional[float] = None) -> Request:
         """Enqueue one request directly on a named (or indexed) tier,
         bypassing the routing policy — the ops/fault-injection entry point
         (targeted bursts, health probes). Accounting is identical to
@@ -151,7 +259,8 @@ class ContinuousPoolEngine:
             raise ValueError(f"tier {tier!r} not in pool {self.names}")
         req = self.engines[t].submit(tokens, max_new_tokens=max_new_tokens,
                                      priority=priority, deadline_s=deadline_s,
-                                     timeout_s=timeout_s)
+                                     timeout_s=timeout_s,
+                                     temperature=temperature)
         self._tier_of[req.rid] = t
         return req
 
@@ -169,6 +278,15 @@ class ContinuousPoolEngine:
                 tier, preemptions=req.preemptions,
                 reprefill_tokens=req.reprefill_tokens,
                 deadline_miss=req.finish_reason == "deadline")
+            if req.drafted_tokens:
+                # drafted tokens bill to the CHEAP tier (its model ran
+                # them), accepted/rejected to the target — side-channel
+                # columns, so §2.3 cost metrics stay undiluted
+                self.meter.record_spec(
+                    self.plan.draft_of[tier], tier,
+                    drafted=req.drafted_tokens,
+                    accepted=req.accepted_tokens,
+                    rejected=req.rejected_tokens)
 
     def _distinct_engines(self) -> List[ContinuousEngine]:
         """Engines deduped by identity, cheapest-tier-first: a tier may
@@ -181,20 +299,28 @@ class ContinuousPoolEngine:
 
     def step(self, stalled: Sequence[str] = ()) -> List[Request]:
         """Advance every engine by one full step each (admission, packed
-        prefill chunks, one decode token per DECODING slot, retirement —
-        see ContinuousEngine.step), cheapest tier first, with no
-        cross-engine join. ``stalled`` names tiers to skip this step — the
+        prefill chunks, a speculative round over plan-paired tiers then
+        one decode token per remaining DECODING slot, retirement — see
+        ContinuousEngine.step), cheapest tier first, with no cross-engine
+        join. ``stalled`` names tiers to skip this step — the
         fault-injection hook for a wedged device: its queue holds, the
-        other tiers keep streaming. Returns the requests retired this
-        step."""
+        other tiers keep streaming. A target tier whose DRAFT tier is
+        stalled still steps but with speculation off (``spec=False``):
+        it degrades to plain decode rather than deadlocking on a wedged
+        draft device, and the draft cache catches up when the stall
+        lifts. Returns the requests retired this step."""
         skip = [self.engine(n) for n in stalled]
+        stalled_idx = {self.names.index(n) for n in stalled}
+        no_spec = [self.engines[t] for d, t in self.plan.pairs
+                   if d in stalled_idx]
         retired: List[Request] = []
         for eng in self._distinct_engines():
             # submit-time sheds drain even from a stalled tier: rejection
             # happens host-side at the front door, not on the device
             retired.extend(eng.drain_shed())
             if eng.sched.has_work and not any(eng is s for s in skip):
-                retired.extend(eng.step())
+                retired.extend(eng.step(
+                    spec=not any(eng is s for s in no_spec)))
         self._account(retired)
         return retired
 

@@ -40,6 +40,14 @@ _RID = itertools.count()
 QUEUED = "queued"            # submitted, waiting for a slot
 PREFILLING = "prefilling"    # slot assigned, prompt streaming in chunks
 DECODING = "decoding"        # prompt resident, emitting one token per step
+# Speculative sub-states of DECODING, transient within one engine step: a
+# slot picked for a speculative round is DRAFTING while the cheap sibling
+# streams γ candidate tokens into the draft cache, then VERIFYING while the
+# target scores the whole chunk in one launch. The engine restores DECODING
+# (or retires) before step() returns, so the pool/scheduler never observe a
+# slot stuck mid-speculation.
+DRAFTING = "drafting"        # draft sibling streaming candidate tokens
+VERIFYING = "verifying"      # target scoring the drafted chunk
 PREEMPTED = "preempted"      # evicted mid-decode, re-queued for re-prefill
 DONE = "done"                # retired
 
@@ -68,6 +76,9 @@ class Request:
     max_new_tokens: int
     rid: int = dataclasses.field(default_factory=lambda: next(_RID))
     priority: int = 0                      # higher admits first
+    # per-request sampling temperature; None inherits the engine's global
+    # temperature. 0.0 forces greedy for this request even in a sampled pool.
+    temperature: Optional[float] = None
     deadline_s: Optional[float] = None     # seconds from submit_t
     timeout_s: Optional[float] = None      # seconds from start_t
     submit_t: float = 0.0                  # monotonic time enqueued
@@ -82,6 +93,13 @@ class Request:
     finish_reason: str = ""                # see FINISH_REASONS
     preemptions: int = 0                   # times evicted mid-decode
     reprefill_tokens: int = 0              # tokens re-prefilled after evictions
+    # speculative-decoding ledger (cross-tier drafting; engine-maintained):
+    # tokens the draft sibling proposed for this request, how many the
+    # target accepted verbatim, and how many it rejected (rolled back).
+    # Correction/bonus tokens the target emits itself are none of these.
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    rejected_tokens: int = 0
     # what admission actually prefills: the prompt, extended at every
     # preemption with the tokens generated so far, so resumption is one
     # chunked prefill whose final-chunk logits yield the NEXT token

@@ -1,6 +1,7 @@
 """Synthetic data pipeline: task answers, tokenizer, LM arrays, quality."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import tokenizer as tok

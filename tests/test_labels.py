@@ -1,6 +1,7 @@
 """Unit + property tests for the paper's label construction (§3.1–3.3)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import labels as L

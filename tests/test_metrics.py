@@ -1,6 +1,7 @@
 """Routing metrics (§2.3, §4.2/4.3) unit + property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metrics as M

@@ -124,7 +124,8 @@ def test_tier_meter_accounting_and_advantages():
     assert abs(m.token_cost_advantage - 25 / 35) < 1e-9
     assert m.summary()["small"] == {"calls": 2, "gen_tokens": 15, "sheds": 0,
                                     "deadline_misses": 0, "preemptions": 0,
-                                    "reprefill_tokens": 0}
+                                    "reprefill_tokens": 0, "drafted": 0,
+                                    "accepted": 0, "rejected": 0}
     with pytest.raises(ValueError):
         m.record(np.array([3]), 1)
     with pytest.raises(ValueError):

@@ -1,0 +1,305 @@
+"""Cross-tier speculative decoding: greedy-exact parity against the
+non-speculative engine (including under preemption), rollback page
+accounting on both the serving and mirrored draft pools, capability
+refusal for window/SSM tiers, the pool step plane, per-request sampling
+temperatures, and PagedKVCache.truncate_slot."""
+import numpy as np
+import jax
+import pytest
+
+from repro.models import build_model
+from repro.serving import (ContinuousEngine, ContinuousPoolEngine,
+                           PagedKVCache, StepPlan)
+from repro.serving.faults import StaticPolicy
+from conftest import tiny_cfg
+
+
+def _bundle(seed=0, family="dense", **kw):
+    cfg = tiny_cfg(family, **kw)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(seed))
+
+
+def _prompts(rng, cfg, n, lo=4, hi=14):
+    return [rng.integers(4, cfg.vocab_size, (int(l),)).astype(np.int32)
+            for l in rng.integers(lo, hi, (n,))]
+
+
+def _engine(m, p, **kw):
+    kw.setdefault("max_new_tokens", 8)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq", 64)
+    return ContinuousEngine(m, p, **kw)
+
+
+def _assert_clean(ce):
+    """Both pools drained: every page back, nothing held, zero frag."""
+    for c in (ce.cache, ce.draft_cache) if ce.draft_cache is not None \
+            else (ce.cache,):
+        assert c.stats.pages_in_use == 0
+        assert len(c._free) == c.num_pages - 1
+        assert c.fragmentation == 0.0
+
+
+# --------------------------------------------------------------------- parity
+@pytest.mark.parametrize("gamma", [1, 2, 4])
+def test_spec_parity_greedy_exact(gamma):
+    """A distinct-weights draft (worst case: near-zero acceptance, maximal
+    rollback) must leave every emitted token byte-identical to the
+    non-speculative engine, for any draft-chunk length."""
+    cfg, m, p = _bundle()
+    _, dm, dp = _bundle(seed=7)
+    rng = np.random.default_rng(gamma)
+    prompts = _prompts(rng, cfg, 6)
+
+    plain = _engine(m, p)
+    refs = [plain.submit(t) for t in prompts]
+    plain.run()
+
+    spec = _engine(m, p).attach_draft(dm, dp, gamma=gamma)
+    reqs = [spec.submit(t) for t in prompts]
+    spec.run()
+    for r, ref in zip(reqs, refs):
+        assert r.out == ref.out, (gamma, r.rid)
+    st = spec.stats
+    assert st.spec_rounds > 0 and st.drafted_tokens > 0
+    assert st.drafted_tokens == st.accepted_tokens + st.rejected_tokens
+    for r in reqs:
+        assert r.drafted_tokens == r.accepted_tokens + r.rejected_tokens
+    _assert_clean(spec)
+
+
+def test_spec_parity_under_preemption():
+    """Speculation composes with preemptive scheduling: a request evicted
+    mid-speculation resumes via chunked re-prefill (mirrored into the
+    draft pool) and still matches its uncontended non-speculative run."""
+    cfg, m, p = _bundle()
+    _, dm, dp = _bundle(seed=7)
+    rng = np.random.default_rng(0)
+    # pick two prompts whose uncontended runs are long enough that the
+    # victim is still mid-stream when the high-priority arrival lands
+    candidates = _prompts(rng, cfg, 12, lo=8, hi=14)
+    probe = _engine(m, p, n_slots=2, max_new_tokens=16)
+    probed = [probe.submit(t) for t in candidates]
+    probe.run()
+    long_ones = [t for t, r in zip(candidates, probed)
+                 if r.n_generated >= 12]
+    assert len(long_ones) >= 2, "tiny model EOSed every probe prompt"
+    lo_prompt, hi_prompt = long_ones[0], long_ones[1]
+
+    spec = _engine(m, p, n_slots=1, max_new_tokens=16) \
+        .attach_draft(dm, dp, gamma=2)
+    lo = spec.submit(lo_prompt, priority=0)
+    for _ in range(2):
+        spec.step()
+    assert lo.n_generated >= 1 and not lo.done
+    hi = spec.submit(hi_prompt, priority=5)
+    spec.run()
+    assert lo.preemptions == 1 and lo.done and hi.done
+
+    for prompt, req in ((lo_prompt, lo), (hi_prompt, hi)):
+        ref_eng = _engine(m, p, n_slots=1, max_new_tokens=16)
+        ref = ref_eng.submit(prompt)
+        ref_eng.run()
+        assert req.out == ref.out
+    _assert_clean(spec)
+
+
+def test_self_speculation_saves_target_steps():
+    """Draft == target weights: acceptance is high by construction and the
+    target runs strictly fewer launches than tokens emitted — the whole
+    point of the speculative plane."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(1)
+    spec = _engine(m, p).attach_draft(m, p, gamma=2)
+    reqs = [spec.submit(t) for t in _prompts(rng, cfg, 4)]
+    spec.run()
+    st = spec.stats
+    assert st.accepted_tokens > 0 and st.acceptance_rate > 0.5
+    target_steps = st.decode_steps + st.verify_steps
+    assert st.decode_tokens > 0
+    assert target_steps / st.decode_tokens < 1.0
+    assert all(r.done for r in reqs)
+    _assert_clean(spec)
+
+
+# ---------------------------------------------------------- rollback accounting
+def test_rollback_truncation_page_audit():
+    """Rejected suffixes roll back via truncate_slot on BOTH pools;
+    after the drain every page is back in both free lists."""
+    cfg, m, p = _bundle()
+    _, dm, dp = _bundle(seed=7)     # distinct weights: rejections certain
+    rng = np.random.default_rng(2)
+    spec = _engine(m, p, max_new_tokens=10).attach_draft(dm, dp, gamma=4)
+    reqs = [spec.submit(t) for t in _prompts(rng, cfg, 5)]
+    spec.run()
+    assert spec.stats.rejected_tokens > 0
+    assert spec.cache.stats.truncations > 0
+    assert all(r.done for r in reqs)
+    _assert_clean(spec)
+
+
+def test_truncate_slot_unit():
+    _, m, _ = _bundle()
+    c = PagedKVCache(m, n_slots=1, num_pages=8, page_size=4,
+                     max_pages_per_slot=6)
+    c.alloc_slot(0, 10)                       # 3 pages
+    assert c.stats.pages_in_use == 3
+    with pytest.raises(ValueError):
+        c.truncate_slot(0, 11)                # cannot grow
+    with pytest.raises(ValueError):
+        c.truncate_slot(0, -1)
+    freed = c.truncate_slot(0, 5)             # 2 pages keep 5 tokens
+    assert len(freed) == 1 and c.stats.pages_in_use == 2
+    assert int(c.seq_lens[0]) == 5
+    assert c.stats.truncations == 1
+    assert (np.asarray(c.page_table[0][2:]) == 0).all()
+    c.truncate_slot(0, 5)                     # no-op at the same length
+    assert c.stats.pages_in_use == 2
+    c.free_slot(0)
+    assert c.stats.pages_in_use == 0
+
+
+# ------------------------------------------------------------------- refusals
+def test_window_and_ssm_tiers_refuse_speculation():
+    """Tiers that cannot roll back a rejected suffix (sliding-window,
+    recurrent-state) are skipped by the step plane with a visible reason —
+    and the pool still serves them non-speculatively."""
+    _, dense_m, dense_p = _bundle()
+    wcfg, win_m, win_p = _bundle(seed=1, n_layers=3, sliding_window=6,
+                                 local_global_ratio=2, cache_layout="paged",
+                                 kv_page_size=4, prefill_chunk=4)
+    scfg, ssm_m, ssm_p = _bundle(seed=2, family="ssm", cache_layout="paged",
+                                 prefill_chunk=4)
+    assert win_m.verify_paged_chunk is None
+    assert ssm_m.verify_paged_chunk is None
+
+    engines = [("dense", _engine(dense_m, dense_p)),
+               ("window", _engine(win_m, win_p, page_size=4)),
+               ("ssm", _engine(ssm_m, ssm_p))]
+    pool = ContinuousPoolEngine(StaticPolicy(3), engines, spec_gamma=2)
+    # tier 1 (window target) and tier 2 (ssm target, window draft) both
+    # refused; no approved pair survives the default ladder here
+    assert pool.plan.pairs == ()
+    skipped = dict(pool.plan.skipped)
+    assert set(skipped) == {1, 2}
+    assert "roll back" in skipped[1]
+
+    rng = np.random.default_rng(3)
+    reqs = [pool.submit_to(t, pr) for t in ("window", "ssm")
+            for pr in _prompts(rng, wcfg, 2, lo=4, hi=10)]
+    pool.run()
+    assert all(r.done and r.finish_reason in ("eos", "length")
+               for r in reqs)
+    assert all(r.drafted_tokens == 0 for r in reqs)
+
+
+def test_attach_draft_rejects_incapable_pairs():
+    _, m, p = _bundle()
+    _, ssm_m, ssm_p = _bundle(seed=2, family="ssm", cache_layout="paged",
+                              prefill_chunk=4)
+    _, win_m, win_p = _bundle(seed=1, n_layers=3, sliding_window=6,
+                              local_global_ratio=2, cache_layout="paged",
+                              kv_page_size=4, prefill_chunk=4)
+    eng = _engine(m, p)
+    with pytest.raises(ValueError, match="at least one drafted token"):
+        eng.attach_draft(m, p, gamma=0)
+    with pytest.raises(ValueError, match="pure global attention"):
+        eng.attach_draft(win_m, win_p, gamma=2)
+    with pytest.raises(ValueError, match="pure global attention"):
+        eng.attach_draft(ssm_m, ssm_p, gamma=2)
+    ssm_eng = _engine(ssm_m, ssm_p)
+    with pytest.raises(ValueError, match="no verify path"):
+        ssm_eng.attach_draft(m, p, gamma=2)
+
+
+def test_step_plan_build_validation():
+    _, m, p = _bundle()
+    engines = [_engine(m, p), _engine(m, p)]
+    with pytest.raises(ValueError, match="cannot be negative"):
+        StepPlan.build(engines, -1)
+    assert StepPlan.build(engines, 0) == StepPlan()
+    with pytest.raises(ValueError, match="distinct tiers"):
+        StepPlan.build(engines, 2, pairs=[(1, 1)])
+    with pytest.raises(ValueError, match="target twice"):
+        StepPlan.build(engines, 2, pairs=[(0, 1), (0, 1)])
+    plan = StepPlan.build(engines, 2)
+    assert plan.pairs == ((0, 1),) and plan.draft_of == {1: 0}
+    # a tier aliasing its own engine cannot draft for itself
+    shared = [engines[0], engines[0]]
+    plan = StepPlan.build(shared, 2)
+    assert plan.pairs == () and "share one engine" in plan.skipped[0][1]
+
+
+# ---------------------------------------------------------------- temperature
+def test_per_request_temperature_mixes_greedy_and_sampled():
+    """A temperature=0 request inside a sampled engine stays byte-exact
+    with an all-greedy run; sampled siblings draw at their own
+    temperature without disturbing it."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(4)
+    prompts = _prompts(rng, cfg, 3, lo=6, hi=10)
+
+    greedy_eng = _engine(m, p)
+    ref = greedy_eng.submit(prompts[0])
+    greedy_eng.run()
+
+    mixed = _engine(m, p, temperature=0.9, n_slots=3)
+    g = mixed.submit(prompts[0], temperature=0.0)
+    s1 = mixed.submit(prompts[1])                     # engine default 0.9
+    s2 = mixed.submit(prompts[2], temperature=0.5)
+    mixed.run()
+    assert g.out == ref.out
+    assert all(r.done for r in (g, s1, s2))
+
+    with pytest.raises(ValueError):
+        mixed.submit(prompts[0], temperature=-0.1)
+
+
+def test_pool_submit_temperature_array():
+    """ContinuousPoolEngine.submit takes per-request temperatures as an
+    (N,) array; the greedy rows match a greedy pool byte-exactly."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, cfg, 4, lo=6, hi=10)
+    W = max(len(t) for t in prompts)
+    toks = np.zeros((4, W), np.int32)
+    mask = np.zeros((4, W), bool)
+    for i, t in enumerate(prompts):
+        toks[i, :len(t)] = t
+        mask[i, :len(t)] = True
+
+    def mk():
+        # two tiers (a meter needs at least two); the policy routes
+        # everything to tier 0
+        return ContinuousPoolEngine(
+            StaticPolicy(2), [("a", _engine(m, p, temperature=0.7,
+                                            n_slots=2)),
+                              ("b", _engine(m, p))])
+
+    pool = mk()
+    reqs, _, _ = pool.submit(toks, mask,
+                             temperature=np.array([0.0, 0.8, 0.0, 0.3]))
+    pool.run()
+
+    ref_pool = mk()
+    ref_reqs, _, _ = ref_pool.submit(toks, mask, temperature=0.0)
+    ref_pool.run()
+    for i in (0, 2):
+        assert reqs[i].out == ref_reqs[i].out
+
+
+def test_sampled_speculation_ledger_balances():
+    """Temperature>0 speculation uses the standard accept/reject rule;
+    outputs differ from greedy but the ledger and pools stay exact."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(6)
+    spec = _engine(m, p, temperature=0.8).attach_draft(m, p, gamma=2)
+    reqs = [spec.submit(t) for t in _prompts(rng, cfg, 4)]
+    spec.run()
+    st = spec.stats
+    assert st.drafted_tokens > 0
+    assert st.drafted_tokens == st.accepted_tokens + st.rejected_tokens
+    assert all(r.done for r in reqs)
+    _assert_clean(spec)
