@@ -50,7 +50,12 @@ the pool's cross-tier speculative step plane with a self-speculation draft
 (same weights as the target — the deterministic high-acceptance canary)
 and reports acceptance rate, target-tier steps per emitted token
 (asserted < 1.0 by the CI smoke), and greedy-exactness vs the identical
-non-speculative pool. Streaming rows also
+non-speculative pool; ``prefix_sharing`` replays a multi-turn chat +
+best-of-N fan-out stream on a shared-prefix copy-on-write engine
+(serving.prefix) vs the identical stream with ``prefix_cache=0`` and
+reports hit rate, prefill tokens saved (asserted > 50% by the CI smoke),
+TTFT p99 on vs off, pages-shared high-water, COW splits, and the refcount
+zero-leak audit. Streaming rows also
 report queue-wait p50/p99 (submission to first admission). A
 ``padding_parity`` flag asserts the dense, continuous, and pool serve
 paths agree on responses including tok.PAD tails.
@@ -793,6 +798,135 @@ def run_speculative(bundle, params, stream, t_max, n_slots, gamma=2,
     }
 
 
+def run_prefix_sharing(bundle, params, smoke):
+    """prefix_sharing row: multi-turn chat + best-of-N fan-out replay on a
+    shared-prefix (copy-on-write radix tree) engine vs the identical stream
+    with ``prefix_cache=0``. Multi-turn sessions submit in turn waves —
+    every turn's prompt is the full history (previous prompt + outputs +
+    new user text), the regime where retirement-published pages make the
+    next turn's prefill nearly free; the fan-out phase drains one leader,
+    then N followers sharing its system prompt land concurrently (pages
+    shared across live slots — the ``pages_shared_high_water`` column).
+    The schedule runs twice per engine (warm pass traces shapes, the tree
+    is cleared between passes so the timed pass rediscovers every hit) and
+    the row reports hit rate, prefill tokens saved, TTFT p99 on vs off,
+    COW splits, and the refcount zero-leak audit CI asserts."""
+    S, T, F = (2, 3, 4) if smoke else (4, 4, 6)
+    # system prompts deliberately NOT page-multiples (page_size=16): the
+    # leader's published tail page then mixes system + suffix tokens, so
+    # followers fork mid-page and the row exercises the COW split path
+    user_len, out_cap, sys_len, sfx_len = (16, 4, 40, 8) if smoke \
+        else (24, 6, 72, 8)
+    max_seq = 128 if smoke else 192
+    budget = 32 if smoke else 64
+    rng = np.random.default_rng(23)
+    sys_chat = rng.integers(4, tok.VOCAB_SIZE, (sys_len,)).astype(np.int32)
+    users = rng.integers(4, tok.VOCAB_SIZE,
+                         (S, T, user_len)).astype(np.int32)
+    sys_fan = rng.integers(4, tok.VOCAB_SIZE, (sys_len,)).astype(np.int32)
+    sfx = rng.integers(4, tok.VOCAB_SIZE,
+                       (F + 1, sfx_len)).astype(np.int32)
+
+    def schedule(eng):
+        reqs = []
+        hist = [np.asarray(sys_chat) for _ in range(S)]
+        for t in range(T):
+            wave = []
+            for s in range(S):
+                hist[s] = np.concatenate([hist[s], users[s, t]])
+                wave.append(eng.submit(hist[s], max_new_tokens=out_cap))
+            eng.run()
+            for s, r in enumerate(wave):
+                hist[s] = np.concatenate(
+                    [hist[s], np.asarray(r.out, np.int32)])
+            reqs.extend(wave)
+        # best-of-N fan-out: the leader drains first (publishing its system
+        # prompt), then the followers land concurrently and share it
+        leader = eng.submit(np.concatenate([sys_fan, sfx[0]]),
+                            max_new_tokens=out_cap)
+        eng.run()
+        reqs.append(leader)
+        wave = [eng.submit(np.concatenate([sys_fan, sfx[i + 1]]),
+                           max_new_tokens=out_cap) for i in range(F)]
+        eng.run()
+        reqs.extend(wave)
+        return reqs
+
+    def serve(prefix):
+        eng = ContinuousEngine(bundle, params, max_new_tokens=out_cap,
+                               n_slots=4, max_seq=max_seq,
+                               prefix_cache=prefix)
+        schedule(eng)                # warm: trace every shape (greedy, so
+        if eng.cache.prefix is not None:   # the replay is identical)
+            eng.cache.prefix.clear()       # timed pass rediscovers hits
+        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
+        eng.cache.stats.high_water_shared = 0
+        pre = dataclasses.replace(eng.stats)
+        tpre = dataclasses.replace(eng.cache.prefix.stats) \
+            if eng.cache.prefix is not None else None
+        t0 = time.monotonic()
+        reqs = schedule(eng)
+        wall = time.monotonic() - t0
+        delta = {f.name: getattr(eng.stats, f.name) - getattr(pre, f.name)
+                 for f in dataclasses.fields(eng.stats)
+                 if isinstance(getattr(eng.stats, f.name), int)}
+        if tpre is not None:
+            ts = eng.cache.prefix.stats
+            delta.update(published_pages=ts.published_pages
+                         - tpre.published_pages,
+                         evicted_pages=ts.evicted_pages - tpre.evicted_pages)
+        return eng, reqs, delta, wall, t0
+
+    eng_on, reqs_on, d_on, wall_on, t0_on = serve(budget)
+    eng_off, reqs_off, d_off, wall_off, _ = serve(0)
+    useful = sum(r.n_generated for r in reqs_on)
+    latencies = [r.finish_t - t0_on for r in reqs_on]
+    # the refcount zero-leak audit CI asserts: post-drain, every page is
+    # free-list or tree-resident and every count matches its references
+    c = eng_on.cache
+    resident = c.prefix.resident
+    clean = not c.check_refcounts() \
+        and len(c._free) == c.num_pages - 1 - resident
+    saved = 1.0 - d_on["prefill_tokens"] / max(d_off["prefill_tokens"], 1)
+    return {
+        "engine": "continuous_paged_prefix",
+        "requests": len(reqs_on),
+        "sessions": S, "turns": T, "fanout": F,
+        "prefix_cache_pages": budget,
+        "useful_tokens": useful,
+        "wall_s": round(wall_on, 4),
+        "wall_s_nonshared": round(wall_off, 4),
+        "tokens_per_s": round(useful / wall_on, 2),
+        **_percentiles(latencies),
+        **_streaming_metrics(reqs_on),
+        "ttft_p99_nonshared_s": _streaming_metrics(reqs_off)["ttft_p99_s"],
+        "prefill_tokens": d_on["prefill_tokens"],
+        "prefill_tokens_nonshared": d_off["prefill_tokens"],
+        "prefill_tokens_saved_frac": round(saved, 4),
+        "prefill_dispatches": d_on["prefill_dispatches"],
+        "prefill_dispatches_nonshared": d_off["prefill_dispatches"],
+        "prefix_hits": d_on["prefix_hits"],
+        "prefix_misses": d_on["prefix_misses"],
+        "hit_rate": round(d_on["prefix_hits"]
+                          / max(d_on["prefix_hits"]
+                                + d_on["prefix_misses"], 1), 4),
+        "prefix_hit_tokens": d_on["prefix_hit_tokens"],
+        "prefix_hit_pages": d_on["prefix_hit_pages"],
+        "cow_splits": d_on["cow_splits"],
+        "published_pages": d_on["published_pages"],
+        "evicted_pages": d_on["evicted_pages"],
+        "pages_shared_high_water": c.stats.high_water_shared,
+        "tree_resident_pages": resident,
+        "greedy_exact": [r.out for r in reqs_on]
+        == [r.out for r in reqs_off],
+        "refcount_clean": bool(clean),
+        "pages_leaked": int(c.stats.pages_in_use - resident),
+        "kv_high_water_bytes": int(c.stats.high_water_pages
+                                   * c.bytes_per_page),
+        "finish_reasons": _finish_reasons(reqs_on),
+    }
+
+
 def check_padding_parity(bundle, params, rng):
     """Dense Engine.serve, ContinuousEngine.serve, and
     ContinuousPoolEngine.serve must agree elementwise on greedy responses —
@@ -972,6 +1106,19 @@ def main():
           f"(non-spec baseline 1.0), greedy-exact {sp['greedy_exact']}; "
           f"{sp['tokens_per_s']} vs {sp['tokens_per_s_nonspec']} tok/s "
           "non-spec")
+
+    print("== prefix sharing (multi-turn chat + best-of-N fan-out) ==")
+    px = run_prefix_sharing(bundles[0][0], bundles[0][1], args.smoke)
+    results["prefix_sharing"] = px
+    report("prefix", px)
+    print(f"    {px['prefix_hit_tokens']} prefill tokens skipped "
+          f"({px['prefill_tokens_saved_frac']:.0%} saved vs "
+          f"prefix_cache=0; hit rate {px['hit_rate']:.0%}), "
+          f"ttft p99 {px['ttft_p99_s']:.2f}s vs "
+          f"{px['ttft_p99_nonshared_s']:.2f}s non-shared, "
+          f"{px['pages_shared_high_water']} pages shared high-water, "
+          f"{px['cow_splits']} cow splits; greedy-exact "
+          f"{px['greedy_exact']}, refcounts clean {px['refcount_clean']}")
 
     results["padding_parity"] = check_padding_parity(
         bundles[0][0], bundles[0][1], np.random.default_rng(19))

@@ -33,6 +33,12 @@ RecurrentStatePool. Only encoder-decoder and frontend configs
 (whisper-large-v3, internvl2-26b) fall back to the dense engine. K > 2
 tiers require ``--continuous`` (the dense barrier-join path is the
 two-tier offline evaluation artifact).
+
+``--prefix-cache N`` gives each continuous tier an N-page shared-prefix
+tree (serving.prefix): admissions whose prompt prefix is already resident
+map those pages copy-on-write instead of re-prefilling, and the report
+grows per-tier hit/miss/eviction columns. Tiers that can't share
+(window/SSM, one-shot prefill) recompute with the reason printed.
 """
 from __future__ import annotations
 
@@ -165,10 +171,19 @@ def main():
                          "on tier t-1 and verifies the chunk in one launch "
                          "(greedy-exact; 0 = off, the default). Tiers the "
                          "capability check refuses serve plainly.")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="shared-prefix KV reuse for --continuous: per-tier "
+                         "page budget for the copy-on-write prefix tree "
+                         "(0 = off, the default; greedy-exact either way). "
+                         "Window/SSM tiers fall back to recompute with a "
+                         "recorded reason.")
     args = ap.parse_args()
     if args.spec_gamma and not args.continuous:
         raise SystemExit("--spec-gamma rides the continuous pool's step "
                          "plane; pass --continuous")
+    if args.prefix_cache and not args.continuous:
+        raise SystemExit("--prefix-cache shares pages of the continuous "
+                         "paged KV pool; pass --continuous")
 
     cfgs = resolve_tiers(args.arch, args.tiers)
     K = len(cfgs)
@@ -244,7 +259,8 @@ def main():
                                    prefill_chunk=args.prefill_chunk,
                                    prefill_pack=args.prefill_pack,
                                    walk_bound=args.walk_bound,
-                                   max_pending=args.max_pending))
+                                   max_pending=args.max_pending,
+                                   prefix_cache=args.prefix_cache))
     # K > 2 already guaranteed paged support before training
     continuous = all(isinstance(e, ContinuousEngine) for e in engines)
     if continuous:
@@ -294,6 +310,21 @@ def main():
                 print(f"  {cfgs[t].name}: {st.spec_rounds} spec rounds, "
                       f"{st.acceptance_rate:.0%} acceptance, "
                       f"{steps_per:.2f} target steps/token")
+    if isinstance(hy, ContinuousPoolEngine) and args.prefix_cache:
+        # per-tier prefix-tree columns: each tier shares only with itself
+        for cfg, eng in zip(cfgs, engines):
+            if eng.cache.prefix is None:
+                print(f"  {cfg.name}: prefix sharing off — "
+                      f"{eng.prefix_reason}")
+                continue
+            st, ts = eng.stats, eng.cache.prefix.stats
+            print(f"  {cfg.name}: prefix {st.prefix_hits} hits / "
+                  f"{st.prefix_misses} misses "
+                  f"({ts.hit_rate:.0%} hit rate), "
+                  f"{st.prefix_hit_tokens} prefill tokens skipped, "
+                  f"{ts.published_pages} pages published / "
+                  f"{ts.evicted_pages} evicted, "
+                  f"{st.cow_splits} cow splits")
     # §2.3 against the all-priciest baseline: per-request and per-token
     print(f"  cost advantage: {meter.cost_advantage:.0%} of calls, "
           f"{meter.token_cost_advantage:.0%} of generated tokens "

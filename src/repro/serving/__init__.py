@@ -2,6 +2,7 @@ from .generate import build_generate_fn, sample_responses
 from .engine import (ContinuousEngine, ContinuousStats, Engine, ServeStats,
                      make_engine)
 from .cache import CacheStats, PagedKVCache, RecurrentStatePool
+from .prefix import PrefixStats, PrefixTree
 from .scheduler import ContinuousScheduler, Request
 from .pool import (ContinuousPoolEngine, PoolResult, StepPlan,
                    build_fused_pool_step)

@@ -279,6 +279,12 @@ class ContinuousStats:
     spec_fallbacks: int = 0      # steps where a spec-configured engine
                                  # plain-decoded at least one slot (draft
                                  # tier stalled, page pressure, context cap)
+    # shared-prefix KV reuse (prefix_cache > 0; all zero otherwise)
+    prefix_hits: int = 0         # admissions that mapped >= 1 cached token
+    prefix_misses: int = 0       # admissions the tree had nothing for
+    prefix_hit_tokens: int = 0   # prompt tokens whose prefill was skipped
+    prefix_hit_pages: int = 0    # pages mapped read-only at admission
+    cow_splits: int = 0          # copy-on-write page copies dispatched
     wall_s: float = 0.0
 
     @property
@@ -328,19 +334,60 @@ class ContinuousEngine:
                  max_pending: Optional[int] = None,
                  max_preemptions: int = 3,
                  preempt_after_s: float = 0.0,
-                 admit_lookahead: Optional[int] = None):
+                 admit_lookahead: Optional[int] = None,
+                 prefix_cache: int = 0):
         if bundle.decode_step_paged is None:
             raise ValueError(f"{bundle.cfg.name}: no paged decode path "
                              "(ArchConfig.supports_paged_kv is False)")
+        if prefix_cache < 0:
+            raise ValueError(f"prefix_cache={prefix_cache}: the prefix "
+                             "tree's page budget must be non-negative "
+                             "(0 disables sharing)")
         self.bundle = bundle
         self.params = params
         self.max_new_tokens = max_new_tokens
         self.temperature = temperature
         ps = page_size or bundle.cfg.kv_page_size
         mp = _round_up(max_seq, ps) // ps
+        # shared-prefix KV reuse: tiers that can't share fall back to plain
+        # recomputation with the reason recorded (never an error — the pool
+        # mixes sharing and non-sharing tiers freely). Eligibility needs the
+        # *effective* chunk size, resolved before the cache is sized below.
+        self.prefix_reason: Optional[str] = None
+        if prefix_cache:
+            chunk_eff = bundle.cfg.prefill_chunk if prefill_chunk is None \
+                else prefill_chunk
+            if bundle.prefill_paged_chunk is None or bundle.lm_head is None:
+                chunk_eff = 0
+            if bundle.init_recurrent_state is not None:
+                self.prefix_reason = (
+                    "recurrent state: SSM/hybrid state is position-dependent "
+                    "and has no page form to share — prefixes recompute")
+            elif bundle.cfg.has_window_layers:
+                self.prefix_reason = (
+                    "sliding-window layers: K/V behind the window horizon "
+                    "is never written, so cached pages are incomplete — "
+                    "prefixes recompute")
+            elif chunk_eff == 0:
+                self.prefix_reason = (
+                    "one-shot prefill: admission scatters whole prompts "
+                    "into fresh pages with no fork point — prefixes "
+                    "recompute (set prefill_chunk > 0 to share)")
+            if self.prefix_reason is not None:
+                prefix_cache = 0
+        self.prefix_cache = prefix_cache
         if num_pages is None:
-            num_pages = 1 + n_slots * mp   # page 0 reserved
-        self.cache = PagedKVCache(bundle, n_slots, num_pages, ps, mp)
+            # page 0 reserved; the tree's budget rides on top of the slots'
+            # worst case so sharing never *shrinks* usable slot capacity
+            num_pages = 1 + n_slots * mp + prefix_cache
+        self.cache = PagedKVCache(bundle, n_slots, num_pages, ps, mp,
+                                  prefix_pages=prefix_cache)
+        # COW split: device-copies one page's K/V src -> dst before a slot's
+        # first write into a page it shares (donated pools, one trace)
+        self._copy_page = jax.jit(
+            lambda kp, vp, src, dst: (kp.at[:, dst].set(kp[:, src]),
+                                      vp.at[:, dst].set(vp[:, src])),
+            donate_argnums=(0, 1)) if prefix_cache else None
         # SSM/hybrid stacks keep constant-size per-slot recurrent state
         # beside the page pool (serving.cache.RecurrentStatePool)
         self.rstate = RecurrentStatePool(bundle, n_slots) \
@@ -592,6 +639,17 @@ class ContinuousEngine:
                              "global attention — the draft cache mirrors "
                              "the target's page geometry and rolls back "
                              "with it")
+        if self.cache.prefix is not None:
+            # the draft mirror replays every admission chunk to build its
+            # own K/V; a prefix hit skips chunks the draft never sees, so
+            # the mirrors would desync. Speculation wins the trade: drop
+            # the tree (slot-mapped pages survive until their slots free)
+            self.cache.drop_prefix()
+            self.prefix_cache = 0
+            self.prefix_reason = (
+                "speculative draft mirror: the draft cache replays every "
+                "admission chunk, so prefill skipping would desync the "
+                "mirrors — prefixes recompute on this tier")
         self.draft_bundle, self.draft_params = bundle, params
         self.spec_gamma = gamma
         self.draft_cache = PagedKVCache(bundle, self.n_slots,
@@ -754,7 +812,23 @@ class ContinuousEngine:
         out, self._shed_buf = self._shed_buf, []
         return out
 
+    def _publish_resident(self, slot: int) -> None:
+        """Publish a freeing slot's completed full pages into the prefix
+        tree just before retirement/preemption releases them — a multi-turn
+        session's next turn (prompt = history + new user text) or a
+        preempted request's resume re-prefill walks straight onto this
+        context. Keyed by prompt + emitted tokens truncated to the resident
+        length (``seq_lens`` trails the last sampled token, whose K/V was
+        never written)."""
+        if self.cache.prefix is None:
+            return
+        req = self.sched.running[slot]
+        resident = int(self.cache.seq_lens[slot])
+        seq = np.concatenate([req.tokens, np.asarray(req.out, np.int32)])
+        self.cache.prefix_publish(slot, seq[:resident], resident)
+
     def _retire(self, slot: int, reason: str) -> Request:
+        self._publish_resident(slot)
         self.cache.free_slot(slot)
         if self.draft_cache is not None:
             self.draft_cache.free_slot(slot)   # lockstep: draft mirror too
@@ -777,6 +851,7 @@ class ContinuousEngine:
         most max_new - 1 generated tokens (the cap-th retires it), so
         serve_tokens never outgrows the admission bounds submit checked."""
         req = self.sched.running[slot]
+        self._publish_resident(slot)
         self.cache.free_slot(slot)
         if self.draft_cache is not None:
             self.draft_cache.free_slot(slot)   # resumption re-mirrors both
@@ -876,6 +951,11 @@ class ContinuousEngine:
             req = self.sched.running[slot]
             r += cache.pages_for(len(req.serve_tokens)) \
                 - cache.owned_pages(slot)
+            if cache.page_is_shared(slot, req.prefill_pos):
+                # a prefix hit forked mid-page: the slot's next chunk must
+                # COW-split that page, which costs one page the footprint
+                # arithmetic above doesn't see
+                r += 1
         return r
 
     def _admit(self, retired: List[Request]) -> int:
@@ -905,9 +985,12 @@ class ContinuousEngine:
 
             def fits(r):
                 # a spec engine admits only what BOTH pools can hold — the
-                # draft mirror grows chunk-for-chunk with the target
+                # draft mirror grows chunk-for-chunk with the target. Full
+                # pages a prefix walk would map shared discount the demand
+                hp = self.cache.prefix.peek_pages(r.serve_tokens[:-1]) \
+                    if self.cache.prefix is not None else 0
                 return self.cache.can_admit(len(r.serve_tokens),
-                                            reserve=reserve) \
+                                            reserve=reserve, hit_pages=hp) \
                     and (self.draft_cache is None
                          or self.draft_cache.can_admit(len(r.serve_tokens),
                                                        reserve=d_reserve))
@@ -924,6 +1007,8 @@ class ContinuousEngine:
             self._temps[req.slot] = self._req_temp(req)
             admitted += 1
             self.stats.admitted += 1
+            if self.cache.prefix is not None:
+                self._prefix_admit(req)
             if self.prefill_chunk:
                 continue   # state PREFILLING; chunks run this same step
             n_tok = len(req.serve_tokens)
@@ -945,6 +1030,43 @@ class ContinuousEngine:
             if done is not None:
                 retired.append(done)
         return admitted
+
+    def _prefix_admit(self, req: Request) -> None:
+        """Walk the prefix tree with the freshly admitted prompt (minus its
+        final token — that token's logits sample the first output, so it
+        always recomputes and every admission prefills at least one chunk)
+        and map the longest cached prefix read-only into the slot.
+        ``prefill_pos`` jumps to the fork point: the matched pages' chunks
+        never launch, never charge the step's prefill budget, and never
+        count as dispatches — TTFT drops to the fork-tail prefill."""
+        toks = req.serve_tokens
+        pages, matched = self.cache.prefix.match(toks[:len(toks) - 1])
+        if not matched:
+            self.stats.prefix_misses += 1
+            return
+        self.cache.map_shared(req.slot, pages, matched)
+        req.prefill_pos = matched
+        req.prefix_hit_tokens += matched
+        self.stats.prefix_hits += 1
+        self.stats.prefix_hit_tokens += matched
+        self.stats.prefix_hit_pages += len(pages)
+
+    def _cow_split(self, slot: int, pos: int) -> bool:
+        """First write into a page ``slot`` shares: allocate a private
+        replacement, device-copy the page's K/V, repoint the slot's table
+        entry (``PagedKVCache.cow_page``). False when the pool can't supply
+        the replacement page even after tree eviction — the caller stalls
+        the write like any other page stall."""
+        pair = self.cache.cow_page(slot, pos)
+        if pair is None:
+            return False
+        src, dst = pair
+        kp, vp = self._copy_page(self.cache.pool["k_pages"],
+                                 self.cache.pool["v_pages"],
+                                 jnp.asarray(src), jnp.asarray(dst))
+        self.cache.pool = {"k_pages": kp, "v_pages": vp}
+        self.stats.cow_splits += 1
+        return True
 
     def _chunk_width(self, remaining: int) -> int:
         """Bucketed width of the next chunk: full chunks at prefill_chunk,
@@ -1033,6 +1155,11 @@ class ContinuousEngine:
             req.prefill_pos += n
             self.stats.prefill_tokens += n
             self.stats.prefill_chunks += 1
+            if self.cache.prefix is not None:
+                # completed full pages are shareable the moment their K/V
+                # lands: a fan-out sibling admitted next step forks here
+                self.cache.prefix_publish(req.slot, req.serve_tokens,
+                                          req.prefill_pos)
             if req.prefill_pos == len(req.serve_tokens):
                 finishing.append((i, req))
         if finishing:
@@ -1094,6 +1221,14 @@ class ContinuousEngine:
                         and self.draft_cache.extend_slot(slot, n) is None:
                     # draft pool stalled: undo the target extension so the
                     # mirrors stay in lockstep, and stall the row
+                    self.cache.truncate_slot(slot, req.prefill_pos)
+                    pages = None
+                if pages is not None \
+                        and self.cache.page_is_shared(slot, req.prefill_pos) \
+                        and not self._cow_split(slot, req.prefill_pos):
+                    # the chunk's first write lands in a shared page (a
+                    # mid-page prefix fork) and the COW replacement page is
+                    # unavailable: undo the extension and stall the row
                     self.cache.truncate_slot(slot, req.prefill_pos)
                     pages = None
                 if pages is None:     # page stall: row drops out, rest run
@@ -1375,8 +1510,12 @@ class ContinuousEngine:
         for slot in self.sched.decoding_slots():
             if slot in spec_slots:
                 continue          # already emitted this step's token(s)
-            if int(self.cache.seq_lens[slot]) + 1 > cap:
+            pos = int(self.cache.seq_lens[slot])
+            if pos + 1 > cap:
                 retired.append(self._retire(slot, "context_cap"))
+            elif self.cache.page_is_shared(slot, pos) \
+                    and not self._cow_split(slot, pos):
+                pass   # shared write page, COW stalled: skip this step
             elif self.cache.ensure_append(slot, reserve=reserve):
                 steppable.append(slot)
         if self.spec_gamma and steppable:

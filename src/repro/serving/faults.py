@@ -24,13 +24,22 @@ fragmentation, and empty queues. The module doubles as the CI chaos smoke:
 
   PYTHONPATH=src python -m repro.serving.faults --smoke
 
-runs a stall, a pressure, a burst, and a spec-stall scenario on tiny
-models and asserts the invariants plus greedy-exactness of preempted (and
-speculatively decoded) requests against uncontended reference runs. The
-spec-stall scenario wedges a DRAFT tier mid-speculation: its target must
-degrade to plain decode (spec_fallbacks), never deadlock, resume
-speculating when the stall lifts, and leak zero pages in either the
-serving pool or the mirrored draft pool.
+runs a stall, a pressure, a burst, a spec-stall, and a prefix-thrash
+scenario on tiny models and asserts the invariants plus greedy-exactness
+of preempted (and speculatively decoded) requests against uncontended
+reference runs. The spec-stall scenario wedges a DRAFT tier
+mid-speculation: its target must degrade to plain decode (spec_fallbacks),
+never deadlock, resume speculating when the stall lifts, and leak zero
+pages in either the serving pool or the mirrored draft pool. The
+prefix-thrash scenario squeezes a prefix-sharing tier's pool mid-stream:
+live traffic must reclaim the tree's unreferenced pages (LRU eviction
+ahead of the stall ladder) and every emitted byte must match a
+non-sharing reference.
+
+``check_invariants`` is also the refcount zero-leak audit for shared-prefix
+serving: post-drain, a tier's pages must be exactly free-list + tree
+residents, and ``PagedKVCache.check_refcounts`` must report every page's
+count equal to its live references (slots mapping it + tree).
 """
 from __future__ import annotations
 
@@ -196,13 +205,19 @@ class FaultHarness:
                 bad.append(f"{name}: queue not drained "
                            f"({len(eng.sched.pending)} pending, "
                            f"{len(eng.sched.running)} running)")
-            if c.stats.pages_in_use != 0:
-                bad.append(f"{name}: {c.stats.pages_in_use} pages leaked")
-            if len(c._free) != c.num_pages - 1:
+            # prefix-tree residents legitimately survive a drain (that is
+            # the cache working); anything beyond them is a leak
+            resident = c.prefix.resident if c.prefix is not None else 0
+            if c.stats.pages_in_use != resident:
+                bad.append(f"{name}: {c.stats.pages_in_use} pages in use "
+                           f"after drain but only {resident} prefix-tree "
+                           "residents — pages leaked")
+            if len(c._free) != c.num_pages - 1 - resident:
                 bad.append(f"{name}: free list holds {len(c._free)} of "
-                           f"{c.num_pages - 1} pages")
+                           f"{c.num_pages - 1 - resident} expected pages")
             if c.held_pages != 0:
                 bad.append(f"{name}: {c.held_pages} pages still held")
+            bad.extend(f"{name}: {v}" for v in c.check_refcounts())
             if c.fragmentation != 0.0:
                 bad.append(f"{name}: fragmentation {c.fragmentation:.3f} "
                            "after drain")
@@ -220,6 +235,8 @@ class FaultHarness:
                 if dc.fragmentation != 0.0:
                     bad.append(f"{name}: draft fragmentation "
                                f"{dc.fragmentation:.3f} after drain")
+                bad.extend(f"{name}: draft {v}"
+                           for v in dc.check_refcounts())
         return bad
 
 
@@ -415,18 +432,69 @@ def scenario_spec_stall(verbose: bool = True) -> FaultHarness:
     return h
 
 
+def scenario_prefix_thrash(verbose: bool = True) -> FaultHarness:
+    """Page pressure forces prefix-tree eviction mid-stream: a warm-up
+    burst of shared-prefix prompts populates tier a's tree, then most of
+    the free pool vanishes just as a second shared-prefix wave lands. The
+    wave's admissions must reclaim the tree's unreferenced pages (LRU
+    eviction inside allocation — ahead of the wait/preempt/deadlock stall
+    ladder), drain clean with zero refcount leaks, and emit byte-identical
+    output vs a non-sharing (prefix_cache=0) reference."""
+    rng = np.random.default_rng(4)
+    pool, bundles = _tiny_pool(n_slots=2, max_seq=48, prefix_cache=16)
+    eng = pool.engine("a")
+    shared = rng.integers(4, 200, (16,)).astype(np.int32)   # 2 full pages
+    waves = [tuple(np.concatenate([shared, sfx]) for sfx in
+                   _prompts(rng, 3, lo=4, hi=10))
+             for _ in range(2)]
+    squeeze = eng.cache.stats.num_pages - 6   # leave almost nothing free
+    h = FaultHarness(pool, [
+        AdmissionBurst(step=0, prompts=waves[0], tier="a"),
+        # listed before the same-step burst: the hold lands first, so the
+        # second wave admits INTO the squeeze and must thrash the tree
+        PagePressure("a", start=10, steps=14, pages=squeeze),
+        AdmissionBurst(step=10, prompts=waves[1], tier="a"),
+    ])
+    h.run()
+    bad = h.check_invariants()
+    assert not bad, bad
+    t = eng.cache.prefix
+    assert eng.stats.prefix_hits > 0, \
+        "shared-prefix waves never hit the tree"
+    assert t.stats.evicted_pages > 0, \
+        "page pressure never forced a tree eviction"
+    assert eng.stats.stall_steps == 0 or eng.stats.prefix_hits > 0, \
+        "eviction did not run ahead of the stall ladder"
+    b, p = bundles[0]
+    for r in h.requests:
+        ref_eng = ContinuousEngine(b, p, max_new_tokens=r.max_new_tokens,
+                                   n_slots=2, max_seq=48)
+        ref = ref_eng.submit(r.tokens)
+        ref_eng.run()
+        assert r.out == ref.out, (r.rid, r.out, ref.out)
+    if verbose:
+        print(f"prefix-thrash: {len(h.retired)} retired "
+              f"({eng.stats.prefix_hits} tree hits, "
+              f"{t.stats.evicted_pages} pages evicted under a "
+              f"{squeeze}-page squeeze), all greedy-exact vs "
+              "prefix_cache=0, refcounts clean")
+    return h
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="run the four chaos scenarios and assert "
+                    help="run the five chaos scenarios and assert "
                          "invariants (the CI chaos job)")
     ap.add_argument("--scenario",
-                    choices=("stall", "pressure", "burst", "spec-stall"),
+                    choices=("stall", "pressure", "burst", "spec-stall",
+                             "prefix-thrash"),
                     help="run one scenario")
     args = ap.parse_args(argv)
     scenarios = {"stall": scenario_stall, "pressure": scenario_pressure,
-                 "burst": scenario_burst, "spec-stall": scenario_spec_stall}
+                 "burst": scenario_burst, "spec-stall": scenario_spec_stall,
+                 "prefix-thrash": scenario_prefix_thrash}
     names = [args.scenario] if args.scenario else list(scenarios)
     if not (args.smoke or args.scenario):
         ap.error("pick --smoke or --scenario")

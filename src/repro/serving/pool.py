@@ -20,6 +20,12 @@ greedy-exact at temperature 0). Tiers the capability check refuses
 path, recorded in ``plan.skipped``; a stalled draft tier degrades its
 target to plain decode for the stall's duration rather than wedging it.
 
+Shared-prefix KV reuse is strictly per-tier: an engine built with
+``prefix_cache > 0`` keeps its own copy-on-write prefix tree over its own
+page pool (serving.prefix) — pages are meaningless across models, so tiers
+never share with each other, and a pool freely mixes sharing tiers with
+window/SSM tiers that recompute (each records its ``prefix_reason``).
+
 Cost accounting is a ``TierMeter`` (core.routing): per-tier calls and
 generated tokens, with calls- and token-weighted cost advantage against the
 all-priciest baseline. Engines built with the same default seed get

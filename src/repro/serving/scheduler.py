@@ -93,6 +93,8 @@ class Request:
     finish_reason: str = ""                # see FINISH_REASONS
     preemptions: int = 0                   # times evicted mid-decode
     reprefill_tokens: int = 0              # tokens re-prefilled after evictions
+    prefix_hit_tokens: int = 0             # prompt tokens skipped via the
+                                           # shared-prefix tree (all resumes)
     # speculative-decoding ledger (cross-tier drafting; engine-maintained):
     # tokens the draft sibling proposed for this request, how many the
     # target accepted verbatim, and how many it rejected (rolled back).

@@ -1,0 +1,326 @@
+"""Shared-prefix KV reuse: radix-tree units over a refcounted page pool,
+copy-on-write fork parity, greedy byte-identity vs ``prefix_cache=0`` for
+shared-system-prompt fan-out and multi-turn chat, preempt-then-resume
+through the tree, capability-refusal reasons for window/SSM/one-shot/
+draft-mirror engines, and the zero-leak refcount audit."""
+import types
+
+import numpy as np
+import jax
+import pytest
+
+from repro.models import build_model
+from repro.serving import ContinuousEngine, PagedKVCache, PrefixTree
+from repro.serving.faults import scenario_prefix_thrash
+from repro.serving.scheduler import DECODING
+from conftest import tiny_cfg
+
+
+def _bundle(seed=0, **kw):
+    cfg = tiny_cfg("dense", **kw)
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(seed))
+
+
+def _engine(m, p, **kw):
+    kw.setdefault("max_new_tokens", 6)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prefill_chunk", 8)
+    return ContinuousEngine(m, p, **kw)
+
+
+def _toks(rng, cfg, n):
+    return rng.integers(4, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _assert_clean(ce):
+    """Slots drained: only tree residents keep pages, refcounts audit."""
+    c = ce.cache
+    resident = c.prefix.resident if c.prefix is not None else 0
+    assert c.stats.pages_in_use == resident
+    assert len(c._free) == c.num_pages - 1 - resident
+    assert c.check_refcounts() == []
+
+
+def _stub_cache(num_pages=16, page_size=4, prefix_pages=8):
+    """A PagedKVCache with no device pool — tree/refcount units only."""
+    bundle = types.SimpleNamespace(
+        init_paged_cache=lambda n, ps: None,
+        cfg=types.SimpleNamespace(name="stub"))
+    return PagedKVCache(bundle, n_slots=2, num_pages=num_pages,
+                        page_size=page_size, max_pages_per_slot=8,
+                        prefix_pages=prefix_pages)
+
+
+# ---------------------------------------------------------------- tree units
+def test_tree_publish_match_and_partial_fork():
+    """Full-page walk plus at most ONE partial tail page: the tree stores
+    only completed pages, so a mid-page fork maps the shared page COW."""
+    c = _stub_cache()
+    tree = c.prefix
+    a = np.arange(100, 112, dtype=np.int32)          # 3 full pages @ ps=4
+    pa = c.alloc_slot(0, len(a))
+    assert tree.publish(a, pa) == 3 and tree.resident == 3
+    # re-publishing is a dedup no-op
+    assert tree.publish(a, pa) == 0 and tree.resident == 3
+    # exact full-page match
+    pages, matched = tree.match(a)
+    assert matched == 12 and [int(p) for p in pages] == [int(p) for p in pa]
+    # shorter query: only full pages it covers
+    pages, matched = tree.match(a[:10])
+    assert matched == 10 and len(pages) == 3   # 2 exact + partial tail (2)
+    # diverging mid-page: partial overlap on the fork page, then stop
+    q = a.copy()
+    q[9] += 1                                  # fork inside page 3
+    pages, matched = tree.match(q)
+    assert matched == 9 and len(pages) == 3
+    # diverging on a page boundary: exact pages only, no tail page
+    q2 = a.copy()
+    q2[8] += 1
+    pages, matched = tree.match(q2)
+    assert matched == 8 and len(pages) == 2
+    assert tree.peek_pages(a) == 3 and tree.peek_pages(a[:10]) == 2
+    c.free_slot(0)
+    assert c.check_refcounts() == []
+
+
+def test_tree_lru_eviction_and_cap():
+    """Unreferenced (tree-only) pages evict LRU leaves-first; the
+    ``prefix_cache`` cap and allocation pressure both reclaim them."""
+    c = _stub_cache(num_pages=10, page_size=4, prefix_pages=4)
+    tree = c.prefix
+    a = np.arange(0, 8, dtype=np.int32)
+    b = np.concatenate([a[:4], np.arange(50, 54, dtype=np.int32)])
+    pa = c.alloc_slot(0, 8)
+    tree.publish(a, pa)
+    c.free_slot(0)                 # pages survive as tree-only residents
+    assert tree.resident == 2 and c.stats.pages_in_use == 2
+    pb = c.alloc_slot(0, 8)
+    tree.publish(b, pb)            # shared head dedups; cap 4 holds 3
+    c.free_slot(0)
+    assert tree.resident == 3
+    # a slot mapping a tree page pins it: only true leaves evict
+    pages, matched = tree.match(a)
+    c.map_shared(1, pages, matched)
+    assert tree.evictable() < tree.resident
+    # allocation bigger than the free list squeezes the tree before OOM
+    want = len(c._free) + 1
+    got = c.alloc_slot(0, want * c.page_size)
+    assert got is not None and tree.stats.evicted_pages > 0
+    assert c.check_refcounts() == []
+    c.free_slot(0)
+    c.free_slot(1)
+    tree.clear()
+    assert c.stats.pages_in_use == 0 and len(c._free) == c.num_pages - 1
+
+
+def test_cow_map_truncate_refcounts():
+    """map_shared bumps refcounts, cow_page splits a shared page privately,
+    truncate_slot and free_slot only ever decrement through _release —
+    and a double free raises instead of corrupting the free list."""
+    c = _stub_cache(num_pages=16, page_size=4, prefix_pages=8)
+    a = np.arange(0, 12, dtype=np.int32)
+    pa = c.alloc_slot(0, 12)
+    c.prefix.publish(a, pa)
+    assert [int(c.ref[p]) for p in pa] == [2, 2, 2]
+    pages, matched = c.prefix.match(a[:10])    # 2 exact + partial page 3
+    c.map_shared(1, pages, matched)
+    assert [int(c.ref[p]) for p in pa] == [3, 3, 3]
+    assert c.page_is_shared(1, 9)
+    src, dst = c.cow_page(1, 9)                # slot 1 forks page 3
+    assert src == int(pa[2]) and dst != src
+    assert int(c.ref[src]) == 2 and int(c.ref[dst]) == 1
+    assert not c.page_is_shared(1, 9) and c.stats.cow_splits == 1
+    # refcount-aware rollback: dropping slot 1's tail frees ONLY its
+    # private copy; the original page keeps its slot-0 + tree references
+    c.truncate_slot(1, 8)
+    assert int(c.ref[dst]) == 0 and dst in c._free
+    assert int(c.ref[src]) == 2
+    assert c.check_refcounts() == []
+    c.free_slot(1)
+    c.free_slot(0)
+    assert [int(c.ref[p]) for p in pa] == [1, 1, 1]   # tree still holds them
+    with pytest.raises(AssertionError):
+        c._release([int(pa[0]), int(pa[0])])
+
+
+def test_refcount_audit_catches_corruption():
+    """check_refcounts is a real auditor: a manufactured stray reference
+    and a leaked page both produce findings."""
+    c = _stub_cache()
+    pa = c.alloc_slot(0, 8)
+    assert c.check_refcounts() == []
+    c.ref[int(pa[0])] += 1                     # stray reference
+    assert c.check_refcounts() != []
+    c.ref[int(pa[0])] -= 1
+    leaked = c._free.pop()                     # off-list page at ref 0
+    assert c.check_refcounts() != []
+    c._free.append(leaked)
+    assert c.check_refcounts() == []
+
+
+# ------------------------------------------------------------- engine parity
+def test_fanout_parity_and_prefill_budget():
+    """Best-of-N fan-out over one system prompt: followers map the
+    leader's published pages, greedy output is byte-identical to
+    ``prefix_cache=0``, and the skipped chunks never reach the prefill
+    budget (strictly fewer dispatches and prefill tokens)."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(3)
+    sys = _toks(rng, cfg, 24)                  # 3 full pages @ ps=8
+    prompts = [np.concatenate([sys, _toks(rng, cfg, 5)]) for _ in range(4)]
+
+    plain = _engine(m, p)
+    refs = [plain.submit(t) for t in prompts]
+    plain.run()
+
+    ce = _engine(m, p, prefix_cache=12)
+    lead = ce.submit(prompts[0])
+    ce.run()                                   # leader publishes sys pages
+    reqs = [ce.submit(t) for t in prompts[1:]]
+    ce.run()
+    for r, ref in zip([lead] + reqs, refs):
+        assert r.out == ref.out, r.rid
+    assert ce.stats.prefix_hits == 3
+    assert all(r.prefix_hit_tokens >= 24 for r in reqs)
+    assert ce.stats.prefix_hit_tokens >= 72
+    # satellite: hit chunks are skipped, not dispatched as zero-width work
+    assert ce.stats.prefill_dispatches < plain.stats.prefill_dispatches
+    assert ce.stats.prefill_tokens <= \
+        plain.stats.prefill_tokens - ce.stats.prefix_hit_tokens
+    _assert_clean(ce)
+
+
+def test_multiturn_parity():
+    """Turn N+1 resends turn N's history; retirement published the
+    resident prefix (prompt + generated), so the re-sent bytes hit."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(5)
+    sys = _toks(rng, cfg, 16)
+
+    def turns(eng):
+        hist, outs = list(sys), []
+        for t in range(3):
+            prompt = np.asarray(hist + list(_toks(rng2, cfg, 6)), np.int32)
+            r = eng.submit(prompt)
+            eng.run()
+            hist = list(prompt) + r.out
+            outs.append(list(r.out))
+        return outs
+
+    rng2 = np.random.default_rng(7)
+    plain_outs = turns(_engine(m, p, max_seq=96))
+    rng2 = np.random.default_rng(7)
+    ce = _engine(m, p, max_seq=96, prefix_cache=16)
+    assert turns(ce) == plain_outs
+    assert ce.stats.prefix_hits >= 2 and ce.stats.prefix_hit_tokens > 0
+    _assert_clean(ce)
+
+
+def test_cow_fork_parity():
+    """A system prompt that ends mid-page: the leader's published fork
+    page mixes shared and private tokens, so the follower's first write
+    splits it copy-on-write — and output is still byte-identical."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(11)
+    sys = _toks(rng, cfg, 20)                  # fork inside page 3 @ ps=8
+    pa = np.concatenate([sys, _toks(rng, cfg, 8)])
+    pb = np.concatenate([sys, _toks(rng, cfg, 8)])
+
+    plain = _engine(m, p)
+    ra_ref = plain.submit(pa)
+    rb_ref = plain.submit(pb)
+    plain.run()
+
+    ce = _engine(m, p, prefix_cache=12)
+    ra = ce.submit(pa)
+    ce.run()
+    rb = ce.submit(pb)
+    ce.run()
+    assert ra.out == ra_ref.out and rb.out == rb_ref.out
+    assert rb.prefix_hit_tokens == 20          # 2 full pages + 4-token tail
+    assert ce.stats.cow_splits >= 1
+    _assert_clean(ce)
+
+
+def test_preempt_then_resume_hits_tree():
+    """Preemption publishes the victim's resident prefix; the resume
+    re-admission walks the tree instead of re-prefilling, and the stream
+    still matches its uncontended run."""
+    cfg, m, p = _bundle()
+    rng = np.random.default_rng(0)
+    lo_prompt = _toks(rng, cfg, 16)
+    hi_prompt = _toks(rng, cfg, 10)
+
+    ce = _engine(m, p, n_slots=1, max_seq=48, prefix_cache=12)
+    lo = ce.submit(lo_prompt, priority=0)
+    for _ in range(4):
+        ce.step()
+    assert lo.state == DECODING and lo.n_generated >= 1
+    hi = ce.submit(hi_prompt, priority=5)
+    ce.step()
+    assert lo.preemptions == 1
+    ce.run()
+    assert lo.done and hi.done
+    assert lo.prefix_hit_tokens >= 16          # resume walked the tree
+
+    ref = _engine(m, p, n_slots=1, max_seq=48)
+    r = ref.submit(lo_prompt)
+    ref.run()
+    assert r.out == lo.out
+    _assert_clean(ce)
+
+
+# ------------------------------------------------------ refusal & exactness
+def test_fallback_reasons():
+    """Tiers that can't share refuse with a recorded reason and serve
+    unshared — never an error."""
+    # sliding-window stack: pages behind the horizon are never written
+    cfg, m, p = _bundle(n_layers=3, sliding_window=6, local_global_ratio=2,
+                        cache_layout="paged")
+    ce = _engine(m, p, prefix_cache=8)
+    assert ce.cache.prefix is None and "window" in ce.prefix_reason
+
+    scfg = tiny_cfg("ssm", cache_layout="paged")
+    sm = build_model(scfg)
+    se = ContinuousEngine(sm, sm.init(jax.random.PRNGKey(0)), n_slots=2,
+                          page_size=8, max_seq=64, prefix_cache=8)
+    assert se.cache.prefix is None and "recurrent" in se.prefix_reason
+
+    # one-shot prefill has no fork point to resume from
+    _, m2, p2 = _bundle()
+    oe = _engine(m2, p2, prefill_chunk=0, prefix_cache=8)
+    assert oe.cache.prefix is None and "one-shot" in oe.prefix_reason
+
+    # a speculative draft mirror must replay every chunk: attach drops
+    # the tree (and its page references) with a reason
+    _, dm, dp = _bundle(seed=7)
+    de = _engine(m2, p2, prefix_cache=8)
+    assert de.cache.prefix is not None
+    de.attach_draft(dm, dp, gamma=2)
+    assert de.cache.prefix is None and "draft" in de.prefix_reason
+    assert de.cache.check_refcounts() == []
+
+
+def test_prefix_cache_zero_is_exact_default():
+    """prefix_cache=0 is byte-for-byte today's engine: no tree, no extra
+    pages, no reason recorded, single-reference pool throughout."""
+    cfg, m, p = _bundle()
+    ce = _engine(m, p)
+    assert ce.cache.prefix is None and ce.prefix_reason is None
+    assert ce.cache.num_pages == 1 + 2 * ce.cache.max_pages_per_slot
+    rng = np.random.default_rng(1)
+    r = ce.submit(_toks(rng, cfg, 12))
+    ce.run()
+    assert r.done and int(ce.cache.ref.max()) <= 1
+    assert ce.cache.check_refcounts() == []
+
+
+def test_chaos_prefix_thrash_invariants():
+    """The chaos scenario end-to-end: page pressure thrashing a warm tree
+    mid-admission stays greedy-exact with a clean refcount audit (the
+    scenario asserts its own invariants; a clean return IS the pass)."""
+    h = scenario_prefix_thrash(verbose=False)
+    assert h.check_invariants() == []
