@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import itertools
 
-import numpy as np
 
 from repro.core import drop_at_cost_advantages, pearson, spearman
 from repro.core.experiment import PAIRS

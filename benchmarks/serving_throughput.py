@@ -90,6 +90,7 @@ from repro.models import (RouterConfig, build_model, init_router_encoder)
 from repro.models.config import ArchConfig
 from repro.serving import (ContinuousEngine, ContinuousHybridEngine,
                            ContinuousPoolEngine, Engine, HybridEngine)
+from repro.serving.engine import _bucket
 
 
 def tier_configs(smoke: bool):
@@ -239,6 +240,39 @@ def _warm_then_timed(eng, prompts, caps):
     return reqs, delta, wall, t0
 
 
+def _compile_bounds(eng):
+    """Recompile-guard canary: upper bounds on distinct compile keys implied
+    by the engine's power-of-two bucketing. Decode keys are (bound, wstart)
+    pairs (plus draft bounds when speculating); prefill keys are (batch,
+    width, bound, wstart) tuples (plus verify (batch, bound) shapes). Any
+    regression that un-buckets a compile-key component — raw lengths or
+    live page counts reaching a jit signature — blows straight past these
+    bounds, so the smoke run fails instead of silently recompiling per
+    step."""
+    mp = eng.cache.max_pages_per_slot
+    n_bounds = len({min(_bucket(x), mp) for x in range(1, mp + 1)})
+    n_wstarts = 1
+    if eng.bundle.cfg.has_window_layers and eng.walk_bound == "live":
+        # floor-pow2 of the first window page: {0, 1, 2, 4, ...} up to mp
+        starts = {0}
+        b = 1
+        while b <= mp:
+            starts.add(b)
+            b *= 2
+        n_wstarts = len(starts)
+    chunk = eng.prefill_chunk
+    n_widths = len({min(_bucket(x), chunk) for x in range(1, chunk + 1)})
+    pack = eng.prefill_pack if eng.prefill_pack else 1  # 0 = per-slot B=1
+    n_batches = len({_bucket(x) for x in range(1, pack + 1)})
+    decode_bound = n_bounds * n_wstarts
+    prefill_bound = n_batches * n_widths * n_bounds * n_wstarts
+    if eng.draft_bundle is not None:
+        decode_bound += n_bounds          # draft decode keys on bound only
+        n_vbatch = len({_bucket(x) for x in range(1, eng.n_slots + 1)})
+        prefill_bound += n_vbatch * n_bounds   # verify (batch, bound) keys
+    return decode_bound, prefill_bound
+
+
 def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
                    rng, prefill_chunk=None, prefill_pack=None,
                    walk_bound="live"):
@@ -249,6 +283,15 @@ def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
     reqs, delta, wall, t0 = _warm_then_timed(eng, prompts, caps)
     useful = sum(r.n_generated for r in reqs)
     latencies = [r.finish_t - t0 for r in reqs]
+    dc_bound, pc_bound = _compile_bounds(eng)
+    assert eng.stats.decode_compiles <= dc_bound, \
+        (f"recompile canary: {eng.stats.decode_compiles} decode compiles "
+         f"exceed the {dc_bound} distinct (bound, wstart) buckets the "
+         "engine geometry allows — a compile-key component is unbucketed")
+    assert eng.stats.prefill_compiles <= pc_bound, \
+        (f"recompile canary: {eng.stats.prefill_compiles} prefill compiles "
+         f"exceed the {pc_bound} distinct (batch, width, bound, wstart) "
+         "buckets the engine geometry allows")
     return {
         "engine": "continuous_paged",
         "requests": len(toks),
@@ -276,6 +319,8 @@ def run_continuous(bundle, params, stream, t_max: int, n_slots: int,
         "prefill_dispatches": delta["prefill_dispatches"],
         "prefill_compiles": eng.stats.prefill_compiles,
         "decode_compiles": eng.stats.decode_compiles,
+        "prefill_compile_bound": pc_bound,
+        "decode_compile_bound": dc_bound,
         "compiles_timed": delta["prefill_compiles"]
         + delta["decode_compiles"],
         "prefill_stalls": delta["prefill_stalls"],

@@ -2,7 +2,6 @@
 regimes (small/medium/large), all three routers."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import drop_at_cost_advantages
 from repro.core.experiment import PAIRS, ROUTER_KINDS

@@ -4,9 +4,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.router import score_dataset
 from repro.data import tokenizer as tok
 from repro.models import RouterConfig, init_router_encoder, router_score
 from repro.serving.generate import build_generate_fn

@@ -2,7 +2,6 @@
 validation samples under a <=1% drop budget, report val vs test transfer."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import calibrate_threshold, evaluate_threshold
 from repro.core.experiment import PAIRS, ROUTER_KINDS

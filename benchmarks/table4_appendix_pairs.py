@@ -2,7 +2,6 @@
 cost advantage vs drop across every (S, L) capacity pair."""
 from __future__ import annotations
 
-import itertools
 
 from repro.core import drop_at_cost_advantages
 from repro.core.experiment import ROUTER_KINDS

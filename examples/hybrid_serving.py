@@ -6,11 +6,9 @@ retraining). Also prints the per-engine serve stats.
 
 Run: PYTHONPATH=src python examples/hybrid_serving.py
 """
-import numpy as np
 
 from repro.core import HybridRouter, threshold_for_cost_advantage, mixture_quality, perf_drop_pct
 from repro.core.experiment import build_experiment, train_pair_routers
-from repro.data.tasks import generate_dataset
 from repro.serving import Engine, HybridEngine
 
 

@@ -8,10 +8,8 @@
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
-from repro.core import (HybridRouter, calibrate_threshold, evaluate_threshold,
-                        drop_at_cost_advantages)
+from repro.core import HybridRouter, calibrate_threshold, evaluate_threshold
 from repro.core.experiment import build_experiment, train_pair_routers
 from repro.serving import Engine, HybridEngine
 
@@ -52,7 +50,7 @@ def main():
     hybrid = HybridEngine(router, small, large)
     ds = exp.datasets["test"]
     for i in range(0, 192, 64):   # three batches of requests
-        res = hybrid.serve(ds.query[i:i + 64], ds.query_mask[i:i + 64])
+        hybrid.serve(ds.query[i:i + 64], ds.query_mask[i:i + 64])
     print(f"  served {hybrid.meter.to_small + hybrid.meter.to_large} queries, "
           f"cost advantage {hybrid.meter.cost_advantage:.0%} "
           f"({hybrid.meter.to_small} -> small, "

@@ -1,0 +1,39 @@
+"""Repo-native static analysis: machine-checked serving invariants.
+
+The hybrid router's correctness story rests on hand-maintained invariants —
+greedy byte-exactness across the serving fast paths, a single refcount-aware
+page release choke point, a declared slot-lifecycle FSM, and kernel/ops/ref
+triples whose static compile keys must stay consistent. This package turns
+those from reviewer memory into four enforced passes, run by CI as
+``python -m repro.analysis`` (non-zero exit on findings):
+
+* ``pallas_check`` — imports each ``kernels/*/`` family, intercepts its
+  ``pl.pallas_call`` launches with tiny probe inputs, and audits grid /
+  BlockSpec consistency: index-map bounds vs operand shapes, block-shape
+  divisibility, write-write races (two grid points landing on one output
+  block without a scratch accumulator), scratch sanity, and that every
+  static arg threaded through ``ops.py`` is declared by ``kernel.py`` and
+  exercised by ``ref.py``.
+* ``fsm_check`` — AST-extracts every request/slot state transition from
+  ``serving/{scheduler,engine,pool}.py`` and verifies it against the
+  declared table (``scheduler.TRANSITIONS`` + per-site ``fsm_spec``):
+  no undeclared edges or writer sites, no unreachable/undrivable states,
+  and every terminal path assigns exactly one valid finish reason.
+* ``trace_lint`` — jit/step-loop hazards across ``src/repro``: Python
+  branching on traced values, wall-clock calls in serving paths, unhashable
+  static compile keys, host syncs inside jitted code, mutable defaults.
+* ``page_ledger`` — proves every page-freeing call site in
+  ``serving/{cache,engine,pool,prefix}.py`` routes through the
+  refcount-aware ``PagedKVCache._release`` (direct free-list or refcount
+  escapes are findings).
+
+Intentional exceptions live in ``allowlist.ALLOWLIST``; every entry must
+carry a written reason and must still match a live finding — stale or
+reasonless entries fail the run (exit 2), so the allowlist can only shrink
+or be justified, never rot.
+"""
+from __future__ import annotations
+
+from .report import AllowEntry, Finding  # noqa: F401
+
+PASSES = ("pallas", "fsm", "trace", "ledger")

@@ -1,0 +1,73 @@
+"""CLI runner: ``python -m repro.analysis [--json out] [--passes a,b]``.
+
+Exit codes: 0 = clean (allowlisted findings suppressed), 1 = findings,
+2 = allowlist protocol violation (entry with no reason, or stale entry
+matching no live finding)."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import PASSES
+from .allowlist import ALLOWLIST
+from .report import apply_allowlist, render_json
+
+
+def _run_pass(name: str, root: Path):
+    if name == "pallas":
+        from . import pallas_check
+        return pallas_check.run(root)
+    if name == "fsm":
+        from . import fsm_check
+        return fsm_check.run(root)
+    if name == "trace":
+        from . import trace_lint
+        return trace_lint.run(root)
+    if name == "ledger":
+        from . import page_ledger
+        return page_ledger.run(root)
+    raise SystemExit(f"unknown pass {name!r} (choose from {PASSES})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static-analysis passes over the serving invariants: "
+                    "pallas launch audit, scheduler FSM verifier, "
+                    "trace-safety lint, page-ledger ownership.")
+    ap.add_argument("--root", default=None,
+                    help="tree to analyse (default: the installed "
+                    "src/repro package directory)")
+    ap.add_argument("--passes", default=",".join(PASSES),
+                    help=f"comma-separated subset of {PASSES}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a JSON report ('-' = stdout)")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else Path(__file__).parents[1]
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    findings = []
+    for name in passes:
+        findings.extend(_run_pass(name, root))
+    reported, suppressed, problems = apply_allowlist(findings, ALLOWLIST)
+
+    if args.json:
+        payload = render_json(reported, suppressed, problems)
+        if args.json == "-":
+            print(payload)
+        else:
+            Path(args.json).write_text(payload + "\n")
+    for f in reported:
+        print(f.format())
+    for msg in problems:
+        print(f"ALLOWLIST: {msg}")
+    print(f"repro.analysis: {len(reported)} finding(s), "
+          f"{len(suppressed)} allowlisted, passes={','.join(passes)}")
+    if problems:
+        return 2
+    return 1 if reported else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

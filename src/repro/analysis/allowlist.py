@@ -1,0 +1,30 @@
+"""Recorded exceptions to the analysis rules. Every entry names the rule,
+the site, and — mandatorily — the reason the invariant is intentionally
+bypassed there. The runner fails (exit 2) on an entry with no reason or one
+matching no live finding, so this list can only hold real, justified
+exceptions."""
+from __future__ import annotations
+
+from .report import AllowEntry
+
+ALLOWLIST = (
+    AllowEntry(
+        rule="ledger-free-escape",
+        path="cache.py",
+        symbol="PagedKVCache.hold_pages",
+        reason="External page-pressure hook (fault injection / ops): takes "
+               "pages OUT of circulation directly off the free list. Only "
+               "refcount-0 pages can sit on the free list (_release "
+               "guarantees it), so no reference arithmetic is skipped; "
+               "held pages are tracked in held_pages and audited by "
+               "check_refcounts."),
+    AllowEntry(
+        rule="ledger-free-escape",
+        path="cache.py",
+        symbol="PagedKVCache.release_pages",
+        reason="Inverse of hold_pages: returns externally-held pages whose "
+               "refcount stayed 0 for the whole hold (they were never "
+               "mapped), so routing through _release would underflow the "
+               "count. Guarded by the held_pages ledger and the "
+               "check_refcounts audit."),
+)

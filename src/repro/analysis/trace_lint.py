@@ -1,0 +1,395 @@
+"""Trace-safety lint: jit/step-loop hazards over ``src/repro``.
+
+The serving step must stay shape-stable and device-async: a Python branch
+on a traced value, a host sync mid-step, or an unhashable compile key each
+silently turn "one compiled step" into a recompile storm or a pipeline
+bubble. Rules:
+
+* ``trace-branch``      — ``if``/``while`` inside a jit-traced function
+  whose test reads a traced (non-static) parameter. ``x is None`` /
+  ``x is not None`` tests are exempt: optional-operand structure is
+  resolved at trace time, not data-dependent.
+* ``host-sync``         — inside a jit-traced function: ``.item()``,
+  ``print()``, or ``int()/float()/bool()/np.asarray()/np.array()`` applied
+  to a traced parameter (forces a device->host transfer mid-trace); plus
+  ``.item()`` anywhere in a serving module (the step loop is host code,
+  but ``.item()`` blocks the dispatch pipeline).
+* ``wall-clock``        — ``time.time()`` / ``time.perf_counter()`` /
+  ``datetime.now()`` in serving paths (``serving/`` modules and
+  ``launch/serve.py``). All serving stamps are ``time.monotonic()`` so
+  wall-clock jumps can't corrupt latency/deadline arithmetic.
+* ``static-arg-unknown``— a ``static_argnames`` entry naming no parameter
+  of the jitted function (the classic silently-ignored compile key).
+* ``unhashable-static`` — a list/dict/set display passed in a static
+  position at a direct call site of a jitted function (unhashable compile
+  keys raise at runtime; data-dependent ones recompile per call).
+* ``mutable-default``   — a mutable literal (``[]``/``{}``/``set()``...)
+  as a function parameter default or a dataclass field default.
+
+Jit scopes are found two ways: functions decorated with ``jax.jit`` /
+``functools.partial(jax.jit, ...)``, and ``jax.jit(fn, ...)`` calls whose
+first argument resolves to a local ``def``/``lambda``/``self.method``.
+Pallas kernel bodies are not jit scopes (their int kwargs are
+``functools.partial``-bound statics), so they are naturally out of scope.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Finding
+
+RULES = frozenset({
+    "trace-branch", "host-sync", "wall-clock", "static-arg-unknown",
+    "unhashable-static", "mutable-default",
+})
+_MUTABLE_CALLS = ("list", "dict", "set", "bytearray")
+_WALL_CLOCK = {("time", "time"), ("time", "perf_counter"),
+               ("datetime", "now")}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "jax")
+
+
+def _jit_partial_decorator(dec: ast.AST) -> Optional[ast.Call]:
+    """``functools.partial(jax.jit, ...)`` / ``partial(jax.jit, ...)``."""
+    if isinstance(dec, ast.Call) and dec.args and _is_jax_jit(dec.args[0]):
+        fn = dec.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else ""
+        if name == "partial":
+            return dec
+    return None
+
+
+def _static_names(call: Optional[ast.Call], params: List[str],
+                  offset: int) -> Tuple[Set[str], Set[str]]:
+    """(static param names, declared static_argnames) from a jit call's
+    kwargs. ``offset`` skips self/cls when the jitted object was bound."""
+    statics: Set[str] = set()
+    declared: Set[str] = set()
+    if call is None:
+        return statics, declared
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, str):
+                    declared.add(elt.value)
+                    statics.add(elt.value)
+        elif kw.arg == "static_argnums":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, int):
+                    idx = elt.value + offset
+                    if 0 <= idx < len(params):
+                        statics.add(params[idx])
+    return statics, declared
+
+
+@dataclasses.dataclass
+class _JitScope:
+    fn: ast.AST                  # FunctionDef or Lambda
+    qualname: str
+    params: List[str]            # excluding self/cls
+    statics: Set[str]
+    declared_static_names: Set[str]
+    public_name: str             # name callers use post-jit ("" if unknown)
+
+
+class _Lint:
+    def __init__(self, path: str, rel: str, tree: ast.Module,
+                 rules: frozenset):
+        self.rel = rel
+        self.tree = tree
+        self.rules = rules
+        self.findings: List[Finding] = []
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.is_serving = "serving/" in rel or rel.endswith("launch/serve.py")
+
+    def emit(self, rule: str, node: ast.AST, symbol: str, msg: str) -> None:
+        if rule in self.rules:
+            self.findings.append(Finding(
+                rule=rule, path=self.rel,
+                line=getattr(node, "lineno", 0), symbol=symbol, message=msg))
+
+    # ------------------------------------------------------------ name utils
+    def _qualname(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None and not isinstance(cur, ast.Module):
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            elif isinstance(cur, ast.Lambda):
+                parts.append("<lambda>")
+            cur = self.parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def _resolve_local(self, ref: ast.AST, at: ast.AST) -> Optional[ast.AST]:
+        """Resolve ``fn`` in ``jax.jit(fn)`` to a FunctionDef/Lambda: a name
+        defined in an enclosing scope, or ``self.method`` / ``cls.method``
+        of the enclosing class."""
+        target_name = attr_of_self = None
+        if isinstance(ref, ast.Lambda):
+            return ref
+        if isinstance(ref, ast.Name):
+            target_name = ref.id
+        elif isinstance(ref, ast.Attribute) \
+                and isinstance(ref.value, ast.Name) \
+                and ref.value.id in ("self", "cls"):
+            attr_of_self = ref.attr
+        else:
+            return None
+        scope: Optional[ast.AST] = at
+        while scope is not None:
+            scope = self.parents.get(scope)
+            if target_name is not None and isinstance(
+                    scope, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Module)):
+                for child in ast.iter_child_nodes(scope):
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)) \
+                            and child.name == target_name:
+                        return child
+            if attr_of_self is not None and isinstance(scope, ast.ClassDef):
+                for child in scope.body:
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)) \
+                            and child.name == attr_of_self:
+                        return child
+        return None
+
+    # --------------------------------------------------------- scope harvest
+    def jit_scopes(self) -> List[_JitScope]:
+        scopes: List[_JitScope] = []
+        seen: Set[ast.AST] = set()
+
+        def params_of(fn: ast.AST) -> Tuple[List[str], int]:
+            a = fn.args
+            names = [p.arg for p in a.posonlyargs + a.args]
+            offset = 0
+            if names and names[0] in ("self", "cls"):
+                names = names[1:]
+                offset = 0 if isinstance(fn, ast.Lambda) else 0
+            names += [p.arg for p in a.kwonlyargs]
+            return names, offset
+
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    call = None
+                    if _is_jax_jit(dec):
+                        call = ast.Call(func=dec, args=[], keywords=[])
+                    elif isinstance(dec, ast.Call) and _is_jax_jit(dec.func):
+                        call = dec
+                    else:
+                        call = _jit_partial_decorator(dec)
+                    if call is not None and node not in seen:
+                        seen.add(node)
+                        params, _ = params_of(node)
+                        statics, declared = _static_names(call, params, 0)
+                        scopes.append(_JitScope(
+                            node, self._qualname(node), params, statics,
+                            declared, node.name))
+            elif isinstance(node, ast.Call) and _is_jax_jit(node.func) \
+                    and node.args:
+                fn = self._resolve_local(node.args[0], node)
+                if fn is None or fn in seen:
+                    continue
+                seen.add(fn)
+                params, _ = params_of(fn)
+                statics, declared = _static_names(node, params, 0)
+                public = ""
+                parent = self.parents.get(node)
+                if isinstance(parent, ast.Assign) \
+                        and len(parent.targets) == 1 \
+                        and isinstance(parent.targets[0], ast.Name):
+                    public = parent.targets[0].id
+                scopes.append(_JitScope(
+                    fn, self._qualname(fn), params, statics, declared,
+                    public))
+        return scopes
+
+    # ------------------------------------------------------------ rule bodies
+    def lint_scope(self, scope: _JitScope) -> None:
+        traced = set(scope.params) - scope.statics
+        for name in scope.declared_static_names - set(scope.params):
+            self.emit("static-arg-unknown", scope.fn, scope.qualname,
+                      f"static_argnames entry {name!r} names no parameter "
+                      f"of {scope.qualname} — it is silently ignored")
+        body = scope.fn.body if isinstance(scope.fn.body, list) \
+            else [scope.fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.If, ast.While)):
+                    self._check_branch(node, traced, scope)
+                elif isinstance(node, ast.Call):
+                    self._check_host_sync(node, traced, scope)
+
+    def _check_branch(self, node, traced: Set[str],
+                      scope: _JitScope) -> None:
+        if self._is_none_test(node.test):
+            return
+        names = {n.id for n in ast.walk(node.test)
+                 if isinstance(n, ast.Name)}
+        hot = sorted(names & traced)
+        if hot:
+            kind = "while" if isinstance(node, ast.While) else "if"
+            self.emit("trace-branch", node, scope.qualname,
+                      f"Python {kind} on traced parameter(s) {hot} — "
+                      "inside jit this raises a TracerBoolConversionError "
+                      "or forces a host sync; use lax.cond/select")
+
+    @staticmethod
+    def _is_none_test(test: ast.AST) -> bool:
+        def one(t: ast.AST) -> bool:
+            return (isinstance(t, ast.Compare) and len(t.ops) == 1
+                    and isinstance(t.ops[0], (ast.Is, ast.IsNot))
+                    and isinstance(t.comparators[0], ast.Constant)
+                    and t.comparators[0].value is None)
+        if isinstance(test, ast.BoolOp):
+            return all(one(v) for v in test.values)
+        return one(test)
+
+    def _check_host_sync(self, node: ast.Call, traced: Set[str],
+                         scope: _JitScope) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "item" \
+                and not node.args:
+            self.emit("host-sync", node, scope.qualname,
+                      ".item() inside a jit-traced function — "
+                      "device->host sync mid-trace")
+        if isinstance(fn, ast.Name) and fn.id == "print":
+            self.emit("host-sync", node, scope.qualname,
+                      "print() inside a jit-traced function (runs at "
+                      "trace time or syncs; use jax.debug.print)")
+        cast = None
+        if isinstance(fn, ast.Name) and fn.id in ("int", "float", "bool"):
+            cast = fn.id
+        elif isinstance(fn, ast.Attribute) \
+                and fn.attr in ("asarray", "array") \
+                and isinstance(fn.value, ast.Name) \
+                and fn.value.id in ("np", "numpy"):
+            cast = f"np.{fn.attr}"
+        if cast and node.args and isinstance(node.args[0], ast.Name) \
+                and node.args[0].id in traced:
+            self.emit("host-sync", node, scope.qualname,
+                      f"{cast}() applied to traced parameter "
+                      f"{node.args[0].id!r} — host materialisation "
+                      "inside jit")
+
+    def lint_module(self, scopes: List[_JitScope]) -> None:
+        jit_bodies = {id(n) for s in scopes for n in ast.walk(s.fn)}
+        by_public = {s.public_name: s for s in scopes if s.public_name}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._check_wall_clock(node)
+                self._check_static_call(node, by_public)
+                if self.is_serving and id(node) not in jit_bodies:
+                    fn = node.func
+                    if isinstance(fn, ast.Attribute) and fn.attr == "item" \
+                            and not node.args:
+                        self.emit("host-sync", node, self._qualname(node),
+                                  ".item() in a serving module — blocks "
+                                  "the dispatch pipeline; keep transfers "
+                                  "at the step's designated sync points")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_defaults(node)
+            elif isinstance(node, ast.ClassDef):
+                self._check_dataclass_fields(node)
+
+    def _check_wall_clock(self, node: ast.Call) -> None:
+        if not self.is_serving:
+            return
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+            if (fn.value.id, fn.attr) in _WALL_CLOCK:
+                self.emit("wall-clock", node, self._qualname(node),
+                          f"{fn.value.id}.{fn.attr}() in a serving path — "
+                          "all serving stamps must be time.monotonic() so "
+                          "wall-clock jumps can't corrupt latency/deadline "
+                          "arithmetic")
+
+    def _check_static_call(self, node: ast.Call,
+                           by_public: Dict[str, _JitScope]) -> None:
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else \
+            fn.attr if isinstance(fn, ast.Attribute) else ""
+        scope = by_public.get(name)
+        if scope is None:
+            return
+        static_pos = {scope.params.index(s) for s in scope.statics
+                      if s in scope.params}
+        for i, arg in enumerate(node.args):
+            if i in static_pos and self._unhashable(arg):
+                self.emit("unhashable-static", node, self._qualname(node),
+                          f"unhashable literal in static position {i} of "
+                          f"{name}() — compile keys must be hashable")
+        for kw in node.keywords:
+            if kw.arg in scope.statics and self._unhashable(kw.value):
+                self.emit("unhashable-static", node, self._qualname(node),
+                          f"unhashable literal for static arg "
+                          f"{kw.arg!r} of {name}()")
+
+    @staticmethod
+    def _unhashable(node: ast.AST) -> bool:
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            return True
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in ("list", "dict", "set"))
+
+    def _check_defaults(self, node) -> None:
+        a = node.args
+        for d in list(a.defaults) + [d for d in a.kw_defaults if d]:
+            if self._unhashable(d):
+                self.emit("mutable-default", node, self._qualname(node),
+                          "mutable default argument — shared across calls; "
+                          "use None or a factory")
+
+    def _check_dataclass_fields(self, node: ast.ClassDef) -> None:
+        names = set()
+        for dec in node.decorator_list:
+            for sub in ast.walk(dec):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+                elif isinstance(sub, ast.Attribute):
+                    names.add(sub.attr)
+        if "dataclass" not in names:
+            return
+        for item in node.body:
+            if isinstance(item, ast.AnnAssign) and item.value is not None \
+                    and self._unhashable(item.value):
+                self.emit("mutable-default", item,
+                          f"{self._qualname(node)}",
+                          "mutable dataclass field default — use "
+                          "field(default_factory=...)")
+
+
+def check_file(path: Path, rel: str,
+               rules: Optional[frozenset] = None) -> List[Finding]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    lint = _Lint(str(path), rel, tree,
+                 RULES if rules is None else frozenset(rules))
+    scopes = lint.jit_scopes()
+    for s in scopes:
+        lint.lint_scope(s)
+    lint.lint_module(scopes)
+    return lint.findings
+
+
+def run(root: Path, rules: Optional[frozenset] = None) -> List[Finding]:
+    out: List[Finding] = []
+    for p in sorted(root.rglob("*.py")):
+        out.extend(check_file(p, p.relative_to(root).as_posix(), rules))
+    return out

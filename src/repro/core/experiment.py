@@ -17,8 +17,6 @@ import dataclasses
 import zlib
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data import tokenizer as tok
@@ -29,7 +27,7 @@ from repro.models.model import ModelBundle, build_model
 from repro.serving.generate import sample_responses
 from repro.training.trainer import TrainConfig, train_lm
 from . import labels as labels_lib
-from .quality import edit_similarity, scorer_loglik
+from .quality import edit_similarity
 from .router import RouterTrainConfig, score_dataset, train_router
 
 

@@ -88,7 +88,10 @@ def generate_dataset(rng: np.random.Generator, n: int, q_len: int = 16,
         r_ids = tok.encode_chars(ans) + [tok.EOS]
         qa, ql = tok.pad_to(q_ids, q_len)
         ra, rl = tok.pad_to(r_ids, r_len)
-        qs.append(qa); qls.append(ql); refs.append(ra); rls.append(rl)
+        qs.append(qa)
+        qls.append(ql)
+        refs.append(ra)
+        rls.append(rl)
         tids.append(ti)
     query = np.stack(qs)
     qlen = np.asarray(qls, np.int32)

@@ -6,7 +6,6 @@ what lets the reproduction use *real* model-behaviour quality gaps.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

@@ -12,6 +12,11 @@ import jax.numpy as jnp
 
 from .kernel import decode_attention_gqa
 
+# No threaded compile keys: these wrappers are plain functions traced inside
+# the caller's jit (``bk`` is derived from S, never caller-supplied).
+# Declared for repro.analysis.pallas_check's kernel/ops/ref triple audit.
+STATIC_ARGS = ()
+
 
 def decode_attention(q, k_exp, v_exp, valid):
     """q: (B, 1, H, D); k_exp/v_exp: (B, S, H, D) head-expanded cache;

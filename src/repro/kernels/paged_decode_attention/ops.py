@@ -9,9 +9,14 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import paged_decode_attention_gqa
+
+# The family's threaded compile keys: static args carried kernel <-> ops <->
+# ref. ``repro.analysis.pallas_check`` verifies this declaration matches the
+# jit decorator below, that the kernel entry declares each name, and that
+# the ref oracle exercises it.
+STATIC_ARGS = ("pages_bound", "pages_start", "window")
 
 
 @functools.partial(jax.jit, static_argnames=("pages_bound", "pages_start",

@@ -23,6 +23,12 @@ import jax.numpy as jnp
 
 from .kernel import paged_prefill_attention_gqa
 
+# The family's threaded compile keys: static args carried kernel <-> ops <->
+# ref. ``repro.analysis.pallas_check`` verifies this declaration matches the
+# jit decorator below, that the kernel entry declares each name, and that
+# the ref oracle exercises it.
+STATIC_ARGS = ("pages_bound", "pages_start", "window")
+
 
 @functools.partial(jax.jit, static_argnames=("pages_bound", "pages_start",
                                              "window"))

@@ -57,7 +57,6 @@ def ssd_chunk_scan(x, dt, dacum, B, C, *, interpret: bool | None = None):
     auto-detects the backend."""
     from repro.kernels.common import default_interpret
     interpret = default_interpret(interpret)
-    BCH = x.shape[0] * x.shape[1]
     bc, H, l, P = x.shape
     N = B.shape[-1]
     xf = x.reshape(bc * H, l, P)

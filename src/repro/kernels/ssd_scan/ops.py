@@ -5,6 +5,11 @@ import jax.numpy as jnp
 
 from .kernel import ssd_chunk_scan
 
+# No threaded compile keys: the scan wrapper is traced inside the caller's
+# jit and every launch parameter is shape-derived. Declared for
+# repro.analysis.pallas_check's kernel/ops/ref triple audit.
+STATIC_ARGS = ()
+
 
 def ssd_chunk(xs, dts, dA_cum, Bs, Cs):
     """Model layout in: xs (b, nc, l, H, P); dts/dA_cum (b, nc, l, H);

@@ -75,7 +75,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "multi" if multi_pod else "single", "chips": n_chips,
            "ok": False}
-    t0 = time.time()
+    t0 = time.monotonic()
     fn, arg_specs, trips = build_step(rcfg, shape)
     in_sh = sharding_for_args(arg_specs, shape, mesh)
     out_sh = out_sharding_for(fn, arg_specs, in_sh, shape, mesh)
@@ -106,7 +106,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate).lower(*arg_specs)
         compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["compile_s"] = round(time.monotonic() - t0, 2)
 
     ma = compiled.memory_analysis()
     rec["memory"] = {

@@ -197,13 +197,21 @@ def _analyze_instruction(comp: Computation, var: str, rhs: str):
             comp.calls.append(cm.group(1))
 
     if opcode == "dot":
-        # FLOPs = 2 * |out| * prod(contracting dims of lhs)
-        ops = re.search(r"dot\(%?([\w\.\-_]+),\s*%?([\w\.\-_]+)\)", rhs)
+        # FLOPs = 2 * |out| * prod(contracting dims of lhs). Depending on
+        # XLA version the operands print bare (`dot(%a, %b)`) or typed
+        # (`dot(f32[32,64]{1,0} %a, ...)`); accept both, preferring the
+        # inline shape when present.
+        ops = re.search(
+            r"dot\(\s*(?:[a-z0-9]+\[([0-9,]*)\]\S*\s+)?%?([\w\.\-_]+)", rhs)
         lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
         if ops and lhs_c and out_shapes:
-            lhs = comp.var_shapes.get(ops.group(1).lstrip("%"))
-            if lhs:
-                dims = [int(x) for x in lhs[1].split(",") if x]
+            if ops.group(1) is not None:
+                dims_txt = ops.group(1)
+            else:
+                lhs = comp.var_shapes.get(ops.group(2).lstrip("%"))
+                dims_txt = lhs[1] if lhs else None
+            if dims_txt is not None:
+                dims = [int(x) for x in dims_txt.split(",") if x]
                 cdims = [int(x) for x in lhs_c.group(1).split(",") if x]
                 csize = 1
                 for c in cdims:

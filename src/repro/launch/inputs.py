@@ -14,7 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ArchConfig, InputShape, INPUT_SHAPES
+from repro.models.config import ArchConfig, InputShape
 from repro.models.model import build_model
 
 

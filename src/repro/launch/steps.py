@@ -11,7 +11,6 @@ correction (XLA counts a while body once; see launch/hlo_analysis.py).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 import jax

@@ -7,7 +7,6 @@ caches and compared in tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

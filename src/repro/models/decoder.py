@@ -9,7 +9,6 @@ structures.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax

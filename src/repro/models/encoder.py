@@ -13,7 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .common import dense_init, dtype_of, init_mlp, init_rmsnorm, mlp, rmsnorm
+from .common import dense_init, init_mlp, init_rmsnorm, mlp, rmsnorm
 
 
 @dataclasses.dataclass(frozen=True)

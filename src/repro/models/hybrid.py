@@ -18,7 +18,7 @@ from . import attention as attn
 from . import moe as moe_lib
 from . import ssm as ssm_lib
 from .common import (dtype_of, embed, init_embedding, init_mlp, init_rmsnorm,
-                     mlp, rmsnorm, stack_params, unembed)
+                     mlp, rmsnorm, stack_params)
 from .decoder import _unembed
 from repro.sharding.context import constrain_batch
 

@@ -14,7 +14,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 from .config import ArchConfig
 from . import decoder, encdec, hybrid

@@ -127,8 +127,8 @@ from repro.data import tokenizer as tok
 from repro.models.model import ModelBundle
 from .cache import PagedKVCache, RecurrentStatePool
 from .generate import build_generate_fn, _sample, _sample_rows
-from .scheduler import (DECODING, DONE as SCHED_DONE, DRAFTING, PREFILLING,
-                        VERIFYING, ContinuousScheduler, Request)
+from .scheduler import (DECODING, DONE as SCHED_DONE, DRAFTING, VERIFYING,
+                        ContinuousScheduler, Request)
 
 
 def _bucket(n: int) -> int:

@@ -3,7 +3,6 @@ temperature sampling, EOS termination masking, and fixed shapes (jit-stable).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
 import jax

@@ -61,6 +61,26 @@ DONE = "done"                # retired
 #                 mid-stream (tokens already emitted are kept)
 FINISH_REASONS = ("eos", "length", "context_cap", "rejected", "deadline")
 
+# Declared lifecycle edges (from_state, to_state) — the machine-checked
+# source of truth for the request/slot FSM. ``repro.analysis.fsm_check``
+# AST-extracts every ``.state = X`` assignment in scheduler/engine/pool and
+# verifies it lands on one of these edges at a site declared in
+# ``repro.analysis.fsm_spec``; adding a state or a transition without
+# growing this tuple (and the spec) fails the analysis job.
+TRANSITIONS = (
+    (QUEUED, PREFILLING),       # admit
+    (QUEUED, DONE),             # shed / deadline before ever holding a slot
+    (PREFILLING, DECODING),     # prompt resident (last chunk or one-shot)
+    (PREFILLING, DONE),         # cancelled mid-prompt (deadline/context cap)
+    (DECODING, DRAFTING),       # speculative round begins (transient)
+    (DRAFTING, VERIFYING),      # draft chunk handed to the target
+    (VERIFYING, DECODING),      # verdict applied, slot resumes decoding
+    (DECODING, PREEMPTED),      # evicted mid-decode, re-queued
+    (PREEMPTED, PREFILLING),    # re-admitted: resume is one chunked prefill
+    (PREEMPTED, DONE),          # deadline expiry while re-queued
+    (DECODING, DONE),           # eos / length / context_cap / deadline
+)
+
 
 @dataclasses.dataclass(eq=False)
 class Request:

@@ -20,10 +20,8 @@ Leading scan-stack dims are never sharded.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -5,7 +5,6 @@ dry-run can model bf16 m/v (memory-fit for the 100B+ configs, see DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -61,7 +61,7 @@ def train_lm(bundle: ModelBundle, arrays: dict, tcfg: TrainConfig,
     step_fn = make_lm_train_step(bundle, ocfg, tcfg.aux_weight)
     it = batch_iterator(rng, arrays, tcfg.batch_size)
     history = []
-    t0 = time.time()
+    t0 = time.monotonic()
     for step in range(tcfg.steps):
         batch = next(it)
         if extra_batch_fn is not None:
@@ -69,5 +69,5 @@ def train_lm(bundle: ModelBundle, arrays: dict, tcfg: TrainConfig,
         params, opt_state, m = step_fn(params, opt_state, batch)
         if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
             history.append({"step": step, "loss": float(m["loss"]),
-                            "t": time.time() - t0})
+                            "t": time.monotonic() - t0})
     return params, history

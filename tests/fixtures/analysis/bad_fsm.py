@@ -1,0 +1,26 @@
+"""Known-bad mini scheduler for the FSM verifier fixtures: an undeclared
+writer site emitting an undeclared state, and an invalid finish reason."""
+
+QUEUED = "queued"
+RUNNING = "running"
+ZOMBIE = "zombie"
+DONE = "done"
+
+
+class Request:
+    state = QUEUED
+
+
+class MiniSched:
+    def admit(self, req):
+        req.state = RUNNING          # declared edge: fine
+
+    def lose(self, req):
+        req.state = ZOMBIE           # unknown state
+
+    def hijack(self, req):
+        req.state = RUNNING          # declared state, undeclared writer site
+
+    def retire(self, req):
+        req.state = DONE
+        req.finish_reason = "vanished"   # not a declared finish reason

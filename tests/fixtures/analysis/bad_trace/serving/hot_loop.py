@@ -1,0 +1,33 @@
+"""Known-bad serving module for the trace-safety lint fixtures: one
+violation per rule, all of which MUST be flagged."""
+import functools
+import time
+
+import jax
+
+
+def fn(x, flag):
+    if flag > 0:                 # trace-branch: Python if on traced param
+        x = x + 1
+    return x.item()              # host-sync: .item() inside jit
+
+
+step = jax.jit(fn)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "mode"))
+def make(x, shape):              # static-arg-unknown: "mode" names nothing
+    return x.reshape(shape)
+
+
+def caller(x):
+    return make(x, shape=[4, 4])  # unhashable-static: list compile key
+
+
+def stamp():
+    return time.time()           # wall-clock in a serving path
+
+
+def bad_default(xs=[]):          # mutable-default
+    xs.append(1)
+    return xs

@@ -1,0 +1,85 @@
+"""Known-bad pallas launches for the kernel checker fixtures.
+
+Each probe issues one pathological ``pl.pallas_call`` that a specific
+``pallas_check`` rule MUST flag. The probes only run under
+``pallas_check.capture()`` — the shim never executes the kernel body.
+"""
+import numpy as np
+
+
+def _kernel(*refs):
+    raise AssertionError("fixture kernel bodies must never execute")
+
+
+def probe_race_parallel():
+    """Two grid points differing in the leading (parallel) axis write the
+    same output block: a write-write race no scratch can excuse."""
+    import jax
+    from jax.experimental import pallas as pl
+    x = np.zeros((4, 8), np.float32)
+    pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((1, 8), lambda i, j: (i * 2 + j, 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda i, j: (j, 0)),  # ignores i
+        out_shape=jax.ShapeDtypeStruct((2, 8), np.float32),
+    )(x)
+
+
+def probe_race_no_scratch():
+    """The trailing (sequential) axis revisits one output block with no
+    VMEM scratch accumulator — later visits clobber earlier ones."""
+    import jax
+    from jax.experimental import pallas as pl
+    x = np.zeros((4, 8), np.float32)
+    pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 8), np.float32),
+    )(x)
+
+
+def probe_oob_index():
+    """Index map walks one block past the end of the operand."""
+    import jax
+    from jax.experimental import pallas as pl
+    x = np.zeros((4, 8), np.float32)
+    pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (i + 1, 0))],  # i=3 -> 4
+        out_specs=pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((4, 8), np.float32),
+    )(x)
+
+
+def probe_indivisible_block():
+    """Block shape that does not divide the operand dim (no pre-padding)."""
+    import jax
+    from jax.experimental import pallas as pl
+    x = np.zeros((2, 12), np.float32)
+    pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 12), np.float32),
+    )(x)
+
+
+def probe_bad_scratch():
+    """Scratch shape with a non-positive dim."""
+    import jax
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    x = np.zeros((2, 8), np.float32)
+    pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 8), np.float32),
+        scratch_shapes=[pltpu.VMEM((0, 8), np.float32)],
+    )(x)

@@ -1,0 +1,27 @@
+"""Known-bad page allocator for the ledger fixtures: a free-list escape
+that skips the refcount-aware release path, and a raw refcount decrement."""
+
+
+class LeakyCache:
+    def __init__(self):
+        self._free = list(range(7, 0, -1))
+        self.ref = [0] * 8
+
+    def _take(self, n):
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.ref[p] = 1
+        return pages
+
+    def _release(self, pages):
+        for p in pages:
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self._free.append(p)
+
+    def free_slot_fast(self, pages):
+        self._free.extend(pages)     # ledger-free-escape: bypasses refcounts
+
+    def steal_reference(self, page):
+        self.ref[page] -= 1          # ledger-ref-escape: decrement outside
+        return self.ref[page]        # _release can double-free later

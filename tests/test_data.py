@@ -68,8 +68,10 @@ def test_edit_distance_property(xs, ys):
                                          prev + (cx != cy))
         return dp[-1]
     L = 10
-    a = np.zeros((1, L), np.int32); a[0, :len(xs)] = xs
-    b = np.zeros((1, L), np.int32); b[0, :len(ys)] = ys
+    a = np.zeros((1, L), np.int32)
+    a[0, :len(xs)] = xs
+    b = np.zeros((1, L), np.int32)
+    b[0, :len(ys)] = ys
     d = edit_distance_batch(a, np.array([len(xs)]), b, np.array([len(ys)]))
     assert d[0] == lev(xs, ys)
 

@@ -1,7 +1,6 @@
 """HLO cost-analyzer tests: trip-count correction, collective accounting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze, parse_hlo
 

@@ -1,11 +1,9 @@
 """Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
-from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 from repro.kernels.decode_attention.kernel import decode_attention_gqa
 from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
 from repro.kernels.ssd_scan import ops as ssd_ops

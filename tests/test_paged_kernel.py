@@ -2,7 +2,6 @@
 dense decode oracle, across GQA group sizes, page sizes, and ragged
 seq_lens (interpret mode on CPU)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -10,7 +10,7 @@ import jax
 import pytest
 
 from repro.models import build_model
-from repro.serving import ContinuousEngine, PagedKVCache, PrefixTree
+from repro.serving import ContinuousEngine, PagedKVCache
 from repro.serving.faults import scenario_prefix_thrash
 from repro.serving.scheduler import DECODING
 from conftest import tiny_cfg

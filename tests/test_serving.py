@@ -3,12 +3,10 @@ fused hybrid step."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core.routing import CostMeter, HybridRouter
 from repro.data import tokenizer as tok
 from repro.models import RouterConfig, build_model, init_router_encoder
-from repro.models.frontends import make_batch
 from repro.serving import Engine, HybridEngine, build_fused_hybrid_step
 from repro.serving.generate import build_generate_fn
 from conftest import tiny_cfg

@@ -1,0 +1,241 @@
+"""The four analysis passes are live (each rule trips on its known-bad
+fixture and goes quiet when disabled) and the real tree is clean modulo the
+justified allowlist."""
+import importlib.util
+from pathlib import Path
+
+from repro.analysis import allowlist, fsm_check, page_ledger, pallas_check, \
+    trace_lint
+from repro.analysis.fsm_spec import FsmSpec
+from repro.analysis.report import AllowEntry, Finding, apply_allowlist
+
+FIX = Path(__file__).parent / "fixtures" / "analysis"
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _load(path, name):
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------------ pallas
+def _capture_probe(probe):
+    with pallas_check.capture():
+        pass  # ensure nested captures compose
+    with pallas_check.capture() as rec:
+        probe()
+    return rec.calls
+
+
+def test_pallas_race_parallel_axis_trips():
+    mod = _load(FIX / "racy_kernel.py", "racy_kernel")
+    calls = _capture_probe(mod.probe_race_parallel)
+    found = pallas_check.check_records("racy_kernel", calls)
+    assert "pallas-write-race" in _rules(found)
+    # rule disabled -> silent: the fixture proves the rule is what fires
+    off = pallas_check.check_records(
+        "racy_kernel", calls,
+        rules=pallas_check.RULES - {"pallas-write-race"})
+    assert "pallas-write-race" not in _rules(off)
+
+
+def test_pallas_sequential_revisit_without_scratch_trips():
+    mod = _load(FIX / "racy_kernel.py", "racy_kernel")
+    calls = _capture_probe(mod.probe_race_no_scratch)
+    assert "pallas-write-race" in _rules(
+        pallas_check.check_records("racy_kernel", calls))
+
+
+def test_pallas_oob_index_map_trips():
+    mod = _load(FIX / "racy_kernel.py", "racy_kernel")
+    calls = _capture_probe(mod.probe_oob_index)
+    found = pallas_check.check_records("racy_kernel", calls)
+    assert "pallas-oob-index" in _rules(found)
+    off = pallas_check.check_records(
+        "racy_kernel", calls,
+        rules=pallas_check.RULES - {"pallas-oob-index"})
+    assert "pallas-oob-index" not in _rules(off)
+
+
+def test_pallas_block_divisibility_and_scratch_trip():
+    mod = _load(FIX / "racy_kernel.py", "racy_kernel")
+    div = pallas_check.check_records(
+        "racy_kernel", _capture_probe(mod.probe_indivisible_block))
+    assert "pallas-block-divisibility" in _rules(div)
+    scr = pallas_check.check_records(
+        "racy_kernel", _capture_probe(mod.probe_bad_scratch))
+    assert "pallas-scratch" in _rules(scr)
+
+
+def test_pallas_every_family_probed_and_clean():
+    found = pallas_check.run(SRC)
+    assert not found, [f.format() for f in found]
+
+
+def test_pallas_probes_cover_all_family_dirs():
+    fams = {d.name for d in (SRC / "kernels").iterdir()
+            if d.is_dir() and (d / "kernel.py").is_file()}
+    assert fams == set(pallas_check.PROBES), \
+        "register a probe for every kernels/*/ family"
+
+
+# --------------------------------------------------------------------- fsm
+def _mini_spec():
+    return FsmSpec(
+        states=("queued", "running", "done"),
+        initial="queued",
+        terminal=("done",),
+        edges=(("queued", "running"), ("running", "done")),
+        assignment_sites={
+            ("bad_fsm", "MiniSched.admit"): (("queued", "running"),),
+            ("bad_fsm", "MiniSched.retire"): (("running", "done"),),
+        },
+        initial_sites=(("bad_fsm", "Request"),),
+        reason_sites=(("bad_fsm", "MiniSched.retire"),),
+        finish_reasons=("eos",),
+        states_by_name={"QUEUED": "queued", "RUNNING": "running",
+                        "DONE": "done"},
+    )
+
+
+def test_fsm_fixture_trips_every_rule():
+    found = fsm_check.check({"bad_fsm": FIX / "bad_fsm.py"},
+                            spec=_mini_spec())
+    rules = _rules(found)
+    assert "fsm-unknown-state" in rules        # lose() writes ZOMBIE
+    assert "fsm-undeclared-site" in rules      # hijack() writes RUNNING
+    assert "fsm-finish-reason" in rules        # retire() assigns "vanished"
+
+
+def test_fsm_rule_disabled_goes_quiet():
+    found = fsm_check.check(
+        {"bad_fsm": FIX / "bad_fsm.py"}, spec=_mini_spec(),
+        rules=fsm_check.RULES - {"fsm-undeclared-site"})
+    assert "fsm-undeclared-site" not in _rules(found)
+    assert "fsm-unknown-state" in _rules(found)
+
+
+def test_fsm_graph_rules():
+    spec = _mini_spec()
+    # orphan state: declared but no edge reaches it
+    bad = FsmSpec(**{**spec.__dict__,
+                     "states": spec.states + ("limbo",)})
+    found = fsm_check.check({"bad_fsm": FIX / "bad_fsm.py"}, spec=bad)
+    msgs = [f.message for f in found if f.rule == "fsm-graph"]
+    assert any("unreachable" in m for m in msgs), msgs
+
+
+def test_fsm_real_tree_clean():
+    found = fsm_check.run(SRC)
+    assert not found, [f.format() for f in found]
+
+
+def test_fsm_spec_matches_scheduler_transitions():
+    from repro.serving import scheduler
+    spec = fsm_check.default_spec()
+    assert set(spec.edges) == set(scheduler.TRANSITIONS)
+    drivable = {e for edges in spec.assignment_sites.values()
+                for e in edges}
+    assert drivable == set(scheduler.TRANSITIONS), \
+        "every declared edge must have exactly the sites that drive it"
+
+
+# ------------------------------------------------------------------- trace
+def test_trace_fixture_trips_every_rule():
+    found = trace_lint.run(FIX / "bad_trace")
+    rules = _rules(found)
+    expected = {"trace-branch", "host-sync", "wall-clock",
+                "static-arg-unknown", "unhashable-static",
+                "mutable-default"}
+    assert expected <= rules, (sorted(expected - rules),
+                               [f.format() for f in found])
+
+
+def test_trace_rule_disabled_goes_quiet():
+    found = trace_lint.run(FIX / "bad_trace",
+                           rules=trace_lint.RULES - {"trace-branch"})
+    assert "trace-branch" not in _rules(found)
+    assert "host-sync" in _rules(found)
+
+
+def test_trace_is_none_branches_exempt(tmp_path):
+    mod = tmp_path / "serving" / "ok.py"
+    mod.parent.mkdir()
+    mod.write_text(
+        "import jax\n"
+        "def fn(x, rec):\n"
+        "    if rec is not None:\n"
+        "        x = x + 1\n"
+        "    return x\n"
+        "step = jax.jit(fn)\n")
+    assert trace_lint.run(tmp_path) == []
+
+
+def test_trace_real_tree_clean():
+    found = trace_lint.run(SRC)
+    assert not found, [f.format() for f in found]
+
+
+# ------------------------------------------------------------------ ledger
+def test_ledger_fixture_trips_both_rules():
+    found = page_ledger.check_file(FIX / "rogue_free.py", "rogue_free.py")
+    rules = _rules(found)
+    assert "ledger-free-escape" in rules   # free_slot_fast extends _free
+    assert "ledger-ref-escape" in rules    # steal_reference decrements ref
+    syms = {f.symbol for f in found}
+    assert "LeakyCache.free_slot_fast" in syms
+    assert "LeakyCache.steal_reference" in syms
+    # the fixture's own __init__/_take/_release are sanctioned
+    assert not any("._take" in s or "._release" in s or "__init__" in s
+                   for s in syms)
+
+
+def test_ledger_rule_disabled_goes_quiet():
+    found = page_ledger.check_file(
+        FIX / "rogue_free.py", "rogue_free.py",
+        rules=frozenset({"ledger-ref-escape"}))
+    assert _rules(found) == {"ledger-ref-escape"}
+
+
+def test_ledger_real_tree_only_allowlisted_escapes():
+    found = page_ledger.run(SRC)
+    reported, suppressed, problems = apply_allowlist(
+        found, allowlist.ALLOWLIST)
+    assert not reported, [f.format() for f in reported]
+    assert not problems, problems
+    assert {f.symbol for f in suppressed} == \
+        {"PagedKVCache.hold_pages", "PagedKVCache.release_pages"}
+
+
+# ---------------------------------------------------------- allowlist rules
+def test_allowlist_requires_reasons_and_freshness():
+    f = Finding(rule="r", path="a/b.py", line=1, symbol="S", message="m")
+    ok = AllowEntry(rule="r", path="b.py", symbol="S", reason="because")
+    reported, suppressed, problems = apply_allowlist([f], [ok])
+    assert not reported and len(suppressed) == 1 and not problems
+    # no reason -> protocol violation
+    bad = AllowEntry(rule="r", path="b.py", symbol="S", reason="  ")
+    assert apply_allowlist([f], [bad])[2]
+    # stale entry -> protocol violation
+    stale = AllowEntry(rule="r", path="zzz.py", symbol="", reason="old")
+    _, _, problems = apply_allowlist([f], [ok, stale])
+    assert any("stale" in p for p in problems)
+
+
+def test_clean_tree_end_to_end():
+    """The acceptance gate: all four passes over src/repro report nothing
+    once the recorded allowlist is applied, and every entry is justified."""
+    findings = []
+    for mod in (pallas_check, fsm_check, trace_lint, page_ledger):
+        findings.extend(mod.run(SRC))
+    reported, suppressed, problems = apply_allowlist(
+        findings, allowlist.ALLOWLIST)
+    assert not reported, [f.format() for f in reported]
+    assert not problems, problems
+    assert suppressed, "allowlist should match the two recorded escapes"

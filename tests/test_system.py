@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import (calibrate_threshold, drop_at_cost_advantages,
-                        error_cost_curve, evaluate_threshold, HybridRouter,
+                        evaluate_threshold, HybridRouter,
                         random_routing_curve)
 from repro.core.experiment import (build_experiment, train_pair_routers)
 from repro.serving import Engine, HybridEngine

@@ -1,7 +1,6 @@
 """Trainer + optimizer + checkpoint tests."""
 import os
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
