@@ -55,7 +55,16 @@ best-of-N fan-out stream on a shared-prefix copy-on-write engine
 (serving.prefix) vs the identical stream with ``prefix_cache=0`` and
 reports hit rate, prefill tokens saved (asserted > 50% by the CI smoke),
 TTFT p99 on vs off, pages-shared high-water, COW splits, and the refcount
-zero-leak audit. Streaming rows also
+zero-leak audit; ``escalation`` serves the stream on the cheap tier of a
+2-tier pool under a mid-stream quality monitor — an observe-only pass
+calibrates the abort threshold at the median per-stream peak uncertainty,
+then the timed pass cancels crossing streams and re-admits each one tier
+up as ONE chunked prefill — and reports the escalation count (asserted
+> 0 by the CI smoke), the token split across tiers, whether every
+continuation is byte-identical to the upper tier decoding greedily from
+(prompt + emitted prefix), and a ``per_boundary_matches_shared`` parity
+flag (per-boundary cascade gates vs the legacy shared-score cascade with
+identical heads). Streaming rows also
 report queue-wait p50/p99 (submission to first admission). A
 ``padding_parity`` flag asserts the dense, continuous, and pool serve
 paths agree on responses including tok.PAD tails.
@@ -843,6 +852,136 @@ def run_speculative(bundle, params, stream, t_max, n_slots, gamma=2,
     }
 
 
+def run_escalation(bundles, stream, t_max, n_slots,
+                   prefill_chunk=None, prefill_pack=None,
+                   walk_bound="live"):
+    """escalation row: mid-stream quality escalation on a 2-tier pool.
+    Every request lands on the cheap tier; an observe-only pass records
+    each stream's peak decode uncertainty and the abort threshold is the
+    median peak (``calibrate_abort_threshold`` at a 50% budget), so the
+    stream achieving the max peak is guaranteed to cross it in the live
+    pass — the escalation count cannot flake to zero. Crossed streams are
+    cancelled (pages freed, prompt + emitted prefix kept) and re-admitted
+    one tier up as ONE chunked prefill; the row asserts the continuation
+    is byte-identical to the upper tier decoding greedily from that same
+    prefix, that the token split across tiers sums exactly to the useful
+    tokens, and that per-boundary cascade gates with identical heads
+    reproduce the legacy shared-score cascade on this stream's scores."""
+    from repro.core.thresholds import calibrate_abort_threshold
+    from repro.serving.engine import EscalationMonitor
+    from repro.serving.faults import StaticPolicy
+
+    (bs, ps_), (bl, pl_) = bundles
+    toks, lens, caps = stream
+    prompts = [toks[i, :lens[i]] for i in range(len(toks))]
+    caps_i = [int(c) for c in caps]
+
+    def mk_pool(mon):
+        engines = [("small", _continuous(bs, ps_, t_max, n_slots,
+                                         prefill_chunk, prefill_pack,
+                                         walk_bound)),
+                   ("large", _continuous(bl, pl_, t_max,
+                                         max(2, n_slots // 2),
+                                         prefill_chunk, prefill_pack,
+                                         walk_bound))]
+        return ContinuousPoolEngine(StaticPolicy(2, tier=0), engines,
+                                    escalation=[mon])
+
+    # observe-only pass: peaks without cancelling anyone
+    obs = mk_pool(EscalationMonitor(abort_threshold=None, min_tokens=1))
+    obs_reqs = [obs.submit_to("small", p_, c)
+                for p_, c in zip(prompts, caps_i)]
+    obs.run()
+    peaks = [r.esc_peak_score for r in obs_reqs if r.esc_peak_score > 0]
+    thr = calibrate_abort_threshold(peaks, 0.5)
+
+    # min_tokens=1: a stream whose observed peak crossed thr replays the
+    # identical greedy prefix live, so it escalates at the same step
+    pool = mk_pool(EscalationMonitor(abort_threshold=thr, min_tokens=1))
+    small, large = pool.engines
+    # warm pass traces every shape the deterministic schedule needs —
+    # including the upper tier's continuation prefills
+    for p_, c in zip(prompts, caps_i):
+        pool.submit_to("small", p_, c)
+    pool.run()
+    warm_log = [(ft, tt, k) for _, ft, tt, k in pool.escalation_log]
+    pool.escalation_log.clear()
+    for eng in (small, large):
+        eng.cache.stats.high_water_pages = eng.cache.stats.pages_in_use
+    pool.meter.reset()
+    t0 = time.monotonic()
+    reqs = [pool.submit_to("small", p_, c)
+            for p_, c in zip(prompts, caps_i)]
+    pool.run()
+    wall = time.monotonic() - t0
+
+    # every continuation must be byte-identical to the upper tier decoding
+    # greedily, uncontended, from (prompt + the emitted prefix)
+    by_rid = {r.rid: i for i, r in enumerate(reqs)}
+    exact = bool(pool.escalation_log)
+    for rid, ft, tt, k in pool.escalation_log:
+        i = by_rid[rid]
+        r = reqs[i]
+        ref_eng = _continuous(bl, pl_, t_max, 2, prefill_chunk,
+                              prefill_pack, walk_bound)
+        ref = ref_eng.submit(
+            np.concatenate([prompts[i], np.asarray(r.out[:k], np.int32)]),
+            max_new_tokens=max(len(r.out) - k, 1))
+        ref_eng.run()
+        exact = exact and r.out[k:] == ref.out[:len(r.out) - k]
+
+    # tentpole parity: per-boundary gates with identical heads == the
+    # legacy shared-score cascade, on this stream's real router scores
+    mask = (toks != tok.PAD).astype(np.float32)
+    r_, scores = _toy_router(toks, mask)
+    ts = (float(np.quantile(scores, 2 / 3)),
+          float(np.quantile(scores, 1 / 3)))
+    shared = CascadePolicy(r_, ts)
+    per_b = CascadePolicy(boundaries=tuple(r_.with_threshold(t)
+                                           for t in ts))
+    tier_s, score_s = shared.decide(toks, mask)
+    tier_b, score_b = per_b.decide(toks, mask)
+    parity = bool(np.array_equal(tier_s, tier_b)
+                  and np.allclose(score_s, score_b))
+
+    meter = pool.meter.summary()
+    useful = sum(r.n_generated for r in reqs)
+    latencies = [r.finish_t - t0 for r in reqs]
+    return {
+        "engine": "continuous_paged_pool_escalation",
+        "requests": len(reqs),
+        "abort_threshold": round(float(thr), 4),
+        "escalate_frac_budget": 0.5,
+        "escalations": len(pool.escalation_log),
+        "escalations_deterministic": warm_log
+        == [(ft, tt, k) for _, ft, tt, k in pool.escalation_log],
+        "meter_escalations_small": meter["small"]["escalations"],
+        "esc_tokens_small": meter["small"]["esc_tokens"],
+        # the CALL never splits: calls_small counts only streams that
+        # FINISHED on the cheap tier (§2.3 cost metrics undiluted)
+        "calls_small": meter["small"]["calls"],
+        "calls_large": meter["large"]["calls"],
+        "gen_tokens_small": meter["small"]["gen_tokens"],
+        "gen_tokens_large": meter["large"]["gen_tokens"],
+        "token_split_exact": meter["small"]["gen_tokens"]
+        + meter["large"]["gen_tokens"] == useful,
+        "greedy_exact_continuations": exact,
+        "per_boundary_matches_shared": parity,
+        "useful_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "kv_high_water_bytes": int(
+            small.cache.stats.high_water_pages * small.cache.bytes_per_page
+            + large.cache.stats.high_water_pages
+            * large.cache.bytes_per_page),
+        "pages_leaked": int(small.cache.stats.pages_in_use
+                            + large.cache.stats.pages_in_use),
+        "finish_reasons": _finish_reasons(reqs),
+        **_percentiles(latencies),
+        **_streaming_metrics(reqs),
+    }
+
+
 def run_prefix_sharing(bundle, params, smoke):
     """prefix_sharing row: multi-turn chat + best-of-N fan-out replay on a
     shared-prefix (copy-on-write radix tree) engine vs the identical stream
@@ -1151,6 +1290,20 @@ def main():
           f"(non-spec baseline 1.0), greedy-exact {sp['greedy_exact']}; "
           f"{sp['tokens_per_s']} vs {sp['tokens_per_s_nonspec']} tok/s "
           "non-spec")
+
+    print("== escalation (mid-stream quality escalation, 2-tier) ==")
+    es = run_escalation(bundles, stream, t_max, n_slots,
+                        args.prefill_chunk, args.prefill_pack,
+                        args.walk_bound)
+    results["escalation"] = es
+    report("escalation", es)
+    print(f"    {es['escalations']} of {es['requests']} streams escalated "
+          f"(abort threshold {es['abort_threshold']}); "
+          f"continuations greedy-exact {es['greedy_exact_continuations']}, "
+          f"token split {es['gen_tokens_small']}+{es['gen_tokens_large']} "
+          f"exact {es['token_split_exact']}, per-boundary == shared "
+          f"{es['per_boundary_matches_shared']}, "
+          f"{es['pages_leaked']} pages leaked")
 
     print("== prefix sharing (multi-turn chat + best-of-N fan-out) ==")
     px = run_prefix_sharing(bundles[0][0], bundles[0][1], args.smoke)

@@ -1,12 +1,16 @@
 """Three-tier pool serving with a runtime quality dial — the deployment
 story generalized past the paper's small/large pair.
 
-Trains a tiny/small/large LM zoo, one router on the (tiny, large) quality
-gap, and serves the same request stream through a ``ContinuousPoolEngine``
-twice over:
+Trains a tiny/small/large LM zoo, one BCE gate per ADJACENT tier pair
+(``train_pool_router``'s per-boundary default — boundary b learns the
+(tiers[b], tiers[b+1]) quality gap instead of every middle tier sharing
+the (cheapest, priciest) score), and serves the same request stream
+through a ``ContinuousPoolEngine`` twice over:
 
-  1. a ``CascadePolicy`` whose two gates come from ONE calibration-frontier
-     sweep at a drop budget, and
+  1. a per-boundary ``CascadePolicy`` whose K-1 gates are each calibrated
+     on their OWN calibration-frontier sweep at a drop budget (plus the
+     parity check: one shared head behind every gate reproduces the
+     legacy shared-score cascade exactly), and
   2. a ``QualityTargetPolicy`` swept across targets at serve time — the
      paper's "desired quality level" dial with no retraining and no
      recalibration: each query goes to the cheapest tier whose calibrated
@@ -18,16 +22,25 @@ one launch) and re-serves the same stream — byte-identical responses at
 temperature 0, with the pricier tiers running fewer launches than tokens
 emitted.
 
+Finally it walks the mid-stream escalation loop: an observe-only
+``EscalationMonitor`` records each stream's peak decode uncertainty,
+``calibrate_abort_threshold`` turns those peaks into an abort threshold
+at an escalation-fraction budget, and the live pool cancels crossing
+streams and re-admits each one tier up as ONE chunked prefill — the
+token accounting splits across tiers while every CALL still lands once.
+
 Run: PYTHONPATH=src python examples/tiered_serving.py
 """
 import dataclasses
 
 import numpy as np
 
+from repro.core import CascadePolicy, calibrate_abort_threshold
 from repro.core.experiment import (build_experiment, pool_policy,
                                    train_pool_router)
 from repro.models import build_model
 from repro.serving import ContinuousEngine, ContinuousPoolEngine
+from repro.serving.engine import EscalationMonitor
 
 TIERS3 = ("tiny", "small", "large")
 
@@ -58,10 +71,24 @@ def main():
         pool.serve(ds.query[:64], ds.query_mask[:64])
         return pool.meter
 
-    print("== cascade (one frontier sweep, 2% drop budget) ==")
+    print("== per-boundary cascade (one frontier sweep PER GATE, "
+          "2% drop budget) ==")
     cascade = pool_policy(exp, router_out, TIERS3, kind="cascade",
                           max_drop_pct=2.0)
-    print("  gates: " + ", ".join(f"{t:.3f}" for t in cascade.thresholds))
+    print("  gates: " + ", ".join(f"{g.threshold:.3f}"
+                                  for g in cascade.boundaries))
+    # parity: one head behind every gate + the legacy non-increasing
+    # threshold vector routes *identically* to the shared-score cascade —
+    # the upgrade path changes nothing until the heads differ
+    g0 = cascade.boundaries[0]
+    ts = sorted((g.threshold for g in cascade.boundaries), reverse=True)
+    legacy = CascadePolicy(g0, tuple(ts))
+    same_head = CascadePolicy(boundaries=tuple(g0.with_threshold(t)
+                                               for t in ts))
+    t_legacy, _ = legacy.decide(ds.query[:64], ds.query_mask[:64])
+    t_same, _ = same_head.decide(ds.query[:64], ds.query_mask[:64])
+    assert (t_legacy == t_same).all(), "per-boundary != shared-score parity"
+    print("  per-boundary == shared-score with identical heads: True")
     meter = serve(cascade)
     for name, row in meter.summary().items():
         print(f"  {name:<6} {row['calls']:>4} calls {row['gen_tokens']:>5} tok")
@@ -104,6 +131,45 @@ def main():
                  and np.array_equal(results[0].lengths, results[2].lengths))
     print(f"  greedy-exact vs non-speculative pool: {exact}")
     assert exact, "speculation changed a temperature-0 response"
+
+    print("\n== mid-stream escalation (observe -> calibrate -> live) ==")
+    # observe-only pass: monitors on the two cheaper tiers record each
+    # stream's peak decode uncertainty without cancelling anyone; the
+    # priciest tier has nowhere to escalate to and takes no monitor
+    pool = ContinuousPoolEngine(
+        cascade, fresh_engines(),
+        escalation=[EscalationMonitor(min_tokens=1),
+                    EscalationMonitor(min_tokens=1)])
+    obs, tiers, _ = pool.submit(ds.query[:64], ds.query_mask[:64])
+    pool.run()
+    peaks = [r.esc_peak_score for r, t in zip(obs, tiers)
+             if t < 2 and r.esc_peak_score > 0]
+    thr = calibrate_abort_threshold(peaks, 0.25)   # <= 25% may escalate
+    print(f"  abort threshold {thr:.3f} "
+          f"({len(peaks)} observed streams, 25% budget)")
+    # live pass: a stream crossing the threshold aborts (pages freed,
+    # prompt + emitted prefix kept) and resumes one tier up as ONE
+    # chunked prefill — escalation costs a prefill, not a restart, and
+    # the continuation is byte-identical to the upper tier decoding
+    # greedily from that prefix
+    mon = EscalationMonitor(abort_threshold=thr, min_tokens=1)
+    pool = ContinuousPoolEngine(cascade, fresh_engines(),
+                                escalation=[mon, dataclasses.replace(mon)])
+    pool.serve(ds.query[:64], ds.query_mask[:64])
+    m = pool.meter
+    for name, row in m.summary().items():
+        esc = (f"  {row['escalations']} escalated away "
+               f"({row['esc_tokens']} tok billed here)"
+               if row["escalations"] else "")
+        print(f"  {name:<6} {row['calls']:>4} calls "
+              f"{row['gen_tokens']:>5} tok{esc}")
+    # tokens split across the tiers that emitted them; the CALL lands
+    # once, at the tier that finished — §2.3 cost metrics stay undiluted
+    print(f"  {len(pool.escalation_log)} hand-offs; "
+          f"{int(m.total_calls)} calls for 64 requests; "
+          f"cost advantage {m.cost_advantage:.0%} calls / "
+          f"{m.token_cost_advantage:.0%} tokens")
+    assert int(m.total_calls) == 64, "a call split across tiers"
 
 
 if __name__ == "__main__":

@@ -48,19 +48,23 @@ def default_spec() -> FsmSpec:
     S = sched
     return FsmSpec(
         states=(S.QUEUED, S.PREFILLING, S.DECODING, S.DRAFTING,
-                S.VERIFYING, S.PREEMPTED, S.DONE),
+                S.VERIFYING, S.PREEMPTED, S.ESCALATED, S.DONE),
         initial=S.QUEUED,
         terminal=(S.DONE,),
         edges=tuple(S.TRANSITIONS),
         assignment_sites={
             ("scheduler", "ContinuousScheduler.admit"):
-                ((S.QUEUED, S.PREFILLING), (S.PREEMPTED, S.PREFILLING)),
+                ((S.QUEUED, S.PREFILLING), (S.PREEMPTED, S.PREFILLING),
+                 (S.ESCALATED, S.PREFILLING)),
             ("scheduler", "ContinuousScheduler.retire"):
                 ((S.PREFILLING, S.DONE), (S.DECODING, S.DONE)),
             ("scheduler", "ContinuousScheduler.preempt"):
                 ((S.DECODING, S.PREEMPTED),),
+            ("scheduler", "ContinuousScheduler.escalate"):
+                ((S.DECODING, S.ESCALATED),),
             ("engine", "ContinuousEngine._finish_unslotted"):
-                ((S.QUEUED, S.DONE), (S.PREEMPTED, S.DONE)),
+                ((S.QUEUED, S.DONE), (S.PREEMPTED, S.DONE),
+                 (S.ESCALATED, S.DONE)),
             ("engine", "ContinuousEngine._admit"):
                 ((S.PREFILLING, S.DECODING),),
             ("engine", "ContinuousEngine._dispatch_prefill"):
@@ -77,6 +81,6 @@ def default_spec() -> FsmSpec:
             "QUEUED": S.QUEUED, "PREFILLING": S.PREFILLING,
             "DECODING": S.DECODING, "DRAFTING": S.DRAFTING,
             "VERIFYING": S.VERIFYING, "PREEMPTED": S.PREEMPTED,
-            "DONE": S.DONE,
+            "ESCALATED": S.ESCALATED, "DONE": S.DONE,
         },
     )

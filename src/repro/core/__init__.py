@@ -10,6 +10,7 @@ from .metrics import (error_cost_curve, drop_at_cost_advantages,
 from .router import RouterTrainConfig, train_router, score_dataset, bce_loss
 from .thresholds import (calibrate_threshold, calibration_frontier,
                          cascade_thresholds, best_feasible, evaluate_threshold,
+                         calibrate_abort_threshold,
                          CalibrationResult, FrontierPoint)
 from .routing import (HybridRouter, CostMeter, TierMeter, route_scores_jit,
                       RoutingPolicy, ThresholdPolicy, CascadePolicy,

@@ -202,14 +202,31 @@ def _check_tier_order(exp: ExperimentData, tiers):
 
 def train_pool_router(exp: ExperimentData, tiers, kind: str = "trans",
                       epochs: int = 5, seed: int = 0,
-                      rcfg: RouterConfig | None = None) -> dict:
-    """One router for a K-tier pool over ``tiers`` (cheapest -> priciest in
-    the TIERS vocabulary): trained on the (cheapest, priciest) pair's
-    quality gap — middle tiers share the same easiness score and are gated
-    by a policy's thresholds/quality maps."""
+                      rcfg: RouterConfig | None = None,
+                      per_boundary: bool = True) -> dict:
+    """Routers for a K-tier pool over ``tiers`` (cheapest -> priciest in
+    the TIERS vocabulary).
+
+    ``per_boundary=True`` (default): one BCE head per ADJACENT tier pair —
+    boundary b is trained on (tiers[b], tiers[b+1])'s own quality gap, so
+    middle tiers are chosen on their own gaps rather than sharing the
+    (cheapest, priciest) score. Returns ``{"boundaries": [pair dicts
+    cheapest-pair-first], "tiers": ..., "kind": ...}``; feed it to
+    ``pool_policy`` for K-1 independently calibrated gates.
+
+    ``per_boundary=False`` (legacy shared-score path, kept for parity):
+    ONE router trained on the (cheapest, priciest) pair — middle tiers
+    share its easiness score and are gated by a policy's thresholds /
+    quality maps. Returns that single pair dict unchanged."""
     _check_tier_order(exp, tiers)
-    return train_pair_routers(exp, tiers[0], tiers[-1], kinds=(kind,),
-                              epochs=epochs, seed=seed, rcfg=rcfg)[kind]
+    if not per_boundary:
+        return train_pair_routers(exp, tiers[0], tiers[-1], kinds=(kind,),
+                                  epochs=epochs, seed=seed, rcfg=rcfg)[kind]
+    boundaries = [
+        train_pair_routers(exp, lo, hi, kinds=(kind,), epochs=epochs,
+                           seed=seed + b, rcfg=rcfg)[kind]
+        for b, (lo, hi) in enumerate(zip(tiers, tiers[1:]))]
+    return {"boundaries": boundaries, "tiers": tuple(tiers), "kind": kind}
 
 
 def pool_policy(exp: ExperimentData, router_out: dict, tiers,
@@ -218,14 +235,42 @@ def pool_policy(exp: ExperimentData, router_out: dict, tiers,
                 n_bins: int = 8):
     """A ``RoutingPolicy`` over ``tiers`` from one experiment.
 
-    ``kind="cascade"``: K-1 thresholds from a single
-    ``calibration_frontier`` sweep of the (cheapest, priciest) qualities on
-    ``split`` at ``max_drop_pct``. ``kind="quality_target"``: per-tier
-    score->quality maps calibrated on ``split`` for the runtime quality
-    dial, starting at ``quality_target``."""
+    ``router_out`` is what ``train_pool_router`` returned. A per-boundary
+    dict (``"boundaries"`` key) with ``kind="cascade"`` calibrates each
+    gate from its OWN ``calibration_frontier`` sweep — boundary b's scores
+    against (tiers[b], tiers[b+1])'s qualities on ``split`` at
+    ``max_drop_pct`` — and builds a per-boundary ``CascadePolicy``. A
+    legacy single-router dict gets the shared-score path: K-1 thresholds
+    from one sweep of the (cheapest, priciest) qualities.
+    ``kind="quality_target"``: per-tier score->quality maps calibrated on
+    ``split`` for the runtime quality dial, starting at
+    ``quality_target`` (a per-boundary dict contributes its cheapest
+    gate's head as the score source)."""
     from .routing import CascadePolicy, HybridRouter, QualityTargetPolicy
-    from .thresholds import calibration_frontier, cascade_thresholds
+    from .thresholds import (best_feasible, calibration_frontier,
+                             cascade_thresholds)
     _check_tier_order(exp, tiers)
+    if "boundaries" in router_out:
+        bs = router_out["boundaries"]
+        if len(bs) != len(tiers) - 1:
+            raise ValueError(f"{len(tiers)} tiers need {len(tiers) - 1} "
+                             f"boundary routers, got {len(bs)}")
+        if kind == "cascade":
+            gates = []
+            for b, out in enumerate(bs):
+                frontier = calibration_frontier(
+                    out["scores"][split],
+                    exp.qualities[tiers[b]][split],
+                    exp.qualities[tiers[b + 1]][split])
+                cal = best_feasible(frontier, max_drop_pct)
+                gates.append(HybridRouter(
+                    out["params"], out["rcfg"], cal.threshold,
+                    out.get("label_kind", "trans")))
+            return CascadePolicy(boundaries=tuple(gates))
+        if kind == "quality_target":
+            router_out = bs[0]   # cheapest gate's head scores every tier
+        else:
+            raise ValueError(f"unknown pool policy kind {kind!r}")
     scores = router_out["scores"][split]
     if kind == "cascade":
         frontier = calibration_frontier(scores,

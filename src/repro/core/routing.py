@@ -11,9 +11,16 @@ and layers the N-tier abstraction the serving pool needs on top of it:
   easier = cheaper-tier-safe).
 * ``ThresholdPolicy`` — paper-exact binary routing; wraps ``HybridRouter``
   (tier 0 iff score >= threshold).
-* ``CascadePolicy`` — K-1 descending score thresholds bucketing queries
-  across K tiers; thresholds come from a single
-  ``core.thresholds.calibration_frontier`` sweep (see ``from_frontier``).
+* ``CascadePolicy`` — two modes. Shared-score (legacy): K-1 descending
+  thresholds over ONE router's scores bucket queries across K tiers, all
+  picked from a single ``core.thresholds.calibration_frontier`` sweep
+  (see ``from_frontier``). Per-boundary: K-1 independent calibrated
+  *gates* (``boundaries``), one ``HybridRouter`` per adjacent tier pair,
+  each trained on its own pair's quality gap and carrying its own
+  calibrated threshold — a query goes to the cheapest tier whose gate it
+  passes. With identical heads and the legacy thresholds installed per
+  gate the two modes route identically (tests/test_routing_properties.py
+  proves it property-based).
 * ``QualityTargetPolicy`` — the paper's "desired quality level" dial
   generalized to K tiers: per-tier calibrated score->quality maps, each
   query goes to the cheapest tier whose predicted quality clears a
@@ -106,17 +113,45 @@ class ThresholdPolicy:
 
 @dataclasses.dataclass
 class CascadePolicy:
-    """K-1 descending thresholds bucket queries across K tiers: tier k takes
-    scores in [t_k, t_{k-1}), tier 0 everything >= t_0, tier K-1 everything
-    below t_{K-2}. With one threshold this is exactly ``ThresholdPolicy``.
+    """K-tier cascade routing, in one of two modes (exactly one is set):
 
-    ``router`` supplies the scores; its own threshold is ignored.
+    Shared-score (legacy, ``thresholds``): K-1 descending thresholds over
+    ONE router's scores — tier k takes scores in [t_k, t_{k-1}), tier 0
+    everything >= t_0, tier K-1 everything below t_{K-2}. With one
+    threshold this is exactly ``ThresholdPolicy``. ``router`` supplies the
+    scores; its own threshold is ignored.
+
+    Per-boundary (``boundaries``): K-1 independent gates, one
+    ``HybridRouter`` per adjacent tier pair (cheapest pair first), each
+    trained on its own pair's quality gap and gating at its own calibrated
+    threshold. A query routes to the cheapest tier b whose gate it passes
+    (score_b >= boundaries[b].threshold), falling through to tier K-1 when
+    every gate refuses. Raising any single gate's threshold can only push
+    queries to pricier tiers, never cheaper (monotone quality dial), and
+    when every gate shares one head and the gates install the legacy
+    non-increasing thresholds the two modes are pointwise identical: the
+    smallest passing boundary equals the count of failed thresholds.
+
+    Reported ``scores`` are the shared router's in legacy mode and the
+    cheapest gate's in per-boundary mode (the admission-time "easiness"
+    signal serving logs expect either way).
     """
-    router: HybridRouter
-    thresholds: Tuple[float, ...]
+    router: Optional[HybridRouter] = None
+    thresholds: Tuple[float, ...] = ()
+    boundaries: Tuple[HybridRouter, ...] = ()
 
     def __post_init__(self):
         self.thresholds = tuple(float(t) for t in self.thresholds)
+        self.boundaries = tuple(self.boundaries)
+        if self.boundaries:
+            if self.thresholds:
+                raise ValueError("CascadePolicy takes shared-score "
+                                 "thresholds OR per-boundary gates, not "
+                                 "both")
+            return
+        if self.router is None:
+            raise ValueError("shared-score CascadePolicy needs the router "
+                             "that supplies its scores")
         if not self.thresholds:
             raise ValueError("CascadePolicy needs at least one threshold "
                              "(two tiers)")
@@ -126,12 +161,30 @@ class CascadePolicy:
                              f"{self.thresholds}")
 
     @property
+    def per_boundary(self) -> bool:
+        return bool(self.boundaries)
+
+    @property
     def n_tiers(self) -> int:
-        return len(self.thresholds) + 1
+        return (len(self.boundaries) if self.boundaries
+                else len(self.thresholds)) + 1
 
     def decide(self, tokens, mask) -> Tuple[np.ndarray, np.ndarray]:
-        scores = np.asarray(self.router.scores(jnp.asarray(tokens),
-                                               jnp.asarray(mask)))
+        tk, mk = jnp.asarray(tokens), jnp.asarray(mask)
+        if self.boundaries:
+            # first passing gate, cheapest first: walk the boundaries
+            # priciest-first so cheaper gates overwrite — the final value
+            # is the smallest b with score_b >= gate b's threshold
+            tier = np.full((len(tokens),), len(self.boundaries), np.int64)
+            scores0: Optional[np.ndarray] = None
+            for b in reversed(range(len(self.boundaries))):
+                gate = self.boundaries[b]
+                s = np.asarray(gate.scores(tk, mk))
+                tier = np.where(s >= gate.threshold, b, tier)
+                if b == 0:
+                    scores0 = s
+            return tier, scores0
+        scores = np.asarray(self.router.scores(tk, mk))
         tier = np.zeros(scores.shape, np.int64)
         for t in self.thresholds:
             tier += scores < t
@@ -259,6 +312,18 @@ class TierMeter:
         self.drafted = np.zeros(len(self.names), np.int64)
         self.accepted = np.zeros(len(self.names), np.int64)
         self.rejected = np.zeros(len(self.names), np.int64)
+        # mid-stream escalation (serving.pool hand-off): a stream aborted
+        # off tier t bills the tokens it emitted THERE to t's token column
+        # (record_escalation) and the rest — plus its single call — to the
+        # tier that finished it (record at retirement, with the already-
+        # billed tokens subtracted). Calls never split: the §2.3
+        # calls-weighted advantage counts each request exactly once, at
+        # its final tier, while the token-weighted advantage sees the
+        # honest per-tier split. ``esc_tokens`` is the visibility side
+        # channel: the subset of ``tokens`` emitted by streams that later
+        # escalated away.
+        self.escalations = np.zeros(len(self.names), np.int64)
+        self.esc_tokens = np.zeros(len(self.names), np.int64)
 
     @property
     def n_tiers(self) -> int:
@@ -321,6 +386,24 @@ class TierMeter:
         self.accepted[t] += accepted
         self.rejected[t] += rejected
 
+    def record_escalation(self, from_tier: int, gen_tokens: int):
+        """Record one stream escalating OFF ``from_tier`` mid-decode after
+        emitting ``gen_tokens`` tokens there (since its last hand-off).
+        Those tokens bill to ``from_tier``'s token column now — that tier's
+        model really ran them — but NO call is recorded: the request's
+        single call lands at its final tier when ``record`` fires at
+        retirement (with these tokens subtracted), so the calls-weighted
+        §2.3 advantage stays undiluted while the token split is honest."""
+        t = self._check_tier(from_tier)
+        if t == self.n_tiers - 1:
+            raise ValueError(f"cannot escalate off the priciest tier "
+                             f"{self.names[-1]!r} — there is nothing above")
+        if gen_tokens < 0:
+            raise ValueError(f"negative escalated token count {gen_tokens}")
+        self.escalations[t] += 1
+        self.esc_tokens[t] += int(gen_tokens)
+        self.tokens[t] += int(gen_tokens)
+
     def reset(self):
         """Zero the counters — e.g. after a warmup pass whose traffic must
         not count toward a measured stream."""
@@ -333,6 +416,8 @@ class TierMeter:
         self.drafted[:] = 0
         self.accepted[:] = 0
         self.rejected[:] = 0
+        self.escalations[:] = 0
+        self.esc_tokens[:] = 0
 
     @property
     def total_calls(self) -> int:
@@ -357,18 +442,19 @@ class TierMeter:
         return 1.0 - int(self.tokens[-1]) / total if total else 0.0
 
     def summary(self) -> Dict[str, dict]:
-        """Per-tier calls/tokens plus robustness and speculative tallies,
-        keyed by tier name (cheapest first)."""
+        """Per-tier calls/tokens plus robustness, speculative, and
+        escalation tallies, keyed by tier name (cheapest first)."""
         return {name: {"calls": int(c), "gen_tokens": int(t),
                        "sheds": int(s), "deadline_misses": int(d),
                        "preemptions": int(p), "reprefill_tokens": int(r),
                        "drafted": int(dr), "accepted": int(ac),
-                       "rejected": int(rj)}
-                for name, c, t, s, d, p, r, dr, ac, rj in zip(
+                       "rejected": int(rj), "escalations": int(es),
+                       "esc_tokens": int(et)}
+                for name, c, t, s, d, p, r, dr, ac, rj, es, et in zip(
                     self.names, self.calls, self.tokens, self.sheds,
                     self.deadline_misses, self.preemptions,
                     self.reprefill_tokens, self.drafted, self.accepted,
-                    self.rejected)}
+                    self.rejected, self.escalations, self.esc_tokens)}
 
 
 class CostMeter:

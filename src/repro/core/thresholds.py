@@ -13,6 +13,10 @@ resulting (threshold, cost_advantage, drop_pct) frontier:
   one is the scalar answer (only queries safe for the cheapest tier), and
   the remaining off-priciest mass is split evenly across the middle tiers
   along the frontier's cost-advantage axis.
+* ``calibrate_abort_threshold`` — the serve-time escalation dial: from an
+  observe-only pass's per-stream peak uncertainty scores, the threshold
+  at which at most ``max_escalate_frac`` of comparable streams abort
+  mid-decode and re-admit one tier up (serving.engine.EscalationMonitor).
 """
 from __future__ import annotations
 
@@ -115,6 +119,34 @@ def cascade_thresholds(frontier: List[FrontierPoint], n_tiers: int,
         t = frontier[int(np.abs(cas - level).argmin())].threshold
         ts.append(min(ts[-1], t))   # keep non-increasing under grid ties
     return ts
+
+
+def calibrate_abort_threshold(peak_scores, max_escalate_frac: float) -> float:
+    """The mid-stream escalation dial's calibration contract.
+
+    ``peak_scores`` are per-stream PEAK running uncertainty scores from an
+    observe-only pass (``EscalationMonitor(abort_threshold=None)`` — the
+    monitor tracks each stream's EMA-smoothed entropy/margin score without
+    aborting anyone, and the peak lands in ``Request.esc_peak_score``).
+    Returns the abort threshold at which a fraction ``max_escalate_frac``
+    of comparable streams would have crossed mid-decode: the
+    (1 - max_escalate_frac) quantile of the observed peaks. A stream
+    escalates when its running score reaches the threshold, so escalation
+    volume — the extra prefill cost paid on the tier above — is budgeted
+    the same way the routing thresholds budget quality drop.
+    ``max_escalate_frac=0`` returns a threshold strictly above every
+    observed peak (escalation effectively off); ``1`` returns the minimum
+    peak (every comparable stream escalates)."""
+    peaks = np.asarray(peak_scores, np.float64).reshape(-1)
+    if peaks.size == 0:
+        raise ValueError("abort-threshold calibration needs at least one "
+                         "observed stream peak")
+    if not 0.0 <= max_escalate_frac <= 1.0:
+        raise ValueError(f"max_escalate_frac={max_escalate_frac}: the "
+                         "escalation budget is a fraction in [0, 1]")
+    if max_escalate_frac == 0.0:
+        return float(peaks.max()) + 1e-6
+    return float(np.quantile(peaks, 1.0 - max_escalate_frac))
 
 
 def evaluate_threshold(threshold: float, scores: np.ndarray,

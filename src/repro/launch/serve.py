@@ -39,6 +39,14 @@ tree (serving.prefix): admissions whose prompt prefix is already resident
 map those pages copy-on-write instead of re-prefilling, and the report
 grows per-tier hit/miss/eviction columns. Tiers that can't share
 (window/SSM, one-shot prefill) recompute with the reason printed.
+
+``--escalate FRAC`` turns on mid-stream quality escalation: an
+observe-only calibration pass records each stream's peak decode
+uncertainty, per-tier abort thresholds are set so at most FRAC of
+streams escalate, and a live stream crossing its tier's threshold is
+cancelled (pages freed, prompt + emitted prefix kept) and re-admitted
+one tier up as ONE chunked prefill — escalation costs a prefill, not a
+restart, and the continuation is greedy-exact.
 """
 from __future__ import annotations
 
@@ -50,7 +58,8 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config
 from repro.core import (CascadePolicy, CostMeter, HybridRouter,
                         ThresholdPolicy, TierMeter, best_feasible,
-                        calibration_frontier, cascade_thresholds)
+                        calibrate_abort_threshold, calibration_frontier,
+                        cascade_thresholds)
 from repro.core.experiment import make_labels
 from repro.core.quality import edit_similarity
 from repro.core.router import RouterTrainConfig, score_dataset, train_router
@@ -59,6 +68,7 @@ from repro.data.tasks import generate_dataset, lm_training_arrays
 from repro.models import RouterConfig, build_model
 from repro.serving import (ContinuousEngine, ContinuousPoolEngine,
                            HybridEngine, make_engine)
+from repro.serving.engine import EscalationMonitor
 from repro.serving.generate import sample_responses
 from repro.training.trainer import TrainConfig, train_lm
 
@@ -177,6 +187,13 @@ def main():
                          "(0 = off, the default; greedy-exact either way). "
                          "Window/SSM tiers fall back to recompute with a "
                          "recorded reason.")
+    ap.add_argument("--escalate", type=float, default=None, metavar="FRAC",
+                    help="mid-stream quality escalation for --continuous: "
+                         "an observe-only pass calibrates per-tier abort "
+                         "thresholds so at most this fraction of streams "
+                         "escalate; a crossed stream is cancelled and "
+                         "resumes one tier up as ONE chunked prefill of "
+                         "(prompt + emitted prefix), greedy-exact")
     args = ap.parse_args()
     if args.spec_gamma and not args.continuous:
         raise SystemExit("--spec-gamma rides the continuous pool's step "
@@ -184,6 +201,13 @@ def main():
     if args.prefix_cache and not args.continuous:
         raise SystemExit("--prefix-cache shares pages of the continuous "
                          "paged KV pool; pass --continuous")
+    if args.escalate is not None and not args.continuous:
+        raise SystemExit("--escalate cancels and re-admits continuous "
+                         "streams via preemption mechanics; pass "
+                         "--continuous")
+    if args.escalate is not None and not 0.0 <= args.escalate <= 1.0:
+        raise SystemExit("--escalate is an escalation-fraction budget "
+                         "in [0, 1]")
 
     cfgs = resolve_tiers(args.arch, args.tiers)
     K = len(cfgs)
@@ -272,9 +296,37 @@ def main():
         for t, reason in hy.plan.skipped:
             print(f"  (tier {cfgs[t].name}: serving non-speculatively — "
                   f"{reason})")
+        if args.escalate is not None:
+            # observe-only pass: every tier below the priciest watches
+            # per-stream peak uncertainty without cancelling anyone, then
+            # gets its own abort threshold at the escalation-fraction
+            # budget (core.thresholds.calibrate_abort_threshold)
+            for eng in engines[:-1]:
+                eng.escalation = EscalationMonitor(abort_threshold=None)
+            obs = generate_dataset(rng, 64)
+            obs_reqs, obs_tiers, _ = hy.submit(obs.query, obs.query_mask)
+            hy.run()
+            for t, eng in enumerate(engines[:-1]):
+                peaks = [r.esc_peak_score
+                         for r, ti in zip(obs_reqs, obs_tiers) if ti == t]
+                if peaks:
+                    thr = calibrate_abort_threshold(peaks, args.escalate)
+                    eng.escalation = EscalationMonitor(abort_threshold=thr)
+                    print(f"  {cfgs[t].name}: abort threshold {thr:.3f} "
+                          f"({len(peaks)} calibration streams)")
+                else:
+                    # nothing routed here during observation: no frontier
+                    # to calibrate on, so this tier serves unmonitored
+                    eng.escalation = None
+                    print(f"  {cfgs[t].name}: no calibration stream "
+                          "routed here; escalation off")
+            hy.meter.reset()   # the observation pass is not traffic
     else:
         if args.spec_gamma:
             raise SystemExit("--spec-gamma needs every tier on the "
+                             "continuous paged path")
+        if args.escalate is not None:
+            raise SystemExit("--escalate needs every tier on the "
                              "continuous paged path")
         if args.continuous:
             no_paged = [c.name for c, e in zip(cfgs, engines)
@@ -298,7 +350,8 @@ def main():
         rob = "".join(f"  {row[k]} {k.replace('_', ' ')}"
                       for k in ("preemptions", "sheds", "deadline_misses",
                                 "reprefill_tokens", "drafted", "accepted",
-                                "rejected") if row.get(k))
+                                "rejected", "escalations", "esc_tokens")
+                      if row.get(k))
         print(f"  {name:<16} {row['calls']:>5} calls  "
               f"{row['gen_tokens']:>6} tokens{rob}")
     if isinstance(hy, ContinuousPoolEngine) and hy.plan.gamma:
@@ -310,6 +363,11 @@ def main():
                 print(f"  {cfgs[t].name}: {st.spec_rounds} spec rounds, "
                       f"{st.acceptance_rate:.0%} acceptance, "
                       f"{steps_per:.2f} target steps/token")
+    if isinstance(hy, ContinuousPoolEngine) and args.escalate is not None:
+        n_esc = len(hy.escalation_log)
+        print(f"  {n_esc} stream{'s'[:n_esc != 1]} escalated mid-decode "
+              f"(budget {args.escalate:.0%}); each resumed one tier up "
+              "as one chunked prefill")
     if isinstance(hy, ContinuousPoolEngine) and args.prefix_cache:
         # per-tier prefix-tree columns: each tier shares only with itself
         for cfg, eng in zip(cfgs, engines):

@@ -264,6 +264,11 @@ class ContinuousStats:
                                  # pages: prompt + prefix re-queued)
     reprefill_tokens: int = 0    # tokens queued for re-prefill by evictions
                                  # (the compute cost of preemption)
+    escalations: int = 0         # DECODING slots quality-aborted up a tier
+                                 # (EscalationMonitor; pages freed, prompt +
+                                 # prefix handed to the pool — the cost is
+                                 # the UPPER tier's prefill, so no
+                                 # reprefill_tokens are charged here)
     sheds: int = 0               # requests load-shed with reason "rejected"
                                  # (bounded-queue overflow or never-fits)
     deadline_misses: int = 0     # requests cancelled with reason "deadline"
@@ -301,6 +306,45 @@ class ContinuousStats:
             if self.drafted_tokens else 0.0
 
 
+@dataclasses.dataclass
+class EscalationMonitor:
+    """Mid-stream quality watch over one tier's decode logits.
+
+    Every plain-decode dispatch computes, inside the decode jit, a per-slot
+    uncertainty score from that step's next-token distribution: the mean of
+    normalized entropy and (1 - top-2 probability margin), both in [0, 1].
+    The monitor EMA-smooths it per stream and records each stream's peak in
+    ``Request.esc_peak_score``. With ``abort_threshold=None`` that is all
+    it does (the observe-only calibration pass —
+    ``core.thresholds.calibrate_abort_threshold`` turns the collected peaks
+    into a threshold at an escalation-fraction budget). With a threshold
+    set, a DECODING stream whose running score reaches it after at least
+    ``min_tokens`` emitted tokens is cancelled through the preemption
+    mechanics (pages freed, prompt + emitted prefix kept as
+    ``serve_tokens``) and lands in the engine's escalated buffer for the
+    pool to re-admit ONE TIER UP as one chunked prefill — escalation costs
+    a prefill, not a restart.
+
+    Speculative slots bypass the monitor: a drafted-and-verified round
+    never passes through the plain decode dispatch that scores uncertainty
+    (and its accept rule already embeds the target's own judgement).
+    Monitors belong on a pool's tiers below the priciest; a bare engine
+    has nowhere to send the escalated buffer.
+    """
+    abort_threshold: Optional[float] = None   # None = observe-only
+    min_tokens: int = 4     # emitted tokens before a stream may abort
+    ema: float = 0.5        # smoothing weight on the newest step's score
+
+    def __post_init__(self):
+        if self.min_tokens < 1:
+            raise ValueError(f"min_tokens={self.min_tokens}: a stream must "
+                             "emit at least one token before escalating "
+                             "(its prefix is the hand-off payload)")
+        if not 0.0 < self.ema <= 1.0:
+            raise ValueError(f"ema={self.ema}: the smoothing weight must "
+                             "be in (0, 1] (1 = no smoothing)")
+
+
 class ContinuousEngine:
     """Step-driven continuous-batching engine over a paged KV cache (plus,
     for SSM/hybrid stacks, a per-slot recurrent-state pool).
@@ -335,7 +379,8 @@ class ContinuousEngine:
                  max_preemptions: int = 3,
                  preempt_after_s: float = 0.0,
                  admit_lookahead: Optional[int] = None,
-                 prefix_cache: int = 0):
+                 prefix_cache: int = 0,
+                 escalation: Optional[EscalationMonitor] = None):
         if bundle.decode_step_paged is None:
             raise ValueError(f"{bundle.cfg.name}: no paged decode path "
                              "(ArchConfig.supports_paged_kv is False)")
@@ -492,6 +537,14 @@ class ContinuousEngine:
         self._verify_fn = None
         self._draft_bounds: set = set()
         self._verify_shapes: set = set()
+        # mid-stream quality escalation: the monitor (settable any time,
+        # None = off), the per-slot EMA-smoothed running uncertainty score,
+        # and the buffer of streams cancelled up a tier this step — the
+        # pool drains it (``drain_escalated``) and re-admits each request
+        # one tier up via that engine's ``resubmit``
+        self.escalation = escalation
+        self._esc_score = np.zeros((n_slots,), np.float32)
+        self._escalated_buf: List[Request] = []
 
     # ------------------------------------------------------------ jit pieces
     def _build_decode(self):
@@ -510,7 +563,19 @@ class ContinuousEngine:
             # their own temperature — one trace for any mix
             nxt = _sample_rows(key, logits, temps)
             nxt = jnp.where(active, nxt, jnp.int32(tok.PAD))
-            return nxt, cache["k_pages"], cache["v_pages"], cache.get("rec")
+            # per-slot uncertainty for the escalation monitor, from the
+            # same distribution the token was sampled from: mean of
+            # normalized entropy and (1 - top-2 margin), both in [0, 1].
+            # Computed unconditionally — a handful of vector ops against a
+            # full decode launch, and branching on it would double the
+            # trace count. Inactive slots produce garbage the step ignores.
+            lg = logits.reshape(logits.shape[0], -1)
+            p = jax.nn.softmax(lg, axis=-1)
+            ent = -(p * jnp.log(p + 1e-9)).sum(-1) / jnp.log(lg.shape[-1])
+            top2 = jax.lax.top_k(p, 2)[0]
+            unc = 0.5 * ent + 0.5 * (1.0 - (top2[:, 0] - top2[:, 1]))
+            return (nxt, unc, cache["k_pages"], cache["v_pages"],
+                    cache.get("rec"))
 
         # donate the pools (and the recurrent-state slabs): the step
         # updates them in place instead of copying per decoded token
@@ -834,6 +899,7 @@ class ContinuousEngine:
             self.draft_cache.free_slot(slot)   # lockstep: draft mirror too
         self._next_in[slot] = tok.PAD
         self._temps[slot] = self.temperature
+        self._esc_score[slot] = 0.0
         self.stats.retired += 1
         req = self.sched.retire(slot)
         req.finish_reason = reason
@@ -857,6 +923,7 @@ class ContinuousEngine:
             self.draft_cache.free_slot(slot)   # resumption re-mirrors both
         self._next_in[slot] = tok.PAD
         self._temps[slot] = self.temperature
+        self._esc_score[slot] = 0.0
         req.serve_tokens = np.concatenate(
             [req.tokens, np.asarray(req.out, np.int32)])
         req.prefill_pos = 0
@@ -865,6 +932,78 @@ class ContinuousEngine:
         self.stats.preemptions += 1
         self.stats.reprefill_tokens += len(req.serve_tokens)
         return self.sched.preempt(slot)
+
+    def _watch_escalation(self, slots: List[int], unc: np.ndarray) -> None:
+        """Feed this step's per-slot uncertainty scores to the escalation
+        monitor: EMA-smooth per stream, track each stream's peak, and
+        cancel any DECODING stream whose running score has reached the
+        abort threshold (observe-only when the threshold is None). Runs
+        after the step's retirements — a stream that just finished never
+        escalates — and only over the plain-decode slots (speculative
+        rounds bypass the monitor, see EscalationMonitor)."""
+        mon = self.escalation
+        for slot in slots:
+            req = self.sched.running.get(slot)
+            if req is None or req.state != DECODING:
+                continue
+            s = mon.ema * float(unc[slot]) \
+                + (1.0 - mon.ema) * float(self._esc_score[slot])
+            self._esc_score[slot] = s
+            req.esc_peak_score = max(req.esc_peak_score, s)
+            if mon.abort_threshold is not None \
+                    and req.n_generated >= mon.min_tokens \
+                    and s >= mon.abort_threshold:
+                self._escalated_buf.append(self._escalate(slot))
+
+    def _escalate(self, slot: int) -> Request:
+        """Cancel ``slot`` mid-decode for cross-tier escalation: the same
+        eviction mechanics as ``_preempt`` (pages freed, prompt + emitted
+        prefix rebuilt as ``serve_tokens``), but the request leaves this
+        tier — it lands in the escalated buffer for the pool to re-admit
+        one tier up, where resumption is ONE chunked prefill whose
+        final-chunk logits sample the upper tier's own next token. No
+        ``reprefill_tokens`` are charged here: the re-prefill runs on (and
+        is billed to) the tier above."""
+        req = self.sched.running[slot]
+        self._publish_resident(slot)
+        self.cache.free_slot(slot)
+        if self.draft_cache is not None:
+            self.draft_cache.free_slot(slot)
+        self._next_in[slot] = tok.PAD
+        self._temps[slot] = self.temperature
+        self._esc_score[slot] = 0.0
+        req.serve_tokens = np.concatenate(
+            [req.tokens, np.asarray(req.out, np.int32)])
+        req.prefill_pos = 0
+        req.escalations += 1
+        self.stats.escalations += 1
+        return self.sched.escalate(slot)
+
+    def drain_escalated(self) -> List[Request]:
+        """Streams cancelled up a tier since the last drain. The pool
+        drains this every step and hands each request to the next tier's
+        ``resubmit``; a bare engine with a monitor set should drain it
+        too, or escalated streams are silently parked."""
+        out, self._escalated_buf = self._escalated_buf, []
+        return out
+
+    def resubmit(self, req: Request) -> Request:
+        """Accept an escalated hand-off from the tier below: re-queue the
+        in-flight request for ordinary re-admission (its ``serve_tokens``
+        — prompt + emitted prefix — prefills as one chunk stream). The
+        bounded-queue cap does not apply — this is a continuation already
+        admitted by the pool's policy, not a new arrival — but the
+        capacity shed does: a continuation this tier could never fit
+        (longer context than the slot cap, or a worst-case footprint past
+        the whole pool) retires "rejected" instead of wedging the queue."""
+        cap = self.cache.max_pages_per_slot * self.cache.page_size
+        remaining = req.max_new_tokens - req.n_generated
+        peak = self.cache.pages_for(
+            min(len(req.serve_tokens) + remaining - 1, cap))
+        if len(req.serve_tokens) + 1 > cap \
+                or peak > self.cache.stats.num_pages:
+            return self._shed(req)
+        return self.sched.requeue(req)
 
     def _preemptible(self, floor_priority: Optional[int] = None) -> List[int]:
         """DECODING slots eligible for eviction: under the per-request
@@ -1546,7 +1685,7 @@ class ContinuousEngine:
             rec = self.rstate.state if self.rstate is not None else None
             # jnp.array (copy): _next_in is mutated below while the
             # dispatched step may still be reading it (CPU zero-copy alias)
-            nxt, kp, vp, rec = self._decode(
+            nxt, unc, kp, vp, rec = self._decode(
                 self.params, self.cache.pool["k_pages"],
                 self.cache.pool["v_pages"], rec,
                 jnp.array(self._next_in[:, None]), pt, sl,
@@ -1564,6 +1703,8 @@ class ContinuousEngine:
                 if done is not None:
                     retired.append(done)
             self.stats.decode_steps += 1
+            if self.escalation is not None:
+                self._watch_escalation(steppable, np.asarray(unc))
         elif not spec_slots and not progressed and not retired \
                 and (self.sched.running or self.sched.pending):
             # nothing decoded, no prefill advanced, nothing admitted or

@@ -15,6 +15,12 @@ a timestamp — so a scenario replays bit-identically on any machine:
 * ``AdmissionBurst``— a batch of prompts lands at one step, optionally
                       high-priority / deadline-carrying, driving the
                       preemption and load-shedding paths.
+* ``EscalationTrigger`` — an always-abort ``EscalationMonitor`` installs
+                      on a tier at one step (abort_threshold=0.0 is
+                      deterministic: the uncertainty score is
+                      non-negative, so every DECODING stream escalates at
+                      exactly ``min_tokens``) — the mass mid-stream
+                      escalation generator.
 
 ``FaultHarness`` replays a fault schedule against a ``ContinuousPoolEngine``
 (or a bare ``ContinuousEngine``) and then audits the wreckage:
@@ -24,10 +30,15 @@ fragmentation, and empty queues. The module doubles as the CI chaos smoke:
 
   PYTHONPATH=src python -m repro.serving.faults --smoke
 
-runs a stall, a pressure, a burst, a spec-stall, and a prefix-thrash
-scenario on tiny models and asserts the invariants plus greedy-exactness
-of preempted (and speculatively decoded) requests against uncontended
-reference runs. The spec-stall scenario wedges a DRAFT tier
+runs a stall, a pressure, a burst, a spec-stall, a prefix-thrash, and an
+escalation-storm scenario on tiny models and asserts the invariants plus
+greedy-exactness of preempted (and speculatively decoded, and escalated)
+requests against uncontended reference runs. The escalation-storm
+scenario mass-escalates a tier's whole stream population mid-decode while
+the upper tier's pool is squeezed: every hand-off must re-admit (or
+validly shed), token accounting must split across tiers without loss, and
+post-escalation output must stay byte-identical to the upper tier
+decoding from each stream's emitted prefix. The spec-stall scenario wedges a DRAFT tier
 mid-speculation: its target must degrade to plain decode (spec_fallbacks),
 never deadlock, resume speculating when the stall lifts, and leak zero
 pages in either the serving pool or the mirrored draft pool. The
@@ -48,7 +59,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .engine import ContinuousEngine
+from .engine import ContinuousEngine, EscalationMonitor
 from .pool import ContinuousPoolEngine
 from .scheduler import FINISH_REASONS, Request
 
@@ -91,7 +102,21 @@ class AdmissionBurst:
     max_new_tokens: Optional[int] = None
 
 
-Fault = Union[TierStall, PagePressure, AdmissionBurst]
+@dataclasses.dataclass(frozen=True)
+class EscalationTrigger:
+    """An ``EscalationMonitor`` installs on tier ``tier`` at step ``step``
+    (replacing whatever monitor was there). ``abort_threshold=0.0`` makes
+    the storm deterministic — every DECODING stream on the tier crosses a
+    non-negative score immediately and escalates once it has emitted
+    ``min_tokens`` tokens. The harness target must be a pool with a tier
+    above ``tier``, or the hand-off has nowhere to go."""
+    tier: str
+    step: int
+    abort_threshold: float = 0.0
+    min_tokens: int = 1
+
+
+Fault = Union[TierStall, PagePressure, AdmissionBurst, EscalationTrigger]
 
 
 class FaultHarness:
@@ -149,6 +174,10 @@ class FaultHarness:
                     self.submit(f.tier, p, f.max_new_tokens,
                                 priority=f.priority, deadline_s=f.deadline_s,
                                 timeout_s=f.timeout_s)
+            elif isinstance(f, EscalationTrigger) and f.step == step_i:
+                self.engines[f.tier].escalation = EscalationMonitor(
+                    abort_threshold=f.abort_threshold,
+                    min_tokens=f.min_tokens)
 
     def _stalled(self, step_i: int) -> List[str]:
         return [f.tier for f in self.faults if isinstance(f, TierStall)
@@ -160,8 +189,10 @@ class FaultHarness:
         drained; returns (and records) every retirement. Raises past
         ``max_steps`` — a scenario that never drains is itself a failed
         robustness test."""
-        horizon = max((f.start + f.steps if not isinstance(f, AdmissionBurst)
-                       else f.step for f in self.faults), default=0)
+        horizon = max((f.step if isinstance(f, (AdmissionBurst,
+                                                EscalationTrigger))
+                       else f.start + f.steps for f in self.faults),
+                      default=0)
         step_i = 0
         while True:
             self._inject(step_i)
@@ -180,6 +211,7 @@ class FaultHarness:
                                    f"{self.max_steps} steps")
             if step_i > horizon \
                     and not any(e.sched.has_work or e._shed_buf
+                                or e._escalated_buf
                                 for e in self.engines.values()):
                 self._inject(step_i)   # releases pressure ending exactly here
                 break
@@ -217,6 +249,9 @@ class FaultHarness:
                            f"{c.num_pages - 1 - resident} expected pages")
             if c.held_pages != 0:
                 bad.append(f"{name}: {c.held_pages} pages still held")
+            if eng._escalated_buf:
+                bad.append(f"{name}: {len(eng._escalated_buf)} escalated "
+                           "streams never handed off")
             bad.extend(f"{name}: {v}" for v in c.check_refcounts())
             if c.fragmentation != 0.0:
                 bad.append(f"{name}: fragmentation {c.fragmentation:.3f} "
@@ -481,25 +516,85 @@ def scenario_prefix_thrash(verbose: bool = True) -> FaultHarness:
     return h
 
 
+def scenario_escalation_storm(verbose: bool = True) -> FaultHarness:
+    """Mass mid-stream escalation under page pressure: an always-abort
+    monitor lands on tier a at step 3 (deterministic — every DECODING
+    stream escalates at 1 emitted token) while most of tier b's free pool
+    is held. Every hand-off must re-admit into the squeeze (waiting it
+    out, never crashing or leaking), token accounting must split across
+    the tiers without loss, the call count must stay undiluted, and every
+    post-escalation continuation must be byte-identical to tier b decoding
+    greedily from (prompt + the stream's emitted prefix)."""
+    rng = np.random.default_rng(5)
+    pool, bundles = _tiny_pool(n_slots=2, max_seq=48, max_new=6)
+    eb = pool.engine("b")
+    squeeze = eb.cache.stats.num_pages - 8   # leave barely enough to admit
+    h = FaultHarness(pool, [
+        AdmissionBurst(step=0, prompts=_prompts(rng, 8, lo=4, hi=12),
+                       tier="a"),
+        PagePressure("b", start=3, steps=16, pages=squeeze),
+        EscalationTrigger("a", step=3, abort_threshold=0.0, min_tokens=1),
+    ])
+    h.run()
+    bad = h.check_invariants()
+    assert not bad, bad
+    m = pool.meter
+    assert pool.escalation_log and m.escalations[0] > 0, \
+        "the storm never escalated anyone"
+    assert pool.engine("a").stats.escalations == len(pool.escalation_log)
+    served = [r for r in h.requests if r.finish_reason != "rejected"]
+    assert m.tokens.sum() == sum(r.n_generated for r in served), \
+        "escalation split lost or double-billed tokens"
+    assert m.total_calls == len(served), \
+        "an escalated stream diluted the call count"
+    # post-escalation continuations are greedy-exact vs tier b uncontended
+    b, p = bundles[1]
+    escalated = {rid: k for rid, _, _, k in pool.escalation_log}
+    checked = 0
+    for r in h.requests:
+        if r.rid not in escalated or r.finish_reason == "rejected":
+            continue
+        k = escalated[r.rid]
+        ref_eng = ContinuousEngine(b, p, max_new_tokens=6, n_slots=2,
+                                   max_seq=64)
+        ref = ref_eng.submit(np.concatenate(
+            [r.tokens, np.asarray(r.out[:k], np.int32)]))
+        ref_eng.run()
+        assert r.out[k:] == ref.out[:len(r.out) - k], \
+            (r.rid, r.out[k:], ref.out)
+        checked += 1
+    assert checked > 0, "no escalated stream survived to compare"
+    if verbose:
+        print(f"escalation-storm: {len(h.retired)} retired, "
+              f"{len(pool.escalation_log)} escalations into a "
+              f"{squeeze}-page squeeze, {checked} continuations "
+              "greedy-exact vs the upper tier, token split balanced, "
+              "no leaks")
+    return h
+
+
+# name -> scenario fn; the CI chaos job (--smoke) runs them all, and
+# tests assert membership so a new scenario cannot dodge the smoke
+SCENARIOS = {"stall": scenario_stall, "pressure": scenario_pressure,
+             "burst": scenario_burst, "spec-stall": scenario_spec_stall,
+             "prefix-thrash": scenario_prefix_thrash,
+             "escalation-storm": scenario_escalation_storm}
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="run the five chaos scenarios and assert "
-                         "invariants (the CI chaos job)")
-    ap.add_argument("--scenario",
-                    choices=("stall", "pressure", "burst", "spec-stall",
-                             "prefix-thrash"),
+                    help="run every chaos scenario and assert invariants "
+                         "(the CI chaos job)")
+    ap.add_argument("--scenario", choices=tuple(SCENARIOS),
                     help="run one scenario")
     args = ap.parse_args(argv)
-    scenarios = {"stall": scenario_stall, "pressure": scenario_pressure,
-                 "burst": scenario_burst, "spec-stall": scenario_spec_stall,
-                 "prefix-thrash": scenario_prefix_thrash}
-    names = [args.scenario] if args.scenario else list(scenarios)
+    names = [args.scenario] if args.scenario else list(SCENARIOS)
     if not (args.smoke or args.scenario):
         ap.error("pick --smoke or --scenario")
     for name in names:
-        scenarios[name]()
+        SCENARIOS[name]()
     print(f"chaos smoke OK: {', '.join(names)}")
 
 

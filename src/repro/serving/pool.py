@@ -20,6 +20,17 @@ greedy-exact at temperature 0). Tiers the capability check refuses
 path, recorded in ``plan.skipped``; a stalled draft tier degrades its
 target to plain decode for the stall's duration rather than wedging it.
 
+With ``escalation`` monitors installed, routing stops being final:
+each monitored tier watches its own decode logits (entropy / top-2 margin
+per step, EMA-smoothed per stream — serving.engine.EscalationMonitor) and
+cancels a stream whose running score crosses its boundary's calibrated
+abort threshold. The pool drains the escalated buffer every step and
+re-admits the request ONE TIER UP as one chunked prefill of prompt +
+emitted prefix — escalation costs a prefill, not a restart, and the
+continuation is greedy-exact with the upper tier decoding from that same
+prefix. The meter bills escalations honestly: tokens split across the
+tiers that actually emitted them, the call counts once at the final tier.
+
 Shared-prefix KV reuse is strictly per-tier: an engine built with
 ``prefix_cache > 0`` keeps its own copy-on-write prefix tree over its own
 page pool (serving.prefix) — pages are meaningless across models, so tiers
@@ -56,7 +67,7 @@ from repro.core.routing import RoutingPolicy, TierMeter
 from repro.data import tokenizer as tok
 from repro.models.encoder import RouterConfig, router_encode
 from repro.models.model import ModelBundle
-from .engine import ContinuousEngine
+from .engine import ContinuousEngine, EscalationMonitor
 from .scheduler import Request
 
 Engines = Union[Mapping[str, ContinuousEngine],
@@ -156,7 +167,9 @@ class ContinuousPoolEngine:
 
     def __init__(self, policy: RoutingPolicy, engines: Engines, *,
                  spec_gamma: int = 0,
-                 spec_pairs: Optional[Sequence[Tuple[int, int]]] = None):
+                 spec_pairs: Optional[Sequence[Tuple[int, int]]] = None,
+                 escalation: Optional[
+                     Sequence[Optional[EscalationMonitor]]] = None):
         items = list(engines.items()) if isinstance(engines, Mapping) \
             else list(engines)
         if len(items) != policy.n_tiers:
@@ -188,6 +201,32 @@ class ContinuousPoolEngine:
             seen_salts.add(eng._rng_salt)
         self.meter = TierMeter(self.names)
         self._tier_of: Dict[int, int] = {}   # rid -> tier idx
+        # mid-stream quality escalation: one optional monitor per boundary
+        # (K-1 entries, cheapest boundary first — the priciest tier has
+        # nothing above it to escalate to). Monitors are per-ENGINE state,
+        # so installing one on a tier whose engine aliases another tier's
+        # would silently watch both; refuse that.
+        if escalation is not None:
+            if len(escalation) != self.n_tiers - 1:
+                raise ValueError(
+                    f"a {self.n_tiers}-tier pool has {self.n_tiers - 1} "
+                    f"escalation boundaries, got {len(escalation)} monitors")
+            for t, mon in enumerate(escalation):
+                if mon is None:
+                    continue
+                if any(self.engines[t] is e for i, e in enumerate(self.engines)
+                       if i != t):
+                    raise ValueError(
+                        f"tier {self.names[t]!r} shares its engine with "
+                        "another tier; an escalation monitor there would "
+                        "watch both")
+                self.engines[t].escalation = mon
+        # rid -> generated tokens already billed to lower tiers (token
+        # columns split across tiers; the call never splits), and the
+        # audit log of every hand-off: (rid, from_tier, to_tier,
+        # n_generated at the abort)
+        self._esc_billed: Dict[int, int] = {}
+        self.escalation_log: List[Tuple[int, int, int, int]] = []
 
     @property
     def n_tiers(self) -> int:
@@ -199,8 +238,10 @@ class ContinuousPoolEngine:
     @property
     def has_work(self) -> bool:
         # shed buffers count: a request rejected at submit still needs one
-        # step() to surface and hit the meter
-        return any(e.sched.has_work or e._shed_buf for e in self.engines)
+        # step() to surface and hit the meter. Escalated buffers count
+        # too: a stream awaiting its hand-off holds no scheduler slot
+        return any(e.sched.has_work or e._shed_buf or e._escalated_buf
+                   for e in self.engines)
 
     # -------------------------------------------------------------- requests
     def submit(self, query_tokens: np.ndarray, query_mask: np.ndarray,
@@ -274,17 +315,23 @@ class ContinuousPoolEngine:
         for req in retired:
             # pop: the registry must not grow for the life of the process
             tier = self._tier_of.pop(req.rid)
+            # tokens this stream already billed to lower tiers at each
+            # escalation hand-off (record_escalation); the final tier only
+            # bills what it emitted itself, so the token split sums to
+            # n_generated exactly
+            billed_below = self._esc_billed.pop(req.rid, 0)
             if req.finish_reason == "rejected":
                 # shed, not served: no call/token record, or the §2.3 cost
                 # metrics would dilute with traffic no tier ran
                 self.meter.record_shed(tier)
                 continue
-            self.meter.record(np.array([tier]), req.n_generated)
+            self.meter.record(np.array([tier]),
+                              req.n_generated - billed_below)
             self.meter.record_robustness(
                 tier, preemptions=req.preemptions,
                 reprefill_tokens=req.reprefill_tokens,
                 deadline_miss=req.finish_reason == "deadline")
-            if req.drafted_tokens:
+            if req.drafted_tokens and tier in self.plan.draft_of:
                 # drafted tokens bill to the CHEAP tier (its model ran
                 # them), accepted/rejected to the target — side-channel
                 # columns, so §2.3 cost metrics stay undiluted
@@ -293,6 +340,29 @@ class ContinuousPoolEngine:
                     drafted=req.drafted_tokens,
                     accepted=req.accepted_tokens,
                     rejected=req.rejected_tokens)
+
+    def _handoff(self, req: Request) -> None:
+        """Deliver one escalated stream to the next tier up: bill the
+        abandoning tier the tokens it actually emitted for this stream
+        (record_escalation — tokens split across tiers, the CALL never
+        splits: it lands once, at whatever tier finally retires the
+        request), move the rid's registry entry up a tier, log the
+        hand-off, and re-queue on the upper engine. A continuation the
+        upper tier could never fit sheds there ("rejected") and surfaces
+        through its shed buffer next step."""
+        t = self._tier_of[req.rid]
+        if t + 1 >= self.n_tiers:
+            # the engine-side monitor check cannot know its pool position;
+            # the pool must never install a monitor on the priciest tier
+            raise RuntimeError(
+                f"stream {req.rid} escalated off the priciest tier "
+                f"{self.names[t]!r} — monitor misconfiguration")
+        billed = self._esc_billed.get(req.rid, 0)
+        self.meter.record_escalation(t, req.n_generated - billed)
+        self._esc_billed[req.rid] = req.n_generated
+        self._tier_of[req.rid] = t + 1
+        self.escalation_log.append((req.rid, t, t + 1, req.n_generated))
+        self.engines[t + 1].resubmit(req)
 
     def _distinct_engines(self) -> List[ContinuousEngine]:
         """Engines deduped by identity, cheapest-tier-first: a tier may
@@ -327,6 +397,11 @@ class ContinuousPoolEngine:
             if eng.sched.has_work and not any(eng is s for s in skip):
                 retired.extend(eng.step(
                     spec=not any(eng is s for s in no_spec)))
+            # escalated hand-offs drain even from a stalled tier: the
+            # hand-off is host-side bookkeeping, and parking a cancelled
+            # stream in a wedged tier's buffer would stall it twice
+            for req in eng.drain_escalated():
+                self._handoff(req)
         self._account(retired)
         return retired
 

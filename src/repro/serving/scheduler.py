@@ -16,7 +16,10 @@ A DECODING slot may be PREEMPTED: its pages are reclaimed and the request
 re-enters the pending queue at its original (priority, arrival) position,
 with its prompt *plus everything it already generated* as the new prefill
 source (``serve_tokens``) — resumption is one chunked prefill, not a
-restart, and stays greedy-exact.
+restart, and stays greedy-exact. ESCALATED is the cross-tier variant:
+same eviction mechanics, but the request leaves for the next tier up
+(the pool hands it to that scheduler's ``requeue``) and resumes THERE as
+one chunked prefill, greedy-exact with the upper tier's own continuation.
 
 All lifecycle stamps (``submit_t`` / ``start_t`` / ``finish_t`` /
 ``token_t``) are ``time.monotonic()`` — wall-clock jumps must not corrupt
@@ -49,6 +52,14 @@ DECODING = "decoding"        # prompt resident, emitting one token per step
 DRAFTING = "drafting"        # draft sibling streaming candidate tokens
 VERIFYING = "verifying"      # target scoring the drafted chunk
 PREEMPTED = "preempted"      # evicted mid-decode, re-queued for re-prefill
+# ESCALATED is preemption ACROSS tiers: a stream whose running quality
+# score crossed its boundary's abort threshold is cancelled mid-decode
+# (pages freed, prompt + emitted prefix kept as ``serve_tokens``) and
+# handed to the pool, which re-queues it on the NEXT tier up. It waits in
+# the upper engine's pending queue in this state and re-admits through the
+# ordinary admit path as ONE chunked prefill — escalation costs a prefill,
+# not a restart — or retires from the queue (deadline / never-fits shed).
+ESCALATED = "escalated"      # quality-aborted, awaiting the tier above
 DONE = "done"                # retired
 
 # The only values ``Request.finish_reason`` may take once ``done``:
@@ -79,6 +90,9 @@ TRANSITIONS = (
     (PREEMPTED, PREFILLING),    # re-admitted: resume is one chunked prefill
     (PREEMPTED, DONE),          # deadline expiry while re-queued
     (DECODING, DONE),           # eos / length / context_cap / deadline
+    (DECODING, ESCALATED),      # quality abort: handed up one tier
+    (ESCALATED, PREFILLING),    # re-admitted one tier up: one chunked prefill
+    (ESCALATED, DONE),          # deadline / shed while awaiting the upper tier
 )
 
 
@@ -122,6 +136,13 @@ class Request:
     drafted_tokens: int = 0
     accepted_tokens: int = 0
     rejected_tokens: int = 0
+    # mid-stream escalation ledger (engine EscalationMonitor + pool
+    # hand-off): times this stream was quality-aborted up a tier, and the
+    # highest running uncertainty score it ever reached — observe-only
+    # monitor passes read the peak to calibrate the abort threshold
+    # (core.thresholds.calibrate_abort_threshold)
+    escalations: int = 0
+    esc_peak_score: float = 0.0
     # what admission actually prefills: the prompt, extended at every
     # preemption with the tokens generated so far, so resumption is one
     # chunked prefill whose final-chunk logits yield the NEXT token
@@ -232,6 +253,28 @@ class ContinuousScheduler:
         req.slot = None
         req.state = PREEMPTED
         self._free_slots.append(slot)
+        bisect.insort(self.pending, req)
+        return req
+
+    def escalate(self, slot: int) -> Request:
+        """Cancel the request occupying ``slot`` for mid-stream quality
+        escalation and free the slot. Unlike ``preempt`` the request does
+        NOT re-enter THIS scheduler's queue — it leaves the tier: the
+        caller (the pool's hand-off) delivers it to the next tier up,
+        whose ``requeue`` re-enqueues it for an ordinary re-admission.
+        The caller reclaims cache pages and rebuilds ``serve_tokens``."""
+        req = self.running.pop(slot)
+        req.slot = None
+        req.state = ESCALATED
+        self._free_slots.append(slot)
+        return req
+
+    def requeue(self, req: Request) -> Request:
+        """Enqueue a request arriving from ANOTHER tier's scheduler (an
+        escalated hand-off) at its (priority, arrival) position. No state
+        write and no fresh submit stamp: the request stays ESCALATED until
+        ``admit`` flips it to PREFILLING, and its latency/TTFT clocks keep
+        running across the tier change."""
         bisect.insort(self.pending, req)
         return req
 

@@ -3,8 +3,9 @@ writer site emitting an undeclared state, and an invalid finish reason."""
 
 QUEUED = "queued"
 RUNNING = "running"
-ZOMBIE = "zombie"
+ESCALATED = "escalated"
 DONE = "done"
+ZOMBIE = "zombie"
 
 
 class Request:
@@ -20,6 +21,16 @@ class MiniSched:
 
     def hijack(self, req):
         req.state = RUNNING          # declared state, undeclared writer site
+
+    def demote(self, req):
+        req.state = ESCALATED        # declared escalation site: fine
+
+    def panic(self, req):
+        req.state = ESCALATED        # declared state + drivable edge, but
+                                     # THIS writer site is undeclared
+
+    def flee(self, req):
+        req.state = DONE             # declared: escalated streams may end
 
     def retire(self, req):
         req.state = DONE

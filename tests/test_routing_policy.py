@@ -125,7 +125,8 @@ def test_tier_meter_accounting_and_advantages():
     assert m.summary()["small"] == {"calls": 2, "gen_tokens": 15, "sheds": 0,
                                     "deadline_misses": 0, "preemptions": 0,
                                     "reprefill_tokens": 0, "drafted": 0,
-                                    "accepted": 0, "rejected": 0}
+                                    "accepted": 0, "rejected": 0,
+                                    "escalations": 0, "esc_tokens": 0}
     with pytest.raises(ValueError):
         m.record(np.array([3]), 1)
     with pytest.raises(ValueError):
@@ -393,3 +394,104 @@ def test_fused_hybrid_step_matches_pool_step():
                                    ml.init_cache(B, 16)), token)
     np.testing.assert_array_equal(np.asarray(hl), np.asarray(plg))
     np.testing.assert_array_equal(np.asarray(routed), np.asarray(tier) == 0)
+
+
+def test_cascade_per_boundary_matches_shared_score_with_identical_heads():
+    """One head repeated per gate with the legacy thresholds IS the legacy
+    cascade: smallest boundary whose gate passes == number of thresholds
+    the shared score fails (the tentpole's parity contract)."""
+    q, mask = _queries(n=24)
+    r = _router(0.0)
+    thresholds = (0.62, 0.5, 0.31)
+    shared = CascadePolicy(router=r, thresholds=thresholds)
+    per_b = CascadePolicy(boundaries=tuple(r.with_threshold(t)
+                                           for t in thresholds))
+    assert per_b.per_boundary and not shared.per_boundary
+    assert per_b.n_tiers == shared.n_tiers == 4
+    tier_s, score_s = shared.decide(q, mask)
+    tier_b, score_b = per_b.decide(q, mask)
+    np.testing.assert_array_equal(tier_s, tier_b)
+    np.testing.assert_allclose(score_s, score_b, rtol=1e-6)
+
+
+def test_cascade_per_boundary_validation():
+    r = _router(0.5)
+    with pytest.raises(ValueError):   # both modes at once
+        CascadePolicy(router=r, thresholds=(0.5,),
+                      boundaries=(r.with_threshold(0.5),))
+    with pytest.raises(ValueError):   # shared mode still needs a router
+        CascadePolicy(thresholds=(0.5,))
+    with pytest.raises(ValueError):   # and at least one threshold
+        CascadePolicy(router=r)
+    # independent gates need no ordering: a non-monotone gate set is legal
+    # (each boundary was calibrated on its own frontier)
+    pol = CascadePolicy(boundaries=(r.with_threshold(0.3),
+                                    r.with_threshold(0.9)))
+    assert pol.n_tiers == 3
+
+
+def test_tier_meter_escalation_splits_tokens_never_calls():
+    """The §2.3 regression (satellite 4): an escalated request counts ONCE
+    in the calls-weighted advantage — at its final tier — while its token
+    columns split across the tiers that actually emitted tokens."""
+    m = TierMeter(("small", "large"))
+    # one stream: 5 tokens on the cheap tier, aborted up, 7 more on the
+    # pricey tier where it retires
+    m.record_escalation(0, 5)
+    m.record(np.array([1]), gen_tokens=7)
+    assert m.total_calls == 1 and list(m.calls) == [0, 1]
+    assert list(m.tokens) == [5, 7] and m.total_tokens == 12
+    # calls-weighted: the stream IS a priciest-tier call — no advantage,
+    # and critically not 0.5 (half-counting would dilute §2.3)
+    assert m.cost_advantage == 0.0
+    # token-weighted: the cheap tier's 5 tokens still count
+    assert abs(m.token_cost_advantage - 5 / 12) < 1e-9
+    s = m.summary()
+    assert s["small"]["escalations"] == 1 and s["small"]["esc_tokens"] == 5
+    assert s["large"]["escalations"] == 0 and s["large"]["esc_tokens"] == 0
+    with pytest.raises(ValueError):   # nothing above the priciest tier
+        m.record_escalation(1, 3)
+    with pytest.raises(ValueError):
+        m.record_escalation(0, -1)
+    m.reset()
+    assert m.escalations.sum() == 0 and m.esc_tokens.sum() == 0
+
+
+def test_pool_policy_per_boundary_calibrates_each_gate(rng):
+    """A ``boundaries`` router_out yields a per-boundary CascadePolicy with
+    each gate's threshold read off its OWN calibration frontier."""
+    from repro.core.experiment import ExperimentData, pool_policy
+    scores, qs, ql = _cal_problem(rng)
+    qm_ = ((qs + ql) / 2).astype(np.float32)
+    exp = ExperimentData(
+        datasets={}, lms={},
+        qualities={"tiny": {"val": qs}, "small": {"val": qm_},
+                   "large": {"val": ql}},
+        responses={}, resp_lengths={})
+    r = _router(0.5)
+    # two boundary heads with distinct score vectors: gate 0 decides
+    # tiny-vs-small on (qs, qm_), gate 1 small-vs-large on (qm_, ql)
+    scores1 = np.clip(scores + rng.normal(0, 0.05, scores.shape), 0, 1)
+    router_out = {"boundaries": [
+        {"params": r.params, "rcfg": r.rcfg, "scores": {"val": scores},
+         "label_kind": "trans"},
+        {"params": r.params, "rcfg": r.rcfg, "scores": {"val": scores1},
+         "label_kind": "trans"},
+    ], "tiers": ("tiny", "small", "large"), "kind": "trans"}
+    tiers = ("tiny", "small", "large")
+    cas = pool_policy(exp, router_out, tiers, kind="cascade",
+                      max_drop_pct=1.0)
+    assert isinstance(cas, CascadePolicy) and cas.per_boundary
+    assert cas.n_tiers == 3 and len(cas.boundaries) == 2
+    for b, (s, lo, hi) in enumerate([(scores, qs, qm_), (scores1, qm_, ql)]):
+        cal = best_feasible(calibration_frontier(s, lo, hi), 1.0)
+        assert cas.boundaries[b].threshold == cal.threshold
+    # quality_target falls through on the cheapest gate's head
+    qt = pool_policy(exp, router_out, tiers, kind="quality_target",
+                     quality_target=0.25)
+    assert isinstance(qt, QualityTargetPolicy) and qt.n_tiers == 3
+    with pytest.raises(ValueError):   # boundary count must match the tiers
+        pool_policy(exp, {"boundaries": router_out["boundaries"][:1]},
+                    tiers, kind="cascade")
+    with pytest.raises(ValueError):
+        pool_policy(exp, router_out, tiers, kind="nope")

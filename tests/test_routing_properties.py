@@ -1,0 +1,149 @@
+"""Property-based routing-policy tests (hypothesis; skipped when absent).
+
+The serving contracts the per-boundary cascade must keep, checked over
+random score vectors, tier counts K in [2, 5], and quality targets:
+
+* CascadePolicy monotonicity — raising any gate's threshold (per-boundary)
+  or any shared-score threshold never routes any query CHEAPER;
+* QualityTargetPolicy target monotonicity — demanding more quality never
+  routes any query cheaper;
+* per-boundary == shared-score equivalence whenever every boundary shares
+  one head and the gate thresholds are the legacy non-increasing vector
+  (the tentpole's parity contract, here over random instances rather than
+  one trained router).
+
+Routers are score-vector stubs (no jax params): ``CascadePolicy`` /
+``QualityTargetPolicy`` only consume ``.scores`` / ``.threshold``, so the
+properties exercise exactly the policy arithmetic the engines trust.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CascadePolicy, QualityTargetPolicy, fit_quality_map
+
+
+@dataclasses.dataclass
+class _VecRouter:
+    """Fixed-score stand-in for HybridRouter: ``scores`` ignores the query
+    batch and returns the instance's vector."""
+    vec: np.ndarray
+    threshold: float = 0.5
+
+    def scores(self, tokens, mask):
+        return self.vec
+
+    def with_threshold(self, threshold):
+        return dataclasses.replace(self, threshold=float(threshold))
+
+
+def _dummy_queries(n):
+    return np.zeros((n, 1), np.int32), np.ones((n, 1), np.float32)
+
+
+unit_floats = st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False)
+score_vecs = st.lists(unit_floats, min_size=1, max_size=24).map(
+    lambda xs: np.asarray(xs, np.float64))
+tier_counts = st.integers(2, 5)
+
+
+@st.composite
+def cascade_instances(draw):
+    """(scores, K, per-boundary gate thresholds) — gates need no ordering,
+    each boundary is calibrated on its own frontier."""
+    scores = draw(score_vecs)
+    k = draw(tier_counts)
+    gates = draw(st.lists(unit_floats, min_size=k - 1, max_size=k - 1))
+    return scores, k, gates
+
+
+@st.composite
+def shared_instances(draw):
+    """(scores, K, non-increasing legacy thresholds)."""
+    scores = draw(score_vecs)
+    k = draw(tier_counts)
+    ts = sorted(draw(st.lists(unit_floats, min_size=k - 1, max_size=k - 1)),
+                reverse=True)
+    return scores, k, ts
+
+
+@settings(max_examples=200, deadline=None)
+@given(cascade_instances(), st.integers(0, 3), st.floats(0.0, 1.0))
+def test_per_boundary_gate_raise_never_routes_cheaper(inst, which, delta):
+    """Raising any single gate's threshold can only push queries to
+    pricier tiers: gate b leaving a query's pass-set never shrinks
+    min{b : s >= t_b}."""
+    scores, k, gates = inst
+    b = which % (k - 1)
+    pol = CascadePolicy(boundaries=tuple(
+        _VecRouter(scores, t) for t in gates))
+    raised = list(gates)
+    raised[b] = min(1.0 + 1e-9, raised[b] + delta)
+    pol2 = CascadePolicy(boundaries=tuple(
+        _VecRouter(scores, t) for t in raised))
+    q, m = _dummy_queries(len(scores))
+    tier, s0 = pol.decide(q, m)
+    tier2, _ = pol2.decide(q, m)
+    assert (tier2 >= tier).all()
+    assert (0 <= tier).all() and (tier < k).all()
+    np.testing.assert_array_equal(s0, scores)   # gate 0's head is reported
+
+
+@settings(max_examples=200, deadline=None)
+@given(shared_instances(), st.lists(st.floats(0.0, 0.5), min_size=4,
+                                    max_size=4))
+def test_shared_threshold_raise_never_routes_cheaper(inst, deltas):
+    """Shared-score mode: an elementwise-dominating (still non-increasing)
+    threshold vector never lowers any query's tier — #{t : s < t} is
+    monotone in every t."""
+    scores, k, ts = inst
+    raised = sorted((t + d for t, d in zip(ts, deltas)), reverse=True)
+    r = _VecRouter(scores, ts[0])
+    pol = CascadePolicy(router=r, thresholds=tuple(ts))
+    pol2 = CascadePolicy(router=r, thresholds=tuple(raised))
+    q, m = _dummy_queries(len(scores))
+    tier, _ = pol.decide(q, m)
+    tier2, _ = pol2.decide(q, m)
+    assert (tier2 >= tier).all()
+
+
+@settings(max_examples=150, deadline=None)
+@given(score_vecs, tier_counts, st.floats(-1.0, 1.0), st.floats(0.0, 0.5),
+       st.integers(0, 2 ** 31 - 1))
+def test_quality_target_monotone_in_target(scores, k, target, bump, seed):
+    """Demanding more quality never routes any query cheaper, for ANY
+    per-tier calibrated maps: raising the target only flips per-tier
+    feasibility bits False, so the first feasible tier index (priciest
+    fall-through included) never decreases."""
+    rng = np.random.default_rng(seed)
+    cal_scores = rng.uniform(size=64)
+    maps = [fit_quality_map(cal_scores, rng.normal(0, 1, 64), n_bins=4)
+            for _ in range(k)]
+    pol = QualityTargetPolicy(_VecRouter(scores), maps, target)
+    q, m = _dummy_queries(len(scores))
+    tier, _ = pol.decide(q, m)
+    pol.set_target(target + bump)
+    tier2, _ = pol.decide(q, m)
+    assert (tier2 >= tier).all()
+    assert (0 <= tier).all() and (tier2 < k).all()
+
+
+@settings(max_examples=200, deadline=None)
+@given(shared_instances())
+def test_per_boundary_equals_shared_with_identical_heads(inst):
+    """With one head behind every gate and the legacy non-increasing
+    thresholds, the per-boundary cascade reproduces the shared-score
+    cascade exactly: smallest b with s >= t_b == #{b : s < t_b}."""
+    scores, k, ts = inst
+    shared = CascadePolicy(router=_VecRouter(scores, ts[0]),
+                           thresholds=tuple(ts))
+    per_b = CascadePolicy(boundaries=tuple(
+        _VecRouter(scores, t) for t in ts))
+    q, m = _dummy_queries(len(scores))
+    tier_s, score_s = shared.decide(q, m)
+    tier_b, score_b = per_b.decide(q, m)
+    np.testing.assert_array_equal(tier_s, tier_b)
+    np.testing.assert_array_equal(score_s, score_b)

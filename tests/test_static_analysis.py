@@ -88,19 +88,22 @@ def test_pallas_probes_cover_all_family_dirs():
 # --------------------------------------------------------------------- fsm
 def _mini_spec():
     return FsmSpec(
-        states=("queued", "running", "done"),
+        states=("queued", "running", "escalated", "done"),
         initial="queued",
         terminal=("done",),
-        edges=(("queued", "running"), ("running", "done")),
+        edges=(("queued", "running"), ("running", "escalated"),
+               ("escalated", "done"), ("running", "done")),
         assignment_sites={
             ("bad_fsm", "MiniSched.admit"): (("queued", "running"),),
+            ("bad_fsm", "MiniSched.demote"): (("running", "escalated"),),
+            ("bad_fsm", "MiniSched.flee"): (("escalated", "done"),),
             ("bad_fsm", "MiniSched.retire"): (("running", "done"),),
         },
         initial_sites=(("bad_fsm", "Request"),),
         reason_sites=(("bad_fsm", "MiniSched.retire"),),
         finish_reasons=("eos",),
         states_by_name={"QUEUED": "queued", "RUNNING": "running",
-                        "DONE": "done"},
+                        "ESCALATED": "escalated", "DONE": "done"},
     )
 
 
@@ -111,6 +114,20 @@ def test_fsm_fixture_trips_every_rule():
     assert "fsm-unknown-state" in rules        # lose() writes ZOMBIE
     assert "fsm-undeclared-site" in rules      # hijack() writes RUNNING
     assert "fsm-finish-reason" in rules        # retire() assigns "vanished"
+
+
+def test_fsm_undeclared_escalated_writer_trips():
+    """An ESCALATED write from a site the spec never declared is a
+    finding: panic() drives the same (running -> escalated) edge as the
+    declared demote(), but only demote() is in the spec."""
+    found = fsm_check.check({"bad_fsm": FIX / "bad_fsm.py"},
+                            spec=_mini_spec())
+    panicky = [f for f in found if f.rule == "fsm-undeclared-site"
+               and "panic" in f.symbol]
+    assert panicky, [f.format() for f in found]
+    # the declared escalation writers stay clean
+    assert not any("demote" in f.symbol or "flee" in f.symbol
+                   for f in found)
 
 
 def test_fsm_rule_disabled_goes_quiet():
@@ -239,3 +256,19 @@ def test_clean_tree_end_to_end():
     assert not reported, [f.format() for f in reported]
     assert not problems, problems
     assert suppressed, "allowlist should match the two recorded escapes"
+
+
+def test_chaos_smoke_covers_escalation_storm():
+    """The escalation-storm scenario is registered in the chaos smoke's
+    scenario table — the CI chaos job (--smoke) runs everything in it, so
+    membership here means the storm cannot silently drop out of CI."""
+    from repro.serving import faults
+    assert "escalation-storm" in faults.SCENARIOS
+    assert faults.SCENARIOS["escalation-storm"] \
+        is faults.scenario_escalation_storm
+    # every scenario_* function in the module is registered — a new
+    # scenario cannot dodge the smoke by forgetting the table
+    defined = {n for n in vars(faults)
+               if n.startswith("scenario_")}
+    assert defined == {f"scenario_{k.replace('-', '_')}"
+                       for k in faults.SCENARIOS}
